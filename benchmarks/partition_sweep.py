@@ -1,0 +1,56 @@
+"""Partition-point trade-off sweep (the paper's implicit design space,
+named as future work in §IV): for every cut of UrsoNet across the
+DPU(INT8)+VPU(FP16) pair, report latency / energy / accuracy-penalty and
+mark the Pareto frontier — the 'methodology and design guidelines for
+model partitioning and accelerator selection' the paper calls for.
+
+Also sweeps one assigned LM arch (qwen3-14b, serve shape) over TPU v5e
+int8/bf16 operating points, demonstrating the same machinery drives the
+pod-scale deployment."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core.cost_model import (layer_costs_from_convspecs,
+                                   transformer_layer_costs)
+from repro.core.scheduler import pareto_frontier, schedule
+from repro.models.cnn import ursonet_table1_layers
+
+
+def ursonet_sweep():
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    plans = schedule(layers, ["mpsoc_dpu", "myriadx_vpu"],
+                     accuracy_penalty={"mpsoc_dpu": 0.08})
+    return plans
+
+
+def lm_sweep(arch: str = "qwen3-14b", seq: int = 4096):
+    cfg = get_config(arch)
+    layers = transformer_layer_costs(cfg, seq)
+    plans = schedule(layers, ["tpu_v5e_int8", "tpu_v5e_bf16"],
+                     accuracy_penalty={"tpu_v5e_int8": 0.08},
+                     cut_candidates=list(range(4, cfg.num_layers, 4)))
+    return plans
+
+
+def main(csv: bool = True):
+    t0 = time.perf_counter()
+    up = ursonet_sweep()
+    lp = lm_sweep()
+    us = (time.perf_counter() - t0) * 1e6 / max(len(up) + len(lp), 1)
+    if csv:
+        for i, p in enumerate(up):
+            segs = ";".join(f"{s}-{e}@{d}" for s, e, d in p.assignments)
+            print(f"partition_ursonet_{i},{us:.0f},lat_ms={p.latency_s*1e3:.1f}"
+                  f";energy_j={p.energy_j:.3f};acc_pen={p.accuracy_penalty:.3f}"
+                  f";plan={segs}")
+        for i, p in enumerate(lp):
+            segs = ";".join(f"{s}-{e}@{d}" for s, e, d in p.assignments)
+            print(f"partition_qwen3_{i},{us:.0f},lat_ms={p.latency_s*1e3:.2f}"
+                  f";acc_pen={p.accuracy_penalty:.3f};plan={segs}")
+    return up, lp
+
+
+if __name__ == "__main__":
+    main()

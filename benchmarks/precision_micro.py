@@ -1,0 +1,64 @@
+"""Microbenchmark: the precision-dispatched matmul (pdot) under each MPAI
+policy, plus quantization overhead.  Wall-times are CPU (this container);
+they validate relative behaviour of the XLA paths — TPU rates are the
+cost model's job.  Also reports the analytic v5e-int8 speedup the MPAI
+backbone segment gets over bf16 (the DPU-vs-VPU ratio at pod scale)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import PrecisionPolicy
+from repro.core.quantization import pdot, quantize
+
+M, K, N = 512, 2048, 2048
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(csv: bool = True):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    wq = quantize(w, channel_axis=-1)
+
+    fns = {
+        "pdot_bf16": jax.jit(lambda a, b: pdot(a, b, PrecisionPolicy.bf16())),
+        "pdot_fp32": jax.jit(lambda a, b: pdot(a, b, PrecisionPolicy.fp32())),
+        "pdot_int8_xla": jax.jit(
+            lambda a, b: pdot(a, b, PrecisionPolicy.int8())),
+        "fake_quant_qat": jax.jit(
+            lambda a, b: pdot(a, b, PrecisionPolicy.int8_qat())),
+    }
+    rows = []
+    for name, fn in fns.items():
+        us = _time(fn, x, w)
+        rows.append((name, us))
+        if csv:
+            gf = 2 * M * K * N / (us * 1e-6) / 1e9
+            print(f"micro_{name},{us:.0f},cpu_gflops={gf:.1f}")
+    qt = jax.jit(lambda a: quantize(a))
+    us = _time(lambda a: qt(a).values, x)
+    if csv:
+        print(f"micro_quantize_activation,{us:.0f},"
+              f"gbps={M * K * 4 / (us * 1e-6) / 1e9:.1f}")
+        # the roofline story: v5e int8 MXU = 2x bf16 peak; MPAI's backbone
+        # therefore upper-bounds at 2x for compute-bound segments
+        print("micro_v5e_policy_ratio,0,int8_peak/bf16_peak=2.0;"
+              "weights_bytes_ratio=0.5")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+One row per (arch x shape x mesh): the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction.  This is a
+*reader* — the numbers come from compiled dry-runs (launch/dryrun.py)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+HEADER = ("arch,shape,mesh,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_ratio,roofline_frac")
+
+
+def rows(dirpath: str = "experiments/dryrun"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        r = d.get("roofline")
+        if r:
+            r = dict(r)
+            r["tag"] = os.path.basename(path)[:-5]
+            out.append(r)
+    return out
+
+
+def main(csv: bool = True, dirpath: str = "experiments/dryrun"):
+    t0 = time.perf_counter()
+    rs = rows(dirpath)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rs), 1)
+    if not rs:
+        print(f"roofline_table,{us:.0f},no dry-run artifacts in {dirpath} "
+              f"(run python -m repro.launch.dryrun --all first)")
+        return []
+    if csv:
+        for r in rs:
+            print(f"roofline_{r['tag']},{us:.0f},"
+                  f"c/m/x_ms={r['compute_ms']}/{r['memory_ms']}/"
+                  f"{r['collective_ms']};dominant={r['dominant']};"
+                  f"useful={r['useful_ratio']};frac={r['roofline_frac']}")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * fig2_*       — Fig. 2 accelerator-throughput reproduction (cost model)
+  * table1_*     — Table I UrsoNet latency (cost model) + measured
+                   accuracy deltas (fp32 / PTQ / QAT / MPAI)
+  * partition_*  — partition-point Pareto sweep (the paper's §IV
+                   methodology, implemented)
+  * micro_*      — precision-path microbenchmarks
+  * roofline_*   — per-(arch x shape) roofline terms from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer QAT training for Table I accuracy rows")
+    ap.add_argument("--skip-accuracy", action="store_true",
+                    help="cost-model rows only (fast CI mode)")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (fig2_throughput, partition_sweep,
+                            precision_micro, roofline_bench, table1_ursonet)
+
+    fig2_throughput.main()
+    partition_sweep.main()
+    precision_micro.main()
+    if args.skip_accuracy:
+        for r in table1_ursonet.latency_rows():
+            print(f"table1_latency_{r['processor']},0,"
+                  f"model_ms={r['model_ms']:.0f};paper_ms={r['paper_ms']}")
+    else:
+        table1_ursonet.main(steps=600 if args.full else 250)
+    roofline_bench.main()
+
+
+if __name__ == "__main__":
+    main()

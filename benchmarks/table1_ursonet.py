@@ -1,0 +1,87 @@
+"""Table I reproduction: UrsoNet satellite pose estimation across
+processor/precision configurations.
+
+Two halves, matching the paper's columns:
+  * LATENCY — cost-model inference latency of full-size UrsoNet
+    (1280x960x3 input resampled to the 192x256 backbone) per device row,
+    including the MPAI DPU+VPU split (conv backbone on DPU INT8, FC heads
+    on VPU FP16, handoff over the board link).
+  * ACCURACY — *measured* LOCE/ORIE of a reduced UrsoNet trained on the
+    synthetic pose task under the four software conditions (fp32 /
+    int8-PTQ / int8-QAT / MPAI partition-aware).  Absolute values differ
+    from the paper's soyuz_easy numbers (synthetic data); the reproduction
+    target is the DELTA structure: PTQ hurts, MPAI ~= fp32 baseline.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.accelerators import PROFILES
+from repro.core.cost_model import layer_costs_from_convspecs, segment_cost
+from repro.core.scheduler import mpai_reference_plan
+from repro.models.cnn import UrsoNetConfig, ursonet_table1_layers
+from repro.pose import run_condition
+
+PAPER_ROWS = {  # processor: (inference_ms, LOCE m, ORIE deg) from Table I
+    "cortex_a53": (9890, 0.68, 7.28),
+    "cortex_a53_fp16": (4210, 0.87, 8.09),
+    "myriadx_vpu": (246, 0.69, 8.71),
+    "edge_tpu": (149, 0.66, 7.60),
+    "mpsoc_dpu": (53, 0.96, 9.29),
+    "dpu+vpu": (79, 0.68, 7.32),
+}
+
+
+def latency_rows():
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    rows = []
+    from benchmarks.fig2_throughput import _edge_tpu_effective
+    for dev in ("cortex_a53", "cortex_a53_fp16", "myriadx_vpu", "edge_tpu",
+                "mpsoc_dpu"):
+        prof = (_edge_tpu_effective(layers) if dev == "edge_tpu"
+                else PROFILES[dev])
+        c = segment_cost(layers, prof)
+        rows.append({"processor": dev, "model_ms": c.latency_s * 1e3,
+                     "paper_ms": PAPER_ROWS[dev][0]})
+    mp = mpai_reference_plan(layers)
+    rows.append({"processor": "dpu+vpu", "model_ms": mp.latency_s * 1e3,
+                 "paper_ms": PAPER_ROWS["dpu+vpu"][0]})
+    return rows
+
+
+def accuracy_rows(steps: int = 500, batch: int = 32):
+    cfg = UrsoNetConfig(name="bench", image_hw=(96, 128),
+                        widths=(16, 32, 64), blocks_per_stage=1, fc_dim=128)
+    return [run_condition(c, cfg, steps=steps, batch=batch)
+            for c in ("fp32", "int8_ptq", "int8_qat", "mpai")]
+
+
+def main(steps: int = 500, csv: bool = True):
+    t0 = time.perf_counter()
+    lrows = latency_rows()
+    lat_us = (time.perf_counter() - t0) * 1e6 / len(lrows)
+    if csv:
+        for r in lrows:
+            print(f"table1_latency_{r['processor']},{lat_us:.1f},"
+                  f"model_ms={r['model_ms']:.0f};paper_ms={r['paper_ms']}")
+    t0 = time.perf_counter()
+    arows = accuracy_rows(steps=steps)
+    acc_us = (time.perf_counter() - t0) * 1e6 / len(arows)
+    if csv:
+        for r in arows:
+            print(f"table1_accuracy_{r['condition']},{acc_us:.0f},"
+                  f"loce={r['loce']:.3f};orie={r['orie']:.2f}")
+        by = {r["condition"]: r for r in arows}
+        ok_ptq = by["int8_ptq"]["orie"] > by["fp32"]["orie"]
+        ok_mpai = (by["mpai"]["orie"] - by["fp32"]["orie"]
+                   < by["int8_ptq"]["orie"] - by["fp32"]["orie"])
+        print(f"table1_delta_structure,{acc_us:.0f},"
+              f"ptq_hurts={ok_ptq};mpai_recovers={ok_mpai}")
+    return lrows, arows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=500)
+    main(steps=ap.parse_args().steps)

@@ -1,0 +1,78 @@
+"""Quickstart: the MPAI lifecycle on a small LM, end to end on CPU.
+
+  1. pick an architecture config (+ reduced size),
+  2. let the MPAI scheduler choose a partition (int8 backbone / bf16 head),
+  3. partition-aware training (QAT) with the distributed Trainer,
+  4. deploy: convert the plan to real-int8 serving and compare perplexity
+     against the bf16 baseline and a PTQ (no-QAT) deployment.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import MeshConfig, ShapeConfig, TrainConfig
+from repro.core import qat
+from repro.core.cost_model import transformer_layer_costs
+from repro.core.partition import PartitionPlan
+from repro.core.scheduler import best_under_accuracy, schedule
+from repro.data.pipeline import lm_batch
+from repro.models import transformer as T
+from repro.runtime.train_loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    # 1. reduced config of the chosen architecture family
+    cfg = get_config(args.arch, smoke=True).with_(
+        num_layers=4, d_model=128, d_ff=256, remat=False)
+    shape = ShapeConfig("quickstart", 64, 8, "train")
+    print(f"arch={cfg.name}  params~{cfg.param_count()/1e6:.1f}M")
+
+    # 2. MPAI scheduler: pick the partition from the cost model
+    layers = transformer_layer_costs(cfg, shape.seq_len)
+    plans = schedule(layers, ["tpu_v5e_int8", "tpu_v5e_bf16"],
+                     accuracy_penalty={"tpu_v5e_int8": 0.05})
+    chosen = best_under_accuracy(plans, max_penalty=0.045)
+    print("scheduler chose:", chosen.assignments,
+          f"-> {chosen.latency_s*1e3:.2f} ms model latency")
+    plan = chosen.to_partition_plan(qat=True)
+
+    # 3. partition-aware training
+    mesh_cfg = MeshConfig((1, 1), ("data", "model"))
+    tc = TrainConfig(learning_rate=3e-3, warmup_steps=20,
+                     total_steps=args.steps)
+    trainer = Trainer(cfg, shape, mesh_cfg, tc, plan=qat.train_plan(plan))
+    state = trainer.init_state()
+    state, hist = trainer.run(state, lambda s: lm_batch(cfg, shape, s),
+                              args.steps, log_every=max(args.steps // 8, 1))
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.3f}")
+
+    # 4. deployment comparison on held-out batches
+    def eval_loss(plan_):
+        tot = 0.0
+        for s in range(3):
+            b = lm_batch(cfg, shape, 10_000 + s)
+            tot += float(T.loss_fn(state.params, cfg, b["tokens"],
+                                   b["labels"], plan_))
+        return tot / 3
+
+    bf16 = eval_loss(None)
+    mpai = eval_loss(qat.serve_plan(plan))
+    ptq = eval_loss(PartitionPlan.int8_all(cfg.num_layers))
+    print(f"\neval loss  bf16={bf16:.4f}  MPAI-int8(QAT)={mpai:.4f}  "
+          f"PTQ-int8={ptq:.4f}")
+    print("MPAI deployment keeps the backbone int8 (2x MXU rate, half the "
+          "weight bytes) at near-baseline loss; PTQ shows the gap QAT closes.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Batched serving with an MPAI-partitioned model: int8 backbone + bf16
+head, request queue with bounded batching windows, prefill + greedy decode
+against a KV cache.
+
+    PYTHONPATH=src python examples/serve_partitioned.py
+"""
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.core import qat
+from repro.core.partition import PartitionPlan
+from repro.models import transformer as T
+from repro.runtime.serve import BatchingServer, Request
+
+
+def main():
+    cfg = get_config("qwen3-14b", smoke=True).with_(num_layers=4,
+                                                    remat=False)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+
+    plan = qat.serve_plan(PartitionPlan.mpai(cfg.num_layers, split=3))
+    print(f"serving {cfg.name}: segments="
+          f"{[(s.name, s.policy.precision.value, s.policy.mode) for s in plan.segments]}")
+
+    srv = BatchingServer(params, cfg, plan=plan, max_batch=4,
+                         prompt_len=16, max_len=32)
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              rng.integers(3, 16)).astype(np.int32)
+        srv.submit(Request(i, prompt, max_new=8))
+
+    window = 0
+    while srv.queue:
+        done = srv.flush()
+        window += 1
+        print(f"window {window}: served {len(done)} requests "
+              f"({len(srv.queue)} queued)")
+    for rid in sorted(srv.done):
+        r = srv.done[rid]
+        print(f"  req {rid:2d}: prompt[{r.prompt.shape[0]:2d} tok] -> "
+              f"{r.output.tolist()}")
+    print("bounded batching window = straggler mitigation at serve time: "
+          "no request waits more than one flush.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end training driver: a ~100M-parameter qwen3-family model for a
+few hundred steps, with MPAI QAT, checkpointing, and fault-tolerant
+restart — the full production loop at local scale.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+    # CPU note: ~100M params x 65k tokens/step is slow on one core; use
+    # --dmodel 256 --seq 128 for a quick pass.
+"""
+import argparse
+import tempfile
+
+from repro.configs import get_config
+from repro.configs.base import MeshConfig, ShapeConfig, TrainConfig
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import qat
+from repro.core.partition import PartitionPlan
+from repro.data.pipeline import lm_batch
+from repro.runtime.fault import FaultInjector, FaultTolerantRunner
+from repro.runtime.train_loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dmodel", type=int, default=640)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--vocab", type=int, default=50304)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--inject-fault", action="store_true",
+                    help="kill step 25 and prove checkpoint/restart works")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen3-14b", smoke=True).with_(
+        name="qwen3-100m", num_layers=args.layers, d_model=args.dmodel,
+        num_heads=args.dmodel // 64, num_kv_heads=args.dmodel // 128,
+        head_dim=64, d_ff=args.dmodel * 3, vocab_size=args.vocab, remat=False)
+    print(f"model: {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model})")
+
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    tc = TrainConfig(learning_rate=6e-4, warmup_steps=30,
+                     total_steps=args.steps, checkpoint_every=25)
+    plan = qat.train_plan(PartitionPlan.mpai(cfg.num_layers))
+    trainer = Trainer(cfg, shape, MeshConfig((1, 1), ("data", "model")), tc,
+                      plan=plan)
+    state = trainer.init_state()
+
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="ckpt_100m_"), keep=3)
+    runner = FaultTolerantRunner(trainer, ckpt, max_restarts=3)
+    on_step = (FaultInjector(fail_at_steps={25}) if args.inject_fault
+               else None)
+
+    def log_data(s):
+        return lm_batch(cfg, shape, s)
+
+    state, hist = runner.run(state, log_data, args.steps, on_step=on_step,
+                             log_every=max(args.steps // 15, 1))
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.3f}  "
+              f"gnorm {h['grad_norm']:.2f}")
+    if args.inject_fault:
+        print(f"restarts: {runner.restarts} (fault injected at step 25, "
+              f"recovered from checkpoint)")
+    print(f"done: {int(state.step)} steps, final loss {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

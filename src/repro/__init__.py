@@ -1,0 +1,15 @@
+"""repro — MPAI (heterogeneous mixed-precision co-processing) as a
+production JAX/TPU framework.  See README.md / DESIGN.md.
+
+Public API surface:
+
+    from repro import configs                  # --arch registry
+    from repro.core.partition import PartitionPlan
+    from repro.core.scheduler import schedule
+    from repro.core import qat                 # train/serve plan lifecycle
+    from repro.models import transformer       # forward / decode / loss
+    from repro.runtime.train_loop import Trainer
+    from repro.runtime.serve import BatchingServer
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,128 @@
+"""Sharded checkpoint manager: async save, atomic commit, keep-last-K,
+elastic restore.
+
+Layout (one directory per step):
+    ckpt_dir/step_000123.tmp/ -> renamed to step_000123/ on commit
+        arrays.npz        flat {path: np.ndarray} of params + opt state
+        manifest.json     step, tree structure hash, param count
+
+Saves run on a background thread (training never blocks on storage);
+commit is the atomic directory rename, so a crash mid-save leaves only a
+.tmp that restore ignores.  Restore rebuilds the pytree and device_puts
+with *whatever shardings the new mesh provides* — the elastic-restart
+path (mesh shape may differ from the saving run's).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        """Snapshot to host memory synchronously, write asynchronously."""
+        self.wait()                                   # one in flight at a time
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)   # D2H now
+
+        def _write():
+            try:
+                tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+                final = os.path.join(self.dir, f"step_{step:08d}")
+                os.makedirs(tmp, exist_ok=True)
+                flat = _flatten(host_tree)
+                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                manifest = {"step": step, "num_arrays": len(flat),
+                            "time": time.time()}
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)                 # atomic commit
+                self._gc()
+            except BaseException as e:                # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, int]:
+        """Rebuild ``tree_like``'s structure from disk.  ``shardings``
+        (optional pytree of NamedSharding) places leaves on the current
+        mesh — the elastic-restart entry point."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        leaves = []
+        for p, like in paths:
+            key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                           for e in p)
+            arr = flat[key]
+            assert arr.shape == tuple(like.shape), (key, arr.shape, like.shape)
+            leaves.append(arr.astype(like.dtype))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, step
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,130 @@
+"""Symmetric int8 quantization — the numerical core of MPAI's DPU/TPU path.
+
+Implements:
+  * per-channel / per-tensor symmetric absmax quantization (PTQ),
+  * fake-quantization with straight-through-estimator gradients (QAT —
+    the paper's "partition-aware model training"),
+  * ``pdot`` — the precision-dispatched matmul every model layer calls.
+
+``pdot`` is where the MPAI partition plan meets the compute graph: a
+segment's :class:`~repro.core.precision.PrecisionPolicy` decides whether a
+matmul runs raw (bf16/fp32), fake-quantized (training the int8 segment), or
+truly quantized (int8 MXU kernel / XLA int8 dot on the serving path).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import Precision, PrecisionPolicy, DEFAULT_POLICY
+
+INT8_QMAX = 127.0
+
+
+class QTensor(NamedTuple):
+    """An int8 tensor with its dequantization scale.
+
+    ``scale`` broadcasts against ``values``: per-tensor -> shape (1,)*ndim,
+    per-channel -> 1 everywhere except the channel axis.
+    """
+    values: jnp.ndarray                # int8
+    scale: jnp.ndarray                 # f32, values ≈ float / scale
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        return (self.values.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def _absmax_scale(x: jnp.ndarray, axis, keepdims=True) -> jnp.ndarray:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=keepdims)
+    return jnp.maximum(amax, 1e-8) / INT8_QMAX
+
+
+def quantize(x: jnp.ndarray, channel_axis: Optional[int] = None,
+             batch_axes: tuple = ()) -> QTensor:
+    """Symmetric absmax quantization to int8.
+
+    ``channel_axis``: axis that keeps its own scale (None -> per-tensor).
+    ``batch_axes``: additional axes that keep independent scales (e.g. the
+    stacked-layer dim of scan weights).
+    """
+    if channel_axis is None:
+        axis = tuple(i for i in range(x.ndim) if i not in
+                     tuple(a % x.ndim for a in batch_axes))
+        axis = axis or tuple(range(x.ndim))
+    else:
+        channel_axis = channel_axis % x.ndim
+        keep = {channel_axis, *(a % x.ndim for a in batch_axes)}
+        axis = tuple(i for i in range(x.ndim) if i not in keep)
+    scale = _absmax_scale(x, axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -INT8_QMAX, INT8_QMAX)
+    return QTensor(q.astype(jnp.int8), scale)
+
+
+def fake_quant(x: jnp.ndarray, channel_axis: Optional[int] = None) -> jnp.ndarray:
+    """Quantize-dequantize with straight-through-estimator gradients.
+
+    Forward: round-trip through the int8 grid.  Backward: identity — the
+    STE that makes partition-aware (QAT) training possible.
+    """
+    qt = quantize(x, channel_axis)
+    dq = qt.dequantize(jnp.float32).astype(x.dtype)
+    return x + jax.lax.stop_gradient(dq - x)
+
+
+# ---------------------------------------------------------------------------
+# pdot — the precision-dispatched matmul
+# ---------------------------------------------------------------------------
+def _int8_dot(x: jnp.ndarray, w: QTensor, use_pallas: bool) -> jnp.ndarray:
+    """x: [..., K] float;  w: QTensor [K, N] (per-out-channel scales)."""
+    xq = quantize(x)                                        # per-tensor dynamic
+    lead = xq.values.shape[:-1]
+    xm = xq.values.reshape(-1, xq.values.shape[-1])
+    if use_pallas:
+        from repro.kernels import ops as kops
+        acc = kops.int8_matmul(xm, w.values)                # int32 [M, N]
+    else:
+        acc = jax.lax.dot_general(
+            xm, w.values, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * xq.scale * w.scale.reshape(1, -1)
+    return out.reshape(*lead, -1).astype(jnp.bfloat16)
+
+
+def pdot(x: jnp.ndarray, w, policy: PrecisionPolicy = DEFAULT_POLICY) -> jnp.ndarray:
+    """Precision-dispatched ``x @ w``.
+
+    ``w`` is either a float array [K, N] (raw / fake modes) or a
+    :class:`QTensor` (quant mode, weights pre-quantized offline).
+    """
+    if policy.mode == "quant":
+        if not isinstance(w, QTensor):
+            w = quantize(w, channel_axis=-1 if policy.per_channel else None)
+        return _int8_dot(x, w, policy.use_pallas)
+    dt = policy.precision.compute_dtype
+    if isinstance(w, QTensor):       # pre-quantized checkpoint, raw segment
+        w = w.dequantize(dt)         # (head segments of a served MPAI model)
+    if policy.mode == "fake":
+        w = fake_quant(w, channel_axis=-1 if policy.per_channel else None)
+        x = fake_quant(x)
+    return jnp.matmul(x.astype(dt), w.astype(dt))
+
+
+def quantize_params(params, channel_axis: int = -1, stacked: bool = False):
+    """Offline weight quantization of a param pytree: every float matrix
+    with ndim >= 2 becomes a QTensor (per-out-channel); vectors (norms,
+    biases) stay float.  ``stacked``: leading dim is a scan-layer stack
+    that keeps independent scales.  Used when deploying to the int8 path."""
+    def _q(p):
+        if isinstance(p, jnp.ndarray) and p.ndim >= 2 and jnp.issubdtype(p.dtype, jnp.floating):
+            batch = (0,) if (stacked and p.ndim >= 3) else ()
+            return quantize(p, channel_axis=channel_axis, batch_axes=batch)
+        return p
+    return jax.tree_util.tree_map(_q, params)
+
+
+def quantization_error(x: jnp.ndarray, channel_axis: Optional[int] = None) -> jnp.ndarray:
+    """Max abs round-trip error — bounded by scale/2 (property-tested)."""
+    qt = quantize(x, channel_axis)
+    return jnp.max(jnp.abs(qt.dequantize(jnp.float32) - x.astype(jnp.float32)))

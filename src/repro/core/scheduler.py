@@ -1,0 +1,139 @@
+"""MPAI scheduler: partition-point and accelerator-assignment search.
+
+The paper demonstrates one hand-chosen partition (conv backbone on the
+DPU, FC head on the VPU) and names the general methodology future work.
+This module implements that methodology: enumerate candidate partitions of
+a layer-cost table across an accelerator pool, price each with the
+roofline cost model, attach an accuracy penalty (measured, or the
+precision prior), and return the speed-accuracy-energy Pareto frontier.
+
+Invariants (property-tested):
+  * every returned plan covers all layers contiguously;
+  * no returned plan is Pareto-dominated by another returned plan;
+  * the paper's configuration (INT8 backbone + FP16 head) lies on the
+    frontier for UrsoNet-like workloads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.accelerators import (PRECISION_ERROR_PRIOR, AcceleratorProfile,
+                                     get_profile)
+from repro.core.cost_model import LayerCost, SegmentCost, segment_cost
+from repro.core.partition import PartitionPlan, Segment
+from repro.core.precision import Precision, PrecisionPolicy
+
+
+@dataclass(frozen=True)
+class ScheduledPlan:
+    assignments: Tuple[Tuple[int, int, str], ...]   # (start, end, profile)
+    latency_s: float
+    energy_j: float
+    accuracy_penalty: float
+    segment_costs: Tuple[SegmentCost, ...] = field(default=(), compare=False)
+
+    def dominates(self, other: "ScheduledPlan") -> bool:
+        le = (self.latency_s <= other.latency_s
+              and self.energy_j <= other.energy_j
+              and self.accuracy_penalty <= other.accuracy_penalty)
+        lt = (self.latency_s < other.latency_s
+              or self.energy_j < other.energy_j
+              or self.accuracy_penalty < other.accuracy_penalty)
+        return le and lt
+
+    def to_partition_plan(self, qat: bool = False) -> PartitionPlan:
+        segs = []
+        for i, (s, e, prof) in enumerate(self.assignments):
+            prec = get_profile(prof).precision
+            if prec is Precision.INT8:
+                pol = (PrecisionPolicy.int8_qat() if qat
+                       else PrecisionPolicy.int8())
+            elif prec is Precision.FP32:
+                pol = PrecisionPolicy.fp32()
+            else:
+                pol = PrecisionPolicy.bf16()
+            segs.append(Segment(f"seg{i}_{prof}", s, e, pol, prof))
+        return PartitionPlan(tuple(segs))
+
+
+def _plan_cost(layers: Sequence[LayerCost], cuts: Sequence[int],
+               profiles: Sequence[str], batch: int,
+               accuracy_penalty: Dict[str, float]) -> ScheduledPlan:
+    bounds = [0, *cuts, len(layers)]
+    seg_costs, assignments = [], []
+    lat = energy = acc = 0.0
+    for i, prof_name in enumerate(profiles):
+        prof = get_profile(prof_name)
+        lo, hi = bounds[i], bounds[i + 1]
+        entry = layers[lo].act_in_elems if i > 0 else 0.0   # handoff at cut
+        c = segment_cost(layers[lo:hi], prof, batch, entry_act_elems=entry)
+        seg_costs.append(c)
+        assignments.append((lo, hi, prof_name))
+        lat += c.latency_s
+        energy += c.energy_j
+        share = sum(l.macs for l in layers[lo:hi]) / max(
+            sum(l.macs for l in layers), 1.0)
+        acc += accuracy_penalty.get(
+            prof_name, PRECISION_ERROR_PRIOR[prof.precision]) * share
+    return ScheduledPlan(tuple(assignments), lat, energy, acc, tuple(seg_costs))
+
+
+def pareto_frontier(plans: Sequence[ScheduledPlan]) -> List[ScheduledPlan]:
+    out = []
+    for p in plans:
+        if not any(q.dominates(p) for q in plans if q is not p):
+            out.append(p)
+    # dedupe identical objective triples
+    seen, uniq = set(), []
+    for p in sorted(out, key=lambda p: (p.latency_s, p.energy_j,
+                                        p.accuracy_penalty)):
+        key = (round(p.latency_s, 12), round(p.energy_j, 12),
+               round(p.accuracy_penalty, 12))
+        if key not in seen:
+            seen.add(key)
+            uniq.append(p)
+    return uniq
+
+
+def schedule(layers: Sequence[LayerCost],
+             profile_names: Sequence[str],
+             batch: int = 1,
+             max_segments: int = 2,
+             accuracy_penalty: Optional[Dict[str, float]] = None,
+             cut_candidates: Optional[Sequence[int]] = None
+             ) -> List[ScheduledPlan]:
+    """Enumerate 1- and 2-segment plans (the paper's design space) and
+    return the Pareto frontier.  ``accuracy_penalty`` maps profile name ->
+    measured penalty (overrides the precision prior — e.g. a QAT-trained
+    int8 backbone measures near zero)."""
+    accuracy_penalty = accuracy_penalty or {}
+    n = len(layers)
+    cuts = list(cut_candidates) if cut_candidates else list(range(1, n))
+    plans: List[ScheduledPlan] = []
+    for p0 in profile_names:
+        plans.append(_plan_cost(layers, [], [p0], batch, accuracy_penalty))
+    if max_segments >= 2:
+        for cut in cuts:
+            for p0 in profile_names:
+                for p1 in profile_names:
+                    if p0 == p1:
+                        continue
+                    plans.append(_plan_cost(layers, [cut], [p0, p1], batch,
+                                            accuracy_penalty))
+    return pareto_frontier(plans)
+
+
+def best_under_accuracy(plans: Sequence[ScheduledPlan],
+                        max_penalty: float) -> Optional[ScheduledPlan]:
+    ok = [p for p in plans if p.accuracy_penalty <= max_penalty]
+    return min(ok, key=lambda p: p.latency_s) if ok else None
+
+
+def mpai_reference_plan(layers: Sequence[LayerCost], batch: int = 1,
+                        head_layers: int = 1) -> ScheduledPlan:
+    """The paper's deployed configuration: everything but the head on the
+    INT8 DPU, the head on the FP16 VPU."""
+    cut = len(layers) - head_layers
+    return _plan_cost(layers, [cut], ["mpsoc_dpu", "myriadx_vpu"], batch,
+                      {"mpsoc_dpu": 0.05})   # QAT'd backbone: measured ~small

@@ -1,0 +1,131 @@
+"""Deterministic synthetic data pipelines.
+
+Determinism is the fault-tolerance contract: batch ``step`` is a pure
+function of (seed, step, host), so an elastic restart replays the exact
+batch sequence with no data-loader state to checkpoint.
+
+Two generators:
+  * LM token stream — a simple evolving-ngram language so that tiny
+    models actually learn (loss decreases), not just uniform noise;
+  * satellite pose task — poses + rendered keypoint-blob images with the
+    UrsoNet geometry (the paper's Table I workload; DESIGN.md §9 for why
+    synthetic).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# LM tokens
+# ---------------------------------------------------------------------------
+def lm_batch(cfg: ModelConfig, shape: ShapeConfig, step: int,
+             seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Markov-ish token stream: next token = (a*prev + b) % V with noise."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    b, s, v = shape.global_batch, shape.seq_len, cfg.vocab_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    first = jax.random.randint(k1, (b, 1), 0, v)
+    noise = jax.random.bernoulli(k2, 0.1, (b, s - 1))
+    rand = jax.random.randint(k3, (b, s - 1), 0, v)
+
+    def step_fn(prev, inp):
+        nz, rnd = inp
+        nxt = jnp.where(nz, rnd, (prev * 31 + 17) % v)
+        return nxt, nxt
+    _, rest = jax.lax.scan(step_fn, first[:, 0],
+                           (noise.T, rand.T))
+    tokens = jnp.concatenate([first, rest.T], axis=1)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def lm_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                   train: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    tok = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32)
+    return {"tokens": tok, "labels": tok} if train else {"tokens": tok}
+
+
+# ---------------------------------------------------------------------------
+# Satellite pose (UrsoNet synthetic)
+# ---------------------------------------------------------------------------
+# rigid-body keypoints of a soyuz-ish shape (body frame, meters)
+_KEYPOINTS = np.array([
+    [0.0, 0.0, 0.0], [1.5, 0.0, 0.0], [-1.5, 0.0, 0.0],
+    [0.0, 4.0, 0.0], [0.0, -4.0, 0.0], [0.0, 0.0, 1.2],
+    [0.8, 2.0, 0.4], [-0.8, -2.0, -0.4],
+], np.float32)
+_FOCAL = 600.0
+# distinct color signature per keypoint so orientation is recoverable
+_KP_COLORS = np.array([
+    [1.0, 0.1, 0.1], [0.1, 1.0, 0.1], [0.1, 0.1, 1.0],
+    [1.0, 1.0, 0.1], [0.1, 1.0, 1.0], [1.0, 0.1, 1.0],
+    [0.9, 0.5, 0.1], [0.4, 0.2, 0.9],
+], np.float32)
+
+
+def _quat_rotate(q: jnp.ndarray, pts: jnp.ndarray) -> jnp.ndarray:
+    w, x, y, z = q[..., 0:1], q[..., 1:2], q[..., 2:3], q[..., 3:4]
+    r = jnp.stack([
+        1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y),
+        2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x),
+        2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y),
+    ], axis=-1).reshape(*q.shape[:-1], 3, 3)
+    return jnp.einsum("...ij,kj->...ki", r, pts)
+
+
+def pose_batch(batch: int, step: int, seed: int = 0,
+               image_hw: Tuple[int, int] = (96, 128)
+               ) -> Dict[str, jnp.ndarray]:
+    """Random poses -> blob-rendered images.  loc in meters (depth 8-24 m),
+    orientation unit quaternion — same regime as soyuz_easy."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed + 7919), step)
+    kq, kt = jax.random.split(key)
+    q = jax.random.normal(kq, (batch, 4))
+    q = q / jnp.linalg.norm(q, axis=-1, keepdims=True)
+    q = q * jnp.sign(q[:, :1] + 1e-9)                  # canonical hemisphere
+    loc = jnp.stack([
+        jax.random.uniform(kt, (batch,), minval=-3.0, maxval=3.0),
+        jax.random.uniform(jax.random.fold_in(kt, 1), (batch,), minval=-2.0,
+                           maxval=2.0),
+        jax.random.uniform(jax.random.fold_in(kt, 2), (batch,), minval=8.0,
+                           maxval=24.0),
+    ], axis=-1)
+
+    h, w = image_hw
+    pts = _quat_rotate(q, jnp.asarray(_KEYPOINTS)) + loc[:, None, :]
+    scale = min(h, w) / 960.0
+    u = pts[..., 0] / pts[..., 2] * _FOCAL * scale + w / 2
+    v = pts[..., 1] / pts[..., 2] * _FOCAL * scale + h / 2
+    yy = jnp.arange(h, dtype=jnp.float32)[:, None, None]
+    xx = jnp.arange(w, dtype=jnp.float32)[None, :, None]
+    sig = 2.0 + 20.0 * scale * 8.0 / pts[..., 2]       # nearer -> bigger blob
+    blob = jnp.exp(-((yy - v[:, None, None, :]) ** 2
+                     + (xx - u[:, None, None, :]) ** 2)
+                   / (2 * sig[:, None, None, :] ** 2))
+    chan = jnp.einsum("bhwk,kc->bhwc", blob, jnp.asarray(_KP_COLORS))
+    images = jnp.clip(chan, 0.0, 1.0).astype(jnp.float32)
+    return {"images": images, "loc": loc, "quat": q}
+
+
+class HostShardedStream:
+    """Per-host view of the global batch (1000-node data ingestion shape):
+    host h of H draws rows [h*B/H, (h+1)*B/H) of the deterministic global
+    batch — no coordination, no state."""
+
+    def __init__(self, make_batch, global_batch: int, host_id: int,
+                 num_hosts: int):
+        assert global_batch % num_hosts == 0
+        self.make_batch = make_batch
+        self.lo = host_id * (global_batch // num_hosts)
+        self.hi = (host_id + 1) * (global_batch // num_hosts)
+
+    def __call__(self, step: int):
+        full = self.make_batch(step)
+        return jax.tree_util.tree_map(lambda a: a[self.lo:self.hi], full)

@@ -1,0 +1,122 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles shape alignment (padding to block multiples), GQA kv expansion,
+and backend selection: on TPU the compiled kernels run natively; on CPU
+(this container) ``interpret=True`` executes the kernel bodies in Python
+for correctness validation.  ``REPRO_FORCE_INTERPRET=0`` disables the
+override on real hardware.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.int8_matmul import (DEFAULT_BK, DEFAULT_BM, DEFAULT_BN,
+                                       int8_matmul_pallas)
+from repro.kernels.quant import rowwise_quant_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+from repro.kernels.wkv import wkv_pallas
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        rem = (-dim) % mult
+        pads.append((0, rem))
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def int8_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+                bn: int = DEFAULT_BN) -> jnp.ndarray:
+    """x: [M, K] int8, w: [K, N] int8 -> [M, N] int32 (padded + unpadded)."""
+    m, k = x.shape
+    _, n = w.shape
+    xp = _pad_to(x, (bm, bk))
+    wp = _pad_to(w, (bk, bn))
+    out = int8_matmul_pallas(xp, wp, bm=bm, bk=bk, bn=bn,
+                             interpret=_interpret())
+    return out[:m, :n]
+
+
+def rowwise_quant(x: jnp.ndarray, bm: int = 256):
+    """x: [M, K] float -> (q int8 [M, K], scale f32 [M, 1])."""
+    m, k = x.shape
+    bm = min(bm, max(8, m))
+    xp = _pad_to(x, (bm, 1))
+    q, s = rowwise_quant_pallas(xp, bm=bm, interpret=_interpret())
+    return q[:m], s[:m]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    bq: int = 256, bk: int = 256) -> jnp.ndarray:
+    """Causal attention.  q: [B, S, H, D]; k, v: [B, S, KV, D] (GQA ok)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    bq = min(bq, s)
+    bk_ = min(bk, s)
+    if s % bq or s % bk_:
+        raise ValueError(f"seq {s} must divide block sizes ({bq},{bk_})")
+    out = flash_attention_pallas(fold(q), fold(k), fold(v), bq=bq, bk=bk_,
+                                 interpret=_interpret())
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def selective_scan(x, dt, b, c, a, d, bd: int = 512, q: int = 256):
+    """Fused Mamba selective scan.  x, dt: [B,S,D]; b, c: [B,S,N];
+    a: [D,N]; d: [D] -> y [B,S,D] (pads D and S to block multiples)."""
+    bsz, s, dim = x.shape
+    bd = min(bd, dim)
+    q = min(q, s)
+    pd = (-dim) % bd
+    ps = (-s) % q
+    if pd or ps:
+        padx = lambda t_: jnp.pad(t_, ((0, 0), (0, ps), (0, pd)))
+        padn = lambda t_: jnp.pad(t_, ((0, 0), (0, ps), (0, 0)))
+        x, dt = padx(x), padx(dt)
+        b, c = padn(b), padn(c)
+        a = jnp.pad(a, ((0, pd), (0, 0)))
+        d = jnp.pad(d, (0, pd))
+    out = selective_scan_pallas(x, dt, b, c, a, d, bd=bd, q=q,
+                                interpret=_interpret())
+    return out[:, :s, :dim]
+
+
+def wkv(r, k, v, w, u, q: int = 128):
+    """Fused RWKV-6 wkv.  r,k,v,w: [B,S,H,N]; u: [H,N] -> y [B,S,H,N]."""
+    bsz, s, h, n = r.shape
+    q = min(q, s)
+    ps = (-s) % q
+    if ps:
+        padz = lambda t_: jnp.pad(t_, ((0, 0), (0, ps), (0, 0), (0, 0)))
+        r, k, v = padz(r), padz(k), padz(v)
+        w = jnp.pad(w, ((0, 0), (0, ps), (0, 0), (0, 0)),
+                    constant_values=1.0)           # identity decay on pad
+    out = wkv_pallas(r, k, v, w, u, q=q, interpret=_interpret())
+    return out[:, :s]
+
+
+# re-export oracles for tests/benchmarks
+int8_matmul_ref = ref.int8_matmul_ref
+rowwise_quant_ref = ref.rowwise_quant_ref
+flash_attention_ref = ref.flash_attention_ref
+selective_scan_ref = ref.selective_scan_ref
+wkv_ref = ref.wkv_ref

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def int8_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [M, K] int8, w: [K, N] int8 -> [M, N] int32."""
+    return jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+
+
+def rowwise_quant_ref(x: jnp.ndarray):
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / QMAX
+    q = jnp.clip(jnp.round(xf / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray,
+                        v: jnp.ndarray) -> jnp.ndarray:
+    """Causal softmax attention.  q, k, v: [BH, S, D]."""
+    s = q.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(x, dt, b, c, a, d):
+    """Naive per-token recurrence.  x, dt: [B,S,D]; b, c: [B,S,N];
+    a: [D,N]; d: [D] -> y [B,S,D]."""
+    bsz, s, dim = x.shape
+    n = b.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a_bar = jnp.exp(dt_t[:, :, None] * a)            # [B,D,N]
+        h = a_bar * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + d * x_t
+        return h, y
+    h0 = jnp.zeros((bsz, dim, n), jnp.float32)
+    xs = (x.astype(jnp.float32).swapaxes(0, 1),
+          dt.astype(jnp.float32).swapaxes(0, 1),
+          b.astype(jnp.float32).swapaxes(0, 1),
+          c.astype(jnp.float32).swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def wkv_ref(r, k, v, w, u):
+    """Naive RWKV-6 recurrence.  r,k,v,w: [B,S,H,N]; u: [H,N]."""
+    bsz, s, h, n = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp                        # [B,H,N]
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [B,H,N,N]
+        y = jnp.einsum("bhn,bhnm->bhm", r_t,
+                       state + u[None, :, :, None] * kv)
+        return w_t[..., None] * state + kv, y
+    xs = tuple(t_.astype(jnp.float32).swapaxes(0, 1) for t_ in (r, k, v, w))
+    s0 = jnp.zeros((bsz, h, n, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype)

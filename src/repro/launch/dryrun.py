@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective statistics.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first backend init, and only the dry-run is allowed to
+fake 512 host devices (smoke tests and benchmarks see the real 1).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--plan mpai]
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shard
+from repro.configs import SHAPES, cells, get_config
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core.partition import PartitionPlan
+from repro.core import qat
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh, production_mesh_config
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.roofline import RooflineReport, model_flops, parse_collectives
+from repro.runtime.train_loop import TrainState, make_step_fn
+
+
+def _make_plan(cfg: ModelConfig, plan_name: str, kind: str):
+    if plan_name == "bf16":
+        return None
+    if plan_name == "mpai":
+        base = PartitionPlan.mpai(cfg.num_layers,
+                                  split=max(1, cfg.num_layers
+                                            - T.pattern_period(cfg)))
+        return qat.train_plan(base) if kind == "train" else qat.serve_plan(base)
+    raise ValueError(plan_name)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, mesh_cfg,
+               plan_name: str = "bf16", tc: TrainConfig = None):
+    tp = mesh_cfg.tp
+    plan = _make_plan(cfg, plan_name, shape.kind)
+    pspecs_tree = S.param_structs(cfg, tp)
+    param_sp = shard.param_specs(cfg, pspecs_tree, mesh_cfg)
+    param_sh = shard.make_shardings(mesh, param_sp)
+    data_sp = shard.data_specs(cfg, shape, mesh_cfg)
+    data_sh = shard.make_shardings(mesh, data_sp)
+
+    if shape.kind == "train":
+        tc = tc or TrainConfig()
+        step = make_step_fn(cfg, tc, plan, tp)
+        opt_dt = jnp.dtype(tc.opt_dtype)
+        opt_tree = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, opt_dt if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), pspecs_tree)
+        state_struct = TrainState(
+            pspecs_tree,
+            adamw.AdamWState(opt_tree, opt_tree,
+                             jax.ShapeDtypeStruct((), jnp.int32)),
+            jax.ShapeDtypeStruct((), jnp.int32))
+        state_sp = TrainState(
+            param_sp, adamw.AdamWState(param_sp, param_sp, P()), P())
+        state_sh = shard.make_shardings(mesh, state_sp)
+        fn = jax.jit(step, in_shardings=(state_sh, data_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        args = (state_struct, S.batch_specs(cfg, shape))
+
+    elif shape.kind == "prefill":
+        if plan is not None and any(s.policy.mode == "quant"
+                                    for s in plan.segments):
+            bparams = S.param_structs_quantized(cfg, tp)
+            param_sp = shard.param_specs(cfg, bparams, mesh_cfg)
+            param_sh = shard.make_shardings(mesh, param_sp)
+        else:
+            bparams = S.param_structs(cfg, tp, jnp.bfloat16)
+
+        def prefill_fn(params, batch):
+            return T.forward(params, cfg, batch["tokens"], plan, tp,
+                             frontend_embeds=batch.get("frontend_embeds")
+                             ).logits
+        fn = jax.jit(prefill_fn, in_shardings=(param_sh, data_sh),
+                     out_shardings=shard.make_shardings(
+                         mesh, shard.logits_spec(shape, mesh_cfg)))
+        args = (bparams, S.batch_specs(cfg, shape))
+
+    else:  # decode
+        if plan is not None and any(s.policy.mode == "quant"
+                                    for s in plan.segments):
+            # MPAI deployment: pre-quantized int8 backbone weights
+            bparams = S.param_structs_quantized(cfg, tp)
+            param_sp = shard.param_specs(cfg, bparams, mesh_cfg)
+            param_sh = shard.make_shardings(mesh, param_sp)
+        else:
+            bparams = S.param_structs(cfg, tp, jnp.bfloat16)
+        batch_struct, cache_struct = S.decode_specs(cfg, shape, tp)
+        cache_sp = shard.cache_specs(cfg, cache_struct, shape, mesh_cfg)
+        cache_sh = shard.make_shardings(mesh, cache_sp)
+
+        def decode_fn(params, tokens, cache):
+            out = T.decode_step(params, cfg, tokens, cache, plan, tp)
+            return out.logits, out.cache
+        fn = jax.jit(decode_fn,
+                     in_shardings=(param_sh, data_sh["tokens"], cache_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=(2,))
+        args = (bparams, batch_struct["tokens"], cache_struct)
+
+    with mesh:
+        lowered = fn.lower(*args)
+    return lowered
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh, mesh_cfg,
+                plan_name: str = "bf16", tc: TrainConfig = None):
+    """Exact per-layer HLO costs via 1- vs 2-superblock unrolled probes.
+
+    XLA's cost analysis counts a while/scan body ONCE, so the scanned-layer
+    production program underreports flops/bytes/collectives by the trip
+    count.  The probes unroll every scan (layers, kv chunks, SSM chunks,
+    grad accum) at reduced depth; differencing two depths isolates the
+    exact per-superblock cost, and probe(1) carries the embed/head/optimizer
+    constant term:  total = probe1 + (n_super - 1) * (probe2 - probe1).
+    """
+    period = T.pattern_period(cfg)
+    n_super = cfg.num_layers // period
+
+    def one(n):
+        pcfg = cfg.with_(num_layers=n * period, scan_layers=False,
+                         grad_accum=1, scan_chunk=2048)
+        lowered = lower_cell(pcfg, shape, mesh, mesh_cfg, plan_name, tc=tc)
+        compiled = lowered.compile()
+        ca = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        return (float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)),
+                coll.total_bytes, coll)
+
+    f1 = one(1)
+    if n_super == 1:
+        return {"flops": f1[0], "hlo_bytes": f1[1],
+                "collective_bytes": f1[2],
+                "collective_bytes_by_kind": f1[3].bytes_by_kind,
+                "collective_counts": f1[3].count_by_kind}
+    f2 = one(2)
+    per = [b - a for a, b in zip(f1[:3], f2[:3])]
+    tot = [a + (n_super - 1) * p for a, p in zip(f1[:3], per)]
+    kinds = {k: f1[3].bytes_by_kind.get(k, 0.0)
+             + (n_super - 1) * (f2[3].bytes_by_kind.get(k, 0.0)
+                                - f1[3].bytes_by_kind.get(k, 0.0))
+             for k in set(f1[3].bytes_by_kind) | set(f2[3].bytes_by_kind)}
+    counts = {k: f1[3].count_by_kind.get(k, 0)
+              + (n_super - 1) * (f2[3].count_by_kind.get(k, 0)
+                                 - f1[3].count_by_kind.get(k, 0))
+              for k in set(f1[3].count_by_kind) | set(f2[3].count_by_kind)}
+    return {"flops": tot[0], "hlo_bytes": tot[1], "collective_bytes": tot[2],
+            "collective_bytes_by_kind": kinds, "collective_counts": counts}
+
+
+def analyze(lowered, cfg: ModelConfig, shape: ShapeConfig, mesh_cfg,
+            compile_: bool = True):
+    t0 = time.time()
+    stats = {"arch": cfg.name, "shape": shape.name,
+             "mesh": "x".join(map(str, mesh_cfg.shape))}
+    coll = parse_collectives(lowered.as_text())     # pre-SPMD (usually empty)
+    if compile_:
+        compiled = lowered.compile()
+        stats["compile_s"] = round(time.time() - t0, 1)
+        # collectives live in the optimized (post-SPMD) HLO, per partition
+        coll = parse_collectives(compiled.as_text())
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        stats["flops"] = float(ca.get("flops", 0.0))
+        stats["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            stats[attr] = getattr(ma, attr, None)
+    stats["collective_bytes"] = coll.total_bytes
+    stats["collective_counts"] = coll.count_by_kind
+    stats["collective_bytes_by_kind"] = coll.bytes_by_kind
+    stats["roofline"] = roofline_row(cfg, shape, mesh_cfg, stats)
+    return stats
+
+
+def roofline_row(cfg, shape, mesh_cfg, stats):
+    rep = RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=mesh_cfg.shape,
+        chips=mesh_cfg.num_devices,
+        hlo_flops=stats.get("flops", 0.0),
+        hlo_bytes=stats.get("hlo_bytes", 0.0),
+        collective_bytes=stats.get("collective_bytes", 0.0),
+        model_flops=model_flops(cfg, shape))
+    return rep.row()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch filter for --all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--plan", default="bf16", choices=["bf16", "mpai"])
+    ap.add_argument("--kv-cache", default="bfloat16",
+                    choices=["bfloat16", "int8"],
+                    help="KV cache dtype for decode cells (§Perf C2)")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the per-layer cost probes (roofline will "
+                         "underreport scanned-layer costs)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_cfg = production_mesh_config(multi_pod=args.multi_pod)
+    print(f"mesh: {mesh_cfg.shape} {mesh_cfg.axes} "
+          f"({mesh_cfg.num_devices} devices)")
+
+    if args.all:
+        todo = [(a, s) for a, s, _ in cells()]
+        if args.archs:
+            keep = set(args.archs.split(","))
+            todo = [(a, s) for a, s in todo if a in keep]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        todo = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape_name in todo:
+        cfg = get_config(arch)
+        if args.kv_cache != "bfloat16":
+            cfg = cfg.with_(kv_cache_dtype=args.kv_cache)
+        shape = SHAPES[shape_name]
+        tag = f"{arch}__{shape_name}__{'multi' if args.multi_pod else 'single'}"
+        if args.plan != "bf16":
+            tag += f"__{args.plan}"
+        if args.kv_cache != "bfloat16":
+            tag += "__kv8"
+        print(f"=== {tag} ===", flush=True)
+        t0 = time.time()
+        try:
+            lowered = lower_cell(cfg, shape, mesh, mesh_cfg, args.plan)
+            print(f"  lowered in {time.time() - t0:.1f}s", flush=True)
+            stats = analyze(lowered, cfg, shape, mesh_cfg,
+                            compile_=not args.no_compile)
+            if not (args.no_probe or args.no_compile):
+                t1 = time.time()
+                probe = probe_costs(cfg, shape, mesh, mesh_cfg, args.plan)
+                probe["probe_s"] = round(time.time() - t1, 1)
+                stats["scanned_raw"] = {
+                    k: stats.get(k) for k in
+                    ("flops", "hlo_bytes", "collective_bytes")}
+                stats.update(probe)
+                stats["roofline"] = roofline_row(cfg, shape, mesh_cfg, stats)
+            r = stats["roofline"]
+            print(f"  compile {stats.get('compile_s', '-')}s | "
+                  f"flops/dev {stats.get('flops', 0) / 1e9:.1f}G | "
+                  f"coll {stats['collective_bytes'] / 1e9:.2f}GB | "
+                  f"dominant {r['dominant']} | "
+                  f"terms c/m/x = {r['compute_ms']}/{r['memory_ms']}/"
+                  f"{r['collective_ms']} ms", flush=True)
+            if stats.get("temp_size_in_bytes") is not None:
+                print(f"  temp/dev {stats['temp_size_in_bytes'] / 1e9:.2f}GB "
+                      f"args/dev {stats['argument_size_in_bytes'] / 1e9:.2f}GB",
+                      flush=True)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(stats, f, indent=1)
+        except Exception as e:                       # noqa: BLE001
+            failures.append((tag, repr(e)))
+            traceback.print_exc()
+    print(f"\n{len(todo) - len(failures)}/{len(todo)} cells OK")
+    for tag, err in failures:
+        print(f"FAIL {tag}: {err[:200]}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

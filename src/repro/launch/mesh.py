@@ -1,0 +1,35 @@
+"""Mesh construction.  Functions, not module constants — importing this
+module never touches jax device state (jax locks the device count on
+first backend init, and only dryrun.py is allowed to fake 512 devices)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import MeshConfig, MULTI_POD, SINGLE_POD
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh_from_config(mesh_cfg: MeshConfig) -> Mesh:
+    devs = np.array(jax.devices())
+    assert devs.size >= mesh_cfg.num_devices, (
+        f"need {mesh_cfg.num_devices} devices, have {devs.size}")
+    return jax.make_mesh(mesh_cfg.shape, mesh_cfg.axes,
+                         devices=devs[:mesh_cfg.num_devices].tolist())
+
+
+def make_local_mesh(model: int = 1) -> Mesh:
+    """Whatever this host has: (n/model, model) data x model grid."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,91 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+        --shape train_4k --steps 100 [--smoke] [--plan mpai] \
+        [--mesh local|single_pod|multi_pod] [--ckpt-dir DIR]
+
+On real hardware ``--mesh single_pod/multi_pod`` expects the process to
+see the pod's devices (jax.distributed.initialize on each host).  On this
+container use ``--smoke --mesh local`` for a real training run, or the
+dry-run entry point for the production meshes.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import SHAPES, get_config
+from repro.configs.base import MeshConfig, ShapeConfig, TrainConfig
+from repro.core import qat
+from repro.core.partition import PartitionPlan
+from repro.data.pipeline import lm_batch
+from repro.models.frontends import synthetic_frontend_embeds
+from repro.runtime.fault import FaultTolerantRunner
+from repro.runtime.train_loop import Trainer
+
+
+def build(args):
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.shape in SHAPES:
+        shape = SHAPES[args.shape]
+    else:
+        seq, batch = map(int, args.shape.split("x"))
+        shape = ShapeConfig("custom", seq, batch, "train")
+    if args.smoke:
+        shape = ShapeConfig("smoke", min(shape.seq_len, 128),
+                            min(shape.global_batch, 8), "train")
+    if args.mesh == "local":
+        import jax
+        n = len(jax.devices())
+        mesh_cfg = MeshConfig((n, 1), ("data", "model"))
+    elif args.mesh == "single_pod":
+        mesh_cfg = MeshConfig((16, 16), ("data", "model"))
+    else:
+        mesh_cfg = MeshConfig((2, 16, 16), ("pod", "data", "model"))
+    plan = None
+    if args.plan == "mpai":
+        plan = qat.train_plan(PartitionPlan.mpai(cfg.num_layers))
+    tc = TrainConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every)
+    return cfg, shape, mesh_cfg, plan, tc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--plan", default="bf16", choices=["bf16", "mpai"])
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "single_pod", "multi_pod"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg, shape, mesh_cfg, plan, tc = build(args)
+    print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params) "
+          f"shape={shape.name} mesh={mesh_cfg.shape} plan={args.plan}")
+    trainer = Trainer(cfg, shape, mesh_cfg, tc, plan=plan)
+    state = trainer.init_state()
+    ckpt = CheckpointManager(args.ckpt_dir or
+                             tempfile.mkdtemp(prefix="repro_ckpt_"),
+                             keep=tc.keep_checkpoints)
+    runner = FaultTolerantRunner(trainer, ckpt)
+
+    def data(step):
+        batch = lm_batch(cfg, shape, step, seed=tc.seed)
+        if cfg.frontend != "none":
+            batch["frontend_embeds"] = synthetic_frontend_embeds(
+                cfg, shape.global_batch, seed=step)
+        return batch
+
+    state, hist = runner.run(state, data, args.steps,
+                             log_every=max(args.steps // 20, 1))
+    for h in hist:
+        print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""UrsoNet — the paper's benchmark workload (satellite pose estimation,
+Proenca & Gao, ICRA 2020) — plus analytic layer tables for the Fig. 2
+networks (MobileNetV2 / ResNet-50 / InceptionV4) used by the cost model.
+
+UrsoNet here: ResNet-style backbone (stem + 4 stages of residual blocks,
+GroupNorm) with two heads — location regression [3] and orientation
+quaternion [4].  The MPAI partition splits exactly where the paper does:
+convolutional backbone -> INT8 engine, FC heads -> FP16/bf16 engine.
+
+Convolutions honour the precision policy by quantize->dequantize of weights
+and activations around ``lax.conv`` (int8-simulated numerics; the true-int8
+MXU path is exercised by the matmul kernel — DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
+from repro.core.quantization import fake_quant, pdot, quantize
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Policy-aware conv
+# ---------------------------------------------------------------------------
+def pconv(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+          policy: PrecisionPolicy = DEFAULT_POLICY) -> jnp.ndarray:
+    """x: [B,H,W,Cin]; w: [kh,kw,Cin,Cout] — NHWC/HWIO."""
+    if policy.mode == "fake":
+        w = fake_quant(w, channel_axis=-1)
+        x = fake_quant(x)
+    elif policy.mode == "quant":
+        w = quantize(w, channel_axis=-1).dequantize(jnp.bfloat16)
+        x = quantize(x).dequantize(jnp.bfloat16)
+    dt = policy.precision.compute_dtype
+    return jax.lax.conv_general_dilated(
+        x.astype(dt), w.astype(dt), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(params: Dict, x: jnp.ndarray, groups: int = 8,
+               eps: float = 1e-5) -> jnp.ndarray:
+    b, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    xf = x.astype(jnp.float32).reshape(b, h, w, g, c // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(b, h, w, c) * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def _gn_init(c: int) -> Dict:
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _conv_init(key, kh, kw, cin, cout) -> jnp.ndarray:
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) / math.sqrt(fan)
+
+
+# ---------------------------------------------------------------------------
+# UrsoNet
+# ---------------------------------------------------------------------------
+class UrsoNetConfig(NamedTuple):
+    name: str = "ursonet"
+    image_hw: Tuple[int, int] = (192, 256)      # backbone input (paper resamples 1280x960)
+    widths: Tuple[int, ...] = (32, 64, 128, 256)
+    blocks_per_stage: int = 2
+    fc_dim: int = 256
+
+    @property
+    def num_layers(self) -> int:                 # conv stages as "layers"
+        return len(self.widths) * self.blocks_per_stage
+
+
+def ursonet_init(key, cfg: UrsoNetConfig) -> Dict:
+    ks = iter(jax.random.split(key, 64))
+    p: Dict = {"stem": {"w": _conv_init(next(ks), 7, 7, 3, cfg.widths[0]),
+                        "gn": _gn_init(cfg.widths[0])},
+               "stages": []}
+    cin = cfg.widths[0]
+    for w_ in cfg.widths:
+        stage = []
+        for b in range(cfg.blocks_per_stage):
+            blk = {"w1": _conv_init(next(ks), 3, 3, cin, w_),
+                   "gn1": _gn_init(w_),
+                   "w2": _conv_init(next(ks), 3, 3, w_, w_),
+                   "gn2": _gn_init(w_)}
+            if cin != w_:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, w_)
+            stage.append(blk)
+            cin = w_
+        p["stages"].append(stage)
+    p["fc"] = dense_init(next(ks), cin, cfg.fc_dim)
+    p["head_loc"] = dense_init(next(ks), cfg.fc_dim, 3)
+    p["head_ori"] = dense_init(next(ks), cfg.fc_dim, 4)
+    return p
+
+
+def ursonet_apply(params: Dict, cfg: UrsoNetConfig, images: jnp.ndarray,
+                  backbone_policy: PrecisionPolicy = DEFAULT_POLICY,
+                  head_policy: PrecisionPolicy = DEFAULT_POLICY
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """images: [B, H, W, 3] -> (loc [B,3], quat [B,4] normalized).
+
+    ``backbone_policy`` / ``head_policy`` are the MPAI partition: conv
+    backbone on the INT8 engine, FC heads on the high-precision engine.
+    """
+    x = images.astype(jnp.bfloat16)
+    x = pconv(x, params["stem"]["w"], 2, backbone_policy)
+    x = jax.nn.silu(group_norm(params["stem"]["gn"], x))
+    for si, stage in enumerate(params["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if bi == 0 and si > 0 else 1
+            h = pconv(x, blk["w1"], stride, backbone_policy)
+            h = jax.nn.silu(group_norm(blk["gn1"], h))
+            h = pconv(h, blk["w2"], 1, backbone_policy)
+            h = group_norm(blk["gn2"], h)
+            sc = x
+            if "proj" in blk:
+                sc = pconv(x, blk["proj"], 1, backbone_policy)
+            if stride == 2:
+                sc = sc[:, ::2, ::2]
+            x = jax.nn.silu(h + sc)
+    feat = jnp.mean(x, axis=(1, 2))                      # global average pool
+    feat = jax.nn.silu(pdot(feat, params["fc"], head_policy))
+    loc = pdot(feat, params["head_loc"], head_policy).astype(jnp.float32)
+    loc = loc * LOC_SCALE + LOC_OFFSET          # normalized head -> meters
+    q = pdot(feat, params["head_ori"], head_policy).astype(jnp.float32)
+    q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-8)
+    return loc, q
+
+
+# location normalization (matches the synthetic task's pose distribution)
+LOC_OFFSET = jnp.array([0.0, 0.0, 16.0], jnp.float32)
+LOC_SCALE = jnp.array([3.0, 2.0, 8.0], jnp.float32)
+
+
+def pose_loss(loc, q, loc_gt, q_gt) -> jnp.ndarray:
+    l_loc = jnp.mean(jnp.sum(jnp.square(
+        (loc - loc_gt) / LOC_SCALE), axis=-1))
+    dot = jnp.sum(q * q_gt, axis=-1)
+    l_ori = jnp.mean(1.0 - jnp.square(dot))
+    return l_loc + 4.0 * l_ori
+
+
+def pose_metrics(loc, q, loc_gt, q_gt) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(LOCE meters, ORIE degrees) — the paper's Table I metrics."""
+    loce = jnp.mean(jnp.linalg.norm(loc - loc_gt, axis=-1))
+    dot = jnp.clip(jnp.abs(jnp.sum(q * q_gt, axis=-1)), 0.0, 1.0)
+    orie = jnp.mean(2.0 * jnp.arccos(dot)) * 180.0 / jnp.pi
+    return loce, orie
+
+
+# ---------------------------------------------------------------------------
+# Analytic conv tables for Fig. 2 (cost-model inputs; not executed)
+# ---------------------------------------------------------------------------
+class ConvLayerSpec(NamedTuple):
+    name: str
+    macs: float           # multiply-accumulates per image
+    params: float         # weights
+    activations: float    # output activation elements
+    kind: str = "dense"
+
+
+def _conv_macs(hw: int, k: int, cin: int, cout: int, stride: int = 1,
+               groups: int = 1) -> ConvLayerSpec:
+    out = hw // stride
+    macs = out * out * k * k * cin * cout / groups
+    return ConvLayerSpec(f"conv{k}x{k}_{cin}-{cout}", macs,
+                         k * k * cin * cout / groups, out * out * cout,
+                         kind="depthwise" if groups > 1 else "dense")
+
+
+def mobilenet_v2_layers() -> List[ConvLayerSpec]:
+    """224x224 input; inverted residuals (expansion 6)."""
+    layers = [_conv_macs(224, 3, 3, 32, 2)]
+    spec = [(16, 1, 1, 112), (24, 6, 2, 112), (24, 6, 1, 56), (32, 6, 2, 56),
+            (32, 6, 1, 28), (32, 6, 1, 28), (64, 6, 2, 28), (64, 6, 1, 14),
+            (64, 6, 1, 14), (64, 6, 1, 14), (96, 6, 1, 14), (96, 6, 1, 14),
+            (96, 6, 1, 14), (160, 6, 2, 14), (160, 6, 1, 7), (160, 6, 1, 7),
+            (320, 6, 1, 7)]
+    cin = 32
+    for cout, t, s, hw in spec:
+        mid = cin * t
+        layers += [_conv_macs(hw, 1, cin, mid),
+                   _conv_macs(hw, 3, mid, mid, s, groups=mid),
+                   _conv_macs(hw // s, 1, mid, cout)]
+        cin = cout
+    layers.append(_conv_macs(7, 1, 320, 1280))
+    layers.append(ConvLayerSpec("fc", 1280 * 1000, 1280 * 1000, 1000))
+    return layers
+
+
+def resnet50_layers() -> List[ConvLayerSpec]:
+    layers = [_conv_macs(224, 7, 3, 64, 2)]
+    cfgs = [(64, 256, 3, 56), (128, 512, 4, 28), (256, 1024, 6, 14),
+            (512, 2048, 3, 7)]
+    cin = 64
+    for mid, cout, n, hw in cfgs:
+        for i in range(n):
+            layers += [_conv_macs(hw, 1, cin, mid),
+                       _conv_macs(hw, 3, mid, mid),
+                       _conv_macs(hw, 1, mid, cout)]
+            cin = cout
+    layers.append(ConvLayerSpec("fc", 2048 * 1000, 2048 * 1000, 1000))
+    return layers
+
+
+def inception_v4_layers() -> List[ConvLayerSpec]:
+    """Coarse 299x299 Inception-V4 (~12.3 GMACs total, matching published)."""
+    layers = [_conv_macs(299, 3, 3, 32, 2), _conv_macs(149, 3, 32, 32),
+              _conv_macs(149, 3, 32, 64)]
+    for _ in range(4):                                   # Inception-A x4
+        layers += [_conv_macs(35, 1, 384, 96), _conv_macs(35, 3, 96, 96),
+                   _conv_macs(35, 3, 96, 96), _conv_macs(35, 1, 384, 96)]
+    for _ in range(7):                                   # Inception-B x7
+        layers += [_conv_macs(17, 1, 1024, 192), _conv_macs(17, 7, 192, 224),
+                   _conv_macs(17, 7, 224, 256), _conv_macs(17, 1, 1024, 384)]
+    for _ in range(3):                                   # Inception-C x3
+        layers += [_conv_macs(8, 1, 1536, 256), _conv_macs(8, 3, 256, 512),
+                   _conv_macs(8, 1, 1536, 256)]
+    layers.append(ConvLayerSpec("fc", 1536 * 1000, 1536 * 1000, 1000))
+    return layers
+
+
+def ursonet_table1_layers() -> List[ConvLayerSpec]:
+    """Full-size UrsoNet as benchmarked in Table I: ResNet-50 backbone on
+    the 1280x960 input resampled to ~384x512 (the UrsoNet paper's bottleneck
+    resolution), plus the pose FC heads.  Spatial MACs/activations scale
+    by (384*512)/(224*224) vs the ImageNet table."""
+    scale = (384 * 512) / (224 * 224)
+    layers = []
+    for l in resnet50_layers()[:-1]:                     # conv backbone
+        layers.append(ConvLayerSpec(l.name, l.macs * scale, l.params,
+                                    l.activations * scale, l.kind))
+    layers.append(ConvLayerSpec("fc_pose", 2048 * 512, 2048 * 512, 512))
+    layers.append(ConvLayerSpec("heads", 512 * 7, 512 * 7, 7))
+    return layers
+
+
+def ursonet_layers(cfg: UrsoNetConfig = UrsoNetConfig()) -> List[ConvLayerSpec]:
+    h, w = cfg.image_hw
+    layers = [_conv_macs(max(h, w), 7, 3, cfg.widths[0], 2)]
+    hw = max(h, w) // 2
+    cin = cfg.widths[0]
+    for si, w_ in enumerate(cfg.widths):
+        for b in range(cfg.blocks_per_stage):
+            stride = 2 if b == 0 and si > 0 else 1
+            layers += [_conv_macs(hw, 3, cin, w_, stride),
+                       _conv_macs(hw // stride, 3, w_, w_)]
+            hw //= stride
+            cin = w_
+    layers.append(ConvLayerSpec("fc", cin * cfg.fc_dim, cin * cfg.fc_dim,
+                                cfg.fc_dim))
+    layers.append(ConvLayerSpec("heads", cfg.fc_dim * 7, cfg.fc_dim * 7, 7))
+    return layers

@@ -1,0 +1,34 @@
+"""Modality frontends — STUBS per the assignment.
+
+``[vlm]`` / ``[audio]`` entries specify the transformer backbone only; the
+modality frontend delivers *precomputed* frame/patch embeddings.  These
+helpers produce (a) ShapeDtypeStructs for dry-runs and (b) deterministic
+synthetic embeddings for smoke tests.
+
+llava-next: anyres tiling yields a variable number of patch embeddings; we
+fix it at ``frontend_tokens`` (the base 576-patch grid for smoke configs).
+musicgen: EnCodec frames arrive as embeddings over the 2048-entry codebook
+vocabulary; token interleaving across codebooks is upstream of the backbone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def frontend_embeds_spec(cfg: ModelConfig, batch: int,
+                         dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(frontend_embed_shape(cfg, batch), dtype)
+
+
+def synthetic_frontend_embeds(cfg: ModelConfig, batch: int, seed: int = 0,
+                              dtype=jnp.bfloat16) -> jnp.ndarray:
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, frontend_embed_shape(cfg, batch),
+                              jnp.float32) * 0.02).astype(dtype)

@@ -1,0 +1,133 @@
+"""Shared model building blocks (pure JAX, init/apply style).
+
+Every matmul routes through :func:`repro.core.quantization.pdot` so the
+MPAI precision policy of the enclosing segment applies uniformly.  Norms,
+routers and rotary phases always run in fp32 — they are tiny and
+accuracy-critical (the same argument the paper makes for keeping the FC
+head on the FP16 VPU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
+from repro.core.quantization import pdot
+
+
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None) -> jnp.ndarray:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Norms (always fp32 compute)
+# ---------------------------------------------------------------------------
+def rmsnorm_init(dim: int) -> Dict:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(dim: int) -> Dict:
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params: Dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+def make_norm(norm_type: str):
+    if norm_type == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if norm_type == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                 # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, glu: bool) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff),
+         "w_out": dense_init(ks[1], d_ff, d_model)}
+    if glu:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, act: str = "silu", glu: bool = True,
+              policy: PrecisionPolicy = DEFAULT_POLICY) -> jnp.ndarray:
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = pdot(x, params["w_in"], policy)
+    if glu:
+        h = a(pdot(x, params["w_gate"], policy)) * h
+    else:
+        h = a(h)
+    return pdot(h, params["w_out"], policy)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head (vocab-sharded over the model axis)
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab: int, d_model: int) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return table.astype(dtype)[tokens]
+
+
+def lm_logits(table: jnp.ndarray, x: jnp.ndarray,
+              policy: PrecisionPolicy = DEFAULT_POLICY) -> jnp.ndarray:
+    """Logits against the (possibly tied) embedding table [V, D]."""
+    dt = policy.precision.compute_dtype
+    return jnp.matmul(x.astype(dt), table.astype(dt).T)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy, fp32-stable, vocab-sharding-safe.
+
+    The gold logit comes from a masked reduction over the vocab axis
+    instead of ``take_along_axis`` — a gather over a vocab-sharded logits
+    tensor forces the SPMD partitioner to materialize/gather the full
+    [tokens, V] array, while select+reduce partitions cleanly (local
+    partial + small psum).  §Perf iteration 1.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = labels[..., None] == jnp.arange(vocab, dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)

@@ -1,0 +1,152 @@
+"""Mamba-1 selective SSM mixer (Jamba's majority layer).
+
+The selective-scan recurrence
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t        (per channel, N states)
+    y_t = C_t . h_t + D * x_t
+
+is evaluated with a chunked scan: an outer ``lax.scan`` over sequence
+chunks carries h [B, d_inner, N]; inside a chunk an associative scan
+materializes [B, Q, d_inner, N] only for Q positions at a time.  This is
+the TPU-native replacement for the CUDA selective-scan kernel: VMEM-sized
+chunks instead of warp-level fusion (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
+from repro.core.quantization import pdot
+from repro.models.layers import dense_init
+
+CHUNK = 64
+
+
+def mamba_init(key, cfg: ModelConfig) -> Dict:
+    mc = cfg.mamba or MambaConfig()
+    d, di = cfg.d_model, (cfg.mamba or MambaConfig()).expand * cfg.d_model
+    n, r = mc.d_state, mc.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (mc.d_conv, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, r + 2 * n),
+        "dt_proj": dense_init(ks[3], r, di),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of uniform [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d),
+    }
+
+
+class MambaCache(NamedTuple):
+    h: jnp.ndarray          # [B, d_inner, N]
+    conv: jnp.ndarray       # [B, d_conv-1, d_inner] — trailing inputs
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaCache:
+    mc = cfg.mamba or MambaConfig()
+    di = mc.expand * cfg.d_model
+    return MambaCache(jnp.zeros((batch, di, mc.d_state), dtype),
+                      jnp.zeros((batch, mc.d_conv - 1, di), dtype))
+
+
+def _ssm_params(params, cfg: ModelConfig, xc: jnp.ndarray, policy):
+    """xc: [B, L, di] (post-conv) -> dt, B_t, C_t  (fp32, selective)."""
+    mc = cfg.mamba or MambaConfig()
+    r = mc.resolved_dt_rank(cfg.d_model)
+    proj = pdot(xc, params["x_proj"], policy).astype(jnp.float32)
+    dt_r, b_t, c_t = jnp.split(proj, [r, r + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"])
+    return dt, b_t, c_t                       # [B,L,di], [B,L,N], [B,L,N]
+
+
+def _chunk_scan(h0, a_bar, bx):
+    """Associative scan within a chunk.  a_bar, bx: [B, Q, di, N]."""
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+    a_cum, b_cum = jax.lax.associative_scan(comb, (a_bar, bx), axis=1)
+    h = a_cum * h0[:, None] + b_cum           # [B, Q, di, N]
+    return h, h[:, -1]
+
+
+def mamba_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                policy: PrecisionPolicy = DEFAULT_POLICY,
+                chunk: int = 0, return_state: bool = False):
+    """Full-sequence mixer.  x: [B, S, D] -> [B, S, D] (opt. + cache)."""
+    mc = cfg.mamba or MambaConfig()
+    chunk = chunk or cfg.scan_chunk or CHUNK
+    b, s, d = x.shape
+    di = mc.expand * d
+    xz = pdot(x, params["in_proj"], policy)
+    xr, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over seq
+    xp = jnp.pad(xr, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + s] * params["conv_w"][i] for i in range(mc.d_conv))
+    xc = jax.nn.silu(xc + params["conv_b"]).astype(x.dtype)
+
+    dt, b_t, c_t = _ssm_params(params, cfg, xc, policy)
+    a = -jnp.exp(params["A_log"])                       # [di, N]
+    xcf = xc.astype(jnp.float32)
+
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+        xcf = jnp.pad(xcf, ((0, 0), (0, pad), (0, 0)))
+
+    def outer(h, inp):
+        dtq, bq, cq, xq = inp                            # [B, Q, ...]
+        a_bar = jnp.exp(dtq[..., None] * a)              # [B,Q,di,N]
+        bx = (dtq * xq)[..., None] * bq[:, :, None, :]   # [B,Q,di,N]
+        hs, h_last = _chunk_scan(h, a_bar, bx)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cq)
+        return h_last, y
+
+    split = lambda t: t.reshape(b, nchunk, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, di, mc.d_state), jnp.float32)
+    h_fin, ys = jax.lax.scan(outer, h0,
+                             (split(dt), split(b_t), split(c_t), split(xcf)),
+                             unroll=not cfg.scan_layers)
+    y = ys.swapaxes(0, 1).reshape(b, nchunk * chunk, di)[:, :s]
+    y = (y + xcf[:, :s] * params["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = pdot(y, params["out_proj"], policy)
+    if return_state:
+        conv_tail = xr[:, -(mc.d_conv - 1):].astype(jnp.float32)
+        return out, MambaCache(h_fin, conv_tail)
+    return out
+
+
+def mamba_decode_step(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                      cache: MambaCache,
+                      policy: PrecisionPolicy = DEFAULT_POLICY
+                      ) -> Tuple[jnp.ndarray, MambaCache]:
+    """One-token step.  x: [B, 1, D]."""
+    mc = cfg.mamba or MambaConfig()
+    xz = pdot(x[:, 0], params["in_proj"], policy)        # [B, 2*di]
+    xr, z = jnp.split(xz, 2, axis=-1)
+
+    hist = jnp.concatenate([cache.conv, xr[:, None].astype(cache.conv.dtype)], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", hist, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc).astype(x.dtype)
+
+    dt, b_t, c_t = _ssm_params(params, cfg, xc[:, None], policy)
+    dt, b_t, c_t = dt[:, 0], b_t[:, 0], c_t[:, 0]
+    a = -jnp.exp(params["A_log"])
+    a_bar = jnp.exp(dt[..., None] * a)                   # [B,di,N]
+    h = a_bar * cache.h + (dt * xc.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) + xc.astype(jnp.float32) * params["D"]
+    y = (y.astype(x.dtype) * jax.nn.silu(z))[:, None]
+    return pdot(y, params["out_proj"], policy), MambaCache(h, hist[:, 1:])

@@ -1,0 +1,225 @@
+"""RWKV-6 (Finch) mixer — attention-free, data-dependent per-channel decay.
+
+Per head (size N): S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                   y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T).
+
+The sequence dimension is processed with a chunked ``lax.scan`` carrying
+S [B, Hp, N, N]; within a chunk an associative scan composes the affine
+state maps exactly (no exp-ratio tricks, numerically stable).  Decode
+carries (S, previous-token activations) — O(1) state, which is why the
+long_500k cell runs for this arch.
+
+TP padding: heads pad to a multiple of the TP degree with zero-weight
+projections (40 -> 48 at tp=16); padded heads emit exact zeros.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
+from repro.core.quantization import pdot
+from repro.models.layers import dense_init
+
+CHUNK = 16
+TMIX_STREAMS = ("r", "k", "v", "w", "g")
+
+
+def _padded_heads(cfg: ModelConfig, tp: int) -> int:
+    rc = cfg.rwkv or RWKVConfig()
+    h = cfg.d_model // rc.head_size
+    tp = max(tp, 1)
+    return ((h + tp - 1) // tp) * tp
+
+
+def rwkv_dims(cfg: ModelConfig, tp: int) -> Tuple[int, int, int]:
+    rc = cfg.rwkv or RWKVConfig()
+    hp = _padded_heads(cfg, tp)
+    return hp, rc.head_size, hp * rc.head_size     # Hp, N, Dp
+
+
+def _pad_out(w: jnp.ndarray, dp: int) -> jnp.ndarray:
+    return jnp.pad(w, ((0, 0), (0, dp - w.shape[1])))
+
+
+def time_mix_init(key, cfg: ModelConfig, tp: int = 1) -> Dict:
+    rc = cfg.rwkv or RWKVConfig()
+    d = cfg.d_model
+    hp, n, dp = rwkv_dims(cfg, tp)
+    ks = jax.random.split(key, 10)
+    p = {
+        # ddlerp token-shift mixing
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "mu": jnp.full((5, d), 0.5, jnp.float32),
+        "mix_A": dense_init(ks[0], d, 5 * rc.mix_lora, scale=0.01),
+        "mix_B": jax.random.normal(ks[1], (5, rc.mix_lora, d), jnp.float32) * 0.01,
+        # projections (padded out-dim)
+        "w_r": _pad_out(dense_init(ks[2], d, d), dp),
+        "w_k": _pad_out(dense_init(ks[3], d, d), dp),
+        "w_v": _pad_out(dense_init(ks[4], d, d), dp),
+        "w_g": _pad_out(dense_init(ks[5], d, d), dp),
+        "w_o": jnp.pad(dense_init(ks[6], d, d), ((0, dp - d), (0, 0))),
+        # data-dependent decay (lora) + bonus
+        "w0": jnp.pad(jnp.linspace(-6.0, -1.0, d), (0, dp - d)).astype(jnp.float32),
+        "wA": dense_init(ks[7], d, rc.decay_lora, scale=0.01),
+        "wB": jax.random.normal(ks[8], (rc.decay_lora, dp), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[9], (dp,), jnp.float32) * 0.1,
+        # per-head group norm
+        "gn_scale": jnp.ones((dp,), jnp.float32),
+        "gn_bias": jnp.zeros((dp,), jnp.float32),
+    }
+    return p
+
+
+def channel_mix_init(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "w_kc": dense_init(ks[0], d, f),
+        "w_vc": dense_init(ks[1], f, d),
+        "w_rc": dense_init(ks[2], d, d),
+    }
+
+
+class RWKVCache(NamedTuple):
+    s: jnp.ndarray          # [B, Hp, N, N] wkv state
+    x_tmix: jnp.ndarray     # [B, D] previous token (time-mix shift)
+    x_cmix: jnp.ndarray     # [B, D] previous token (channel-mix shift)
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, tp: int = 1,
+                    dtype=jnp.float32) -> RWKVCache:
+    hp, n, _ = rwkv_dims(cfg, tp)
+    return RWKVCache(jnp.zeros((batch, hp, n, n), dtype),
+                     jnp.zeros((batch, cfg.d_model), dtype),
+                     jnp.zeros((batch, cfg.d_model), dtype))
+
+
+def _ddlerp(params: Dict, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """RWKV-6 data-dependent token-shift.  x, x_prev: [B, S, D] ->
+    the five mixed streams [5, B, S, D] plus x_prev for decay lora."""
+    xx = x_prev - x
+    xxx = x + xx * params["mu_x"]
+    lora = jnp.tanh(xxx.astype(jnp.float32) @ params["mix_A"])
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    dyn = jnp.einsum("bsli,lid->lbsd", lora, params["mix_B"])
+    mixed = x[None] + xx[None] * (params["mu"][:, None, None, :] + dyn).astype(x.dtype)
+    return mixed, xxx
+
+
+def _wkv_chunk_scan(s0, w, k, v, r, u, chunk: int, unroll: bool = False):
+    """Chunked exact scan.  w,k,v,r: [B, T, Hp, N] fp32; s0: [B,Hp,N,N].
+    Returns y [B, T, Hp, N] and final state."""
+    b, t, hp, n = k.shape
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        w, k, v, r = z(w), z(k), z(v), z(r)
+        w = w.at[:, t:].set(1.0)     # identity decay on padding
+
+    split = lambda a: a.reshape(b, nchunk, chunk, hp, n).swapaxes(0, 1)
+    wc, kc, vc, rc = split(w), split(k), split(v), split(r)
+
+    def outer(s, inp):
+        wq, kq, vq, rq = inp                               # [B, Q, Hp, N]
+        a = wq[..., None]                                  # row decay [B,Q,H,N,1]
+        bmat = kq[..., None] * vq[..., None, :]            # [B,Q,H,N,N]
+
+        def comb(l, rgt):
+            return (l[0] * rgt[0], rgt[0] * l[1] + rgt[1])
+        a_cum, b_cum = jax.lax.associative_scan(comb, (a, bmat), axis=1)
+        s_incl = a_cum * s[:, None] + b_cum                # [B,Q,H,N,N]
+        s_excl = jnp.concatenate([s[:, None], s_incl[:, :-1]], axis=1)
+        y = jnp.einsum("bqhn,bqhnm->bqhm", rq, s_excl)
+        y = y + jnp.einsum("bqhn,hn,bqhn,bqhm->bqhm", rq, u, kq, vq)
+        return s_incl[:, -1], y
+
+    s_fin, ys = jax.lax.scan(outer, s0, (wc, kc, vc, rc), unroll=unroll)
+    return ys.swapaxes(0, 1).reshape(b, nchunk * chunk, hp, n)[:, :t], s_fin
+
+
+def _group_norm(params: Dict, y: jnp.ndarray, n: int, eps: float = 1e-5):
+    """Per-head layer norm over the padded channel dim."""
+    shp = y.shape
+    yh = y.reshape(*shp[:-1], -1, n).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(shp) * params["gn_scale"] + params["gn_bias"])
+
+
+def time_mix_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                   x_prev: jnp.ndarray, tp: int = 1,
+                   policy: PrecisionPolicy = DEFAULT_POLICY,
+                   chunk: int = 0):
+    """x: [B,S,D]; x_prev: [B,D] (token before this window).
+    Returns (out [B,S,D], final state [B,Hp,N,N], last token [B,D])."""
+    chunk = chunk or cfg.scan_chunk or CHUNK
+    hp, n, dp = rwkv_dims(cfg, tp)
+    b, s, d = x.shape
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    mixed, _ = _ddlerp(params, x, shifted)
+    xr, xk, xv, xw, xg = [mixed[i] for i in range(5)]
+
+    r = pdot(xr, params["w_r"], policy).reshape(b, s, hp, n).astype(jnp.float32)
+    k = pdot(xk, params["w_k"], policy).reshape(b, s, hp, n).astype(jnp.float32)
+    v = pdot(xv, params["w_v"], policy).reshape(b, s, hp, n).astype(jnp.float32)
+    g = jax.nn.silu(pdot(xg, params["w_g"], policy))
+
+    ww = params["w0"] + jnp.tanh(xw.astype(jnp.float32) @ params["wA"]) @ params["wB"]
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, s, hp, n)         # decay in (0,1)
+
+    u = params["u"].reshape(hp, n)
+    s0 = jnp.zeros((b, hp, n, n), jnp.float32)
+    y, s_fin = _wkv_chunk_scan(s0, w, k, v, r, u, chunk,
+                               unroll=not cfg.scan_layers)
+    y = _group_norm(params, y.reshape(b, s, dp), n).astype(x.dtype) * g
+    return pdot(y, params["w_o"], policy), s_fin, x[:, -1]
+
+
+def time_mix_decode(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    cache_s: jnp.ndarray, x_prev: jnp.ndarray, tp: int = 1,
+                    policy: PrecisionPolicy = DEFAULT_POLICY):
+    """One token.  x: [B, D].  Exact recurrence, no chunking."""
+    hp, n, dp = rwkv_dims(cfg, tp)
+    b, d = x.shape
+    mixed, _ = _ddlerp(params, x[:, None], x_prev[:, None])
+    xr, xk, xv, xw, xg = [mixed[i][:, 0] for i in range(5)]
+
+    r = pdot(xr, params["w_r"], policy).reshape(b, hp, n).astype(jnp.float32)
+    k = pdot(xk, params["w_k"], policy).reshape(b, hp, n).astype(jnp.float32)
+    v = pdot(xv, params["w_v"], policy).reshape(b, hp, n).astype(jnp.float32)
+    g = jax.nn.silu(pdot(xg, params["w_g"], policy))
+
+    ww = params["w0"] + jnp.tanh(xw.astype(jnp.float32) @ params["wA"]) @ params["wB"]
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, hp, n)
+
+    u = params["u"].reshape(hp, n)
+    kv = k[..., None] * v[..., None, :]                    # [B,Hp,N,N]
+    y = jnp.einsum("bhn,bhnm->bhm", r, cache_s + u[None, ..., None] * kv)
+    s_new = w[..., None] * cache_s + kv
+    y = _group_norm(params, y.reshape(b, dp), n).astype(x.dtype) * g
+    return pdot(y, params["w_o"], policy), s_new, x
+
+
+def channel_mix_apply(params: Dict, x: jnp.ndarray, x_prev: jnp.ndarray,
+                      policy: PrecisionPolicy = DEFAULT_POLICY):
+    """x: [B,S,D]; x_prev: [B,D].  Returns (out, last token)."""
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = x + (shifted - x) * params["mu_k"]
+    xr = x + (shifted - x) * params["mu_r"]
+    k = jnp.square(jax.nn.relu(pdot(xk, params["w_kc"], policy)))
+    v = pdot(k, params["w_vc"], policy)
+    return jax.nn.sigmoid(pdot(xr, params["w_rc"], policy)) * v, x[:, -1]
+
+
+def channel_mix_decode(params: Dict, x: jnp.ndarray, x_prev: jnp.ndarray,
+                       policy: PrecisionPolicy = DEFAULT_POLICY):
+    out, _ = channel_mix_apply(params, x[:, None], x_prev, policy)
+    return out[:, 0], x

@@ -1,0 +1,394 @@
+"""Model composition: sublayer pattern -> super-blocks -> segment scans.
+
+Layer stacks are built from *super-blocks*: the smallest periodic unit of
+the architecture's layer pattern (1 for homogeneous archs, 8 for Jamba's
+1-attention-per-8 + MoE-every-2 interleave).  Super-blocks are stacked
+with a leading dimension and executed with ``lax.scan`` — essential to
+keep HLO size sane at 126 layers x 512 devices.
+
+MPAI integration: a :class:`~repro.core.partition.PartitionPlan` splits
+the stack into contiguous segments; each segment runs its own scan under
+its own precision policy, so a partition boundary is literally a scan
+boundary (and, in stage-pipeline mode, a device-group boundary).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.partition import PartitionPlan
+from repro.core.precision import PrecisionPolicy
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import rwkv as rwk
+from repro.models import moe as moe_mod
+from repro.models.layers import (cross_entropy, embed, embedding_init,
+                                 lm_logits, make_norm, mlp_apply, mlp_init)
+
+AUX_LOSS_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+def pattern_period(cfg: ModelConfig) -> int:
+    p = cfg.attn_every if cfg.mixer == "hybrid" else 1
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    assert cfg.num_layers % p == 0, (cfg.name, cfg.num_layers, p)
+    return p
+
+
+def sublayer_pattern(cfg: ModelConfig) -> Tuple[Tuple[str, bool], ...]:
+    p = pattern_period(cfg)
+    pat = tuple((cfg.layer_mixer(j), cfg.is_moe_layer(j)) for j in range(p))
+    # the pattern must be offset-invariant (periodicity check)
+    for i in range(cfg.num_layers):
+        assert (cfg.layer_mixer(i), cfg.is_moe_layer(i)) == pat[i % p], cfg.name
+    return pat
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _sublayer_init(key, cfg: ModelConfig, kind: str, is_moe: bool, tp: int) -> Dict:
+    norm_init, _ = make_norm("rmsnorm")
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.d_model),
+                         "norm2": norm_init(cfg.d_model)}
+    if kind == "attention":
+        p["mixer"] = attn.attention_init(k1, cfg, tp)
+    elif kind == "mamba":
+        p["mixer"] = mam.mamba_init(k1, cfg)
+    elif kind == "rwkv6":
+        p["mixer"] = rwk.time_mix_init(k1, cfg, tp)
+    else:
+        raise ValueError(kind)
+    if kind == "rwkv6":
+        p["mlp"] = rwk.channel_mix_init(k2, cfg)
+    elif is_moe:
+        p["mlp"] = moe_mod.moe_init(k2, cfg.d_model, cfg.moe, cfg.glu)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.glu)
+    return p
+
+
+def superblock_init(key, cfg: ModelConfig, tp: int) -> Dict:
+    pat = sublayer_pattern(cfg)
+    keys = jax.random.split(key, len(pat))
+    return {f"sub_{j}": _sublayer_init(keys[j], cfg, kind, is_moe, tp)
+            for j, (kind, is_moe) in enumerate(pat)}
+
+
+def model_init(key, cfg: ModelConfig, tp: int = 1) -> Dict:
+    period = pattern_period(cfg)
+    n_super = cfg.num_layers // period
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, n_super)
+    blocks = [superblock_init(layer_keys[i], cfg, tp) for i in range(n_super)]
+    layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    norm_init, _ = make_norm("rmsnorm")
+    params = {"embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model),
+              "layers": layers,
+              "final_norm": norm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embedding_init(k_head, cfg.vocab_size, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-sublayer caches (decode)
+# ---------------------------------------------------------------------------
+def _sublayer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    tp: int):
+    if kind == "attention":
+        return attn.init_kv_cache(cfg, batch, max_len, tp)
+    if kind == "mamba":
+        return mam.init_mamba_cache(cfg, batch)
+    if kind == "rwkv6":
+        return rwk.init_rwkv_cache(cfg, batch, tp)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int = 1):
+    pat = sublayer_pattern(cfg)
+    n_super = cfg.num_layers // len(pat)
+    one = {f"sub_{j}": _sublayer_cache(cfg, kind, batch, max_len, tp)
+           for j, (kind, _) in enumerate(pat)}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape), one)
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+def _sublayer_apply(sub: Dict, cfg: ModelConfig, kind: str, is_moe: bool,
+                    x: jnp.ndarray, positions: jnp.ndarray,
+                    policy: PrecisionPolicy, tp: int,
+                    cache=None, decode: bool = False):
+    """Returns (x, new_cache, aux)."""
+    _, norm = make_norm("rmsnorm")
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(sub["norm1"], x, cfg.norm_eps)
+    new_cache = cache
+    if kind == "attention":
+        if decode:
+            out, new_cache = attn.decode_attention_apply(sub["mixer"], cfg, h,
+                                                         cache, policy)
+        else:
+            out = attn.attention_apply(sub["mixer"], cfg, h, positions, policy)
+            if cache is not None:
+                new_cache = _prefill_kv(sub["mixer"], cfg, h, positions, cache,
+                                        policy)
+    elif kind == "mamba":
+        if decode:
+            out, new_cache = mam.mamba_decode_step(sub["mixer"], cfg, h, cache,
+                                                   policy)
+        else:
+            if cache is not None:
+                out, new_cache = mam.mamba_apply(sub["mixer"], cfg, h, policy,
+                                                 return_state=True)
+            else:
+                out = mam.mamba_apply(sub["mixer"], cfg, h, policy)
+    elif kind == "rwkv6":
+        if decode:
+            y, s_new, x_last = rwk.time_mix_decode(sub["mixer"], cfg, h[:, 0],
+                                                   cache.s, cache.x_tmix, tp,
+                                                   policy)
+            out = y[:, None] if y.ndim == 2 else y
+        else:
+            out, s_new, x_last = rwk.time_mix_apply(
+                sub["mixer"], cfg, h,
+                jnp.zeros_like(h[:, 0]) if cache is None else cache.x_tmix,
+                tp, policy)
+        if cache is not None:
+            new_cache = rwk.RWKVCache(s_new, x_last, cache.x_cmix)
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    h2 = norm(sub["norm2"], x, cfg.norm_eps)
+    if kind == "rwkv6":
+        if decode:
+            out2, x_last2 = rwk.channel_mix_decode(sub["mlp"], h2[:, 0],
+                                                   new_cache.x_cmix, policy)
+            out2 = out2[:, None]
+        else:
+            prev = (jnp.zeros_like(h2[:, 0]) if new_cache is None
+                    else new_cache.x_cmix)
+            out2, x_last2 = rwk.channel_mix_apply(sub["mlp"], h2, prev, policy)
+        if new_cache is not None:
+            new_cache = rwk.RWKVCache(new_cache.s, new_cache.x_tmix, x_last2)
+    elif is_moe:
+        out2, aux = moe_mod.moe_apply(sub["mlp"], cfg.moe, h2, cfg.act,
+                                      cfg.glu, policy)
+    else:
+        out2 = mlp_apply(sub["mlp"], h2, cfg.act, cfg.glu, policy)
+    return x + out2, new_cache, aux
+
+
+def _prefill_kv(mix_params, cfg, h, positions, cache, policy):
+    """Recompute k/v over the prefill window and write into the cache."""
+    q, k, v = attn._project_qkv(mix_params, cfg, h, positions, policy)
+    s = k.shape[1]
+    t = cache.k.shape[1]
+    ks = vs = None
+    if cache.quantized:
+        k, ks = attn._cache_quant(k)
+        v, vs = attn._cache_quant(v)
+
+    def write(buf, val):
+        if val is None:
+            return None
+        if s >= t:        # keep only the trailing window, ring-aligned so
+            # that position p lands in slot p % t (decode's ring writes)
+            shift = (s - t) % t
+            return jnp.roll(val[:, s - t:], shift, axis=1).astype(buf.dtype)
+        return jax.lax.dynamic_update_slice(buf, val.astype(buf.dtype),
+                                            (0, 0, 0, 0))
+    if cache.quantized:
+        return attn.KVCache(write(cache.k, k), write(cache.v, v),
+                            cache.pos + s,
+                            write(cache.k_scale, ks),
+                            write(cache.v_scale, vs))
+    return attn.KVCache(write(cache.k, k), write(cache.v, v), cache.pos + s)
+
+
+# ---------------------------------------------------------------------------
+# Segment scans
+# ---------------------------------------------------------------------------
+def _segment_scan(seg_params, cfg: ModelConfig, x, positions,
+                  policy: PrecisionPolicy, tp: int, caches=None,
+                  decode: bool = False):
+    """Scan a segment's super-blocks.  Returns (x, new_caches, aux_sum)."""
+    pat = sublayer_pattern(cfg)
+
+    def block(x, blk_params, blk_cache):
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_blk_cache = {} if blk_cache is not None else None
+        for j, (kind, is_moe) in enumerate(pat):
+            c = None if blk_cache is None else blk_cache[f"sub_{j}"]
+            x, c2, aux = _sublayer_apply(blk_params[f"sub_{j}"], cfg, kind,
+                                         is_moe, x, positions, policy, tp,
+                                         c, decode)
+            if new_blk_cache is not None:
+                new_blk_cache[f"sub_{j}"] = c2
+            aux_tot = aux_tot + aux
+        return x, new_blk_cache, aux_tot
+
+    if cfg.remat:
+        ckpt_policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots" else None)
+        block = jax.checkpoint(block, static_argnums=(), policy=ckpt_policy)
+        if cfg.remat_group and not cfg.scan_layers:
+            # probes mimic the sqrt-remat double-recompute cost structure
+            block = jax.checkpoint(block, static_argnums=())
+
+    if not cfg.scan_layers:          # unrolled (cost probes, tiny models)
+        n = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i in range(n):
+            blk_params = jax.tree_util.tree_map(lambda a: a[i], seg_params)
+            blk_cache = (None if caches is None else
+                         jax.tree_util.tree_map(lambda a: a[i], caches))
+            x, nc, a = block(x, blk_params, blk_cache)
+            aux = aux + a
+            new_caches.append(nc)
+        if caches is None:
+            return x, None, aux
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_caches)
+        return x, stacked, aux
+
+    if caches is None:
+        def body(carry, blk_params):
+            x, aux = carry
+            x, _, a = block(x, blk_params, None)
+            return (x, aux + a), None
+
+        g = cfg.remat_group
+        n = jax.tree_util.tree_leaves(seg_params)[0].shape[0]
+        if cfg.remat and g and n % max(g, 1) == 0 and n >= g > 0:
+            # sqrt remat: outer scan over groups of g blocks, each group
+            # checkpointed as a unit (saves n/g + g boundaries, not n)
+            grouped = jax.tree_util.tree_map(
+                lambda a: a.reshape(n // g, g, *a.shape[1:]), seg_params)
+
+            @jax.checkpoint
+            def group_body(carry, grp_params):
+                return jax.lax.scan(body, carry, grp_params)[0], None
+            (x, aux), _ = jax.lax.scan(
+                group_body, (x, jnp.zeros((), jnp.float32)), grouped)
+            return x, None, aux
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   seg_params)
+        return x, None, aux
+
+    def body(carry, inp):
+        blk_params, blk_cache = inp
+        x, aux = carry
+        x, new_cache, a = block(x, blk_params, blk_cache)
+        return (x, aux + a), new_cache
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (seg_params, caches))
+    return x, new_caches, aux
+
+
+def _slice_stack(tree, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+
+# ---------------------------------------------------------------------------
+# Public model API
+# ---------------------------------------------------------------------------
+class LMOutput(NamedTuple):
+    logits: jnp.ndarray
+    cache: Any
+    aux_loss: jnp.ndarray
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            plan: Optional[PartitionPlan] = None, tp: int = 1,
+            cache=None, decode: bool = False,
+            frontend_embeds: Optional[jnp.ndarray] = None) -> LMOutput:
+    """Unified forward.
+
+    * train/prefill: tokens [B, S], cache None or prefill-target cache
+    * decode: tokens [B, 1], cache required
+    """
+    period = pattern_period(cfg)
+    plan = plan or PartitionPlan.uniform(cfg.num_layers)
+    plan = plan.align_to_period(period, cfg.num_layers)
+    plan.validate(cfg.num_layers, period)
+
+    x = embed(params["embed"], tokens,
+              plan.embed_policy.precision.compute_dtype)
+    if frontend_embeds is not None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    if decode:
+        start = cache_position(cfg, cache)
+        positions = jnp.broadcast_to(start, (x.shape[0], 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                     x.shape[:2])
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache_parts = []
+    for seg in plan.segments:
+        lo, hi = seg.start // period, seg.end // period
+        seg_params = _slice_stack(params["layers"], lo, hi)
+        seg_cache = None if cache is None else _slice_stack(cache, lo, hi)
+        x, seg_new, aux = _segment_scan(seg_params, cfg, x, positions,
+                                        seg.policy, tp, seg_cache, decode)
+        new_cache_parts.append(seg_new)
+        aux_total = aux_total + aux
+
+    _, norm = make_norm("rmsnorm")
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = lm_logits(table, x, plan.head_policy)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = jax.tree_util.tree_map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *new_cache_parts)
+    return LMOutput(logits, new_cache, aux_total)
+
+
+def cache_position(cfg: ModelConfig, cache) -> jnp.ndarray:
+    """Current decode position from the first attention cache (or 0-d int)."""
+    leaves = jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(lambda x: x, cache))
+    # attention caches carry pos as an int32 scalar per layer stack
+    for leaf in leaves:
+        if leaf.dtype == jnp.int32 and leaf.ndim == 1:
+            return leaf[0]
+    return jnp.zeros((), jnp.int32)
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, plan: Optional[PartitionPlan] = None,
+            tp: int = 1,
+            frontend_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    out = forward(params, cfg, tokens, plan, tp,
+                  frontend_embeds=frontend_embeds)
+    logits = out.logits[:, -tokens.shape[1]:]   # skip frontend positions
+    return cross_entropy(logits, labels) + AUX_LOSS_COEF * out.aux_loss
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray, cache,
+                plan: Optional[PartitionPlan] = None, tp: int = 1) -> LMOutput:
+    return forward(params, cfg, tokens, plan, tp, cache=cache, decode=True)
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray, cache,
+            plan: Optional[PartitionPlan] = None, tp: int = 1,
+            frontend_embeds: Optional[jnp.ndarray] = None) -> LMOutput:
+    return forward(params, cfg, tokens, plan, tp, cache=cache, decode=False,
+                   frontend_embeds=frontend_embeds)

@@ -1,0 +1,70 @@
+"""AdamW with cosine schedule, global-norm clipping and microbatch
+gradient accumulation — the training substrate.
+
+Optimizer state shards exactly like the parameters (ZeRO-1 comes for free
+for fsdp archs, whose params already shard over (data, model)).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def init(params, dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=dtype)
+    return AdamWState(jax.tree_util.tree_map(zeros, params),
+                      jax.tree_util.tree_map(zeros, params),
+                      jnp.zeros((), jnp.int32))
+
+
+def cosine_lr(tc: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    return tc.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def apply_updates(params, grads, state: AdamWState,
+                  tc: TrainConfig) -> Tuple[Any, AdamWState, jnp.ndarray]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    count = state.count + 1
+    lr = cosine_lr(tc, count)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        st_dtype = m.dtype                       # optimizer-state dtype
+        mf = tc.b1 * m.astype(jnp.float32) + (1 - tc.b1) * g
+        vf = tc.b2 * v.astype(jnp.float32) + (1 - tc.b2) * jnp.square(g)
+        mhat = mf / (1 - tc.b1 ** count)
+        vhat = vf / (1 - tc.b2 ** count)
+        step = mhat / (jnp.sqrt(vhat) + 1e-8)
+        decay = tc.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return ((p - lr * (step + decay)).astype(p.dtype),
+                mf.astype(st_dtype), vf.astype(st_dtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(new_mu, new_nu, count), gnorm

@@ -1,0 +1,97 @@
+"""Int8 gradient compression for the cross-pod DP hop.
+
+The inter-pod links are the scarcest bandwidth in the production mesh
+(DCN/ICI trunk vs intra-pod ICI).  This implements the standard
+chunk-scaled int8 all-reduce: each pod quantizes its gradient shard with a
+per-chunk fp32 scale, all-gathers the (int8, scale) pairs over the pod
+axis, and averages the dequantized copies — 4x fewer bytes on the trunk
+than an fp32 ring all-reduce, ~2x vs bf16.  Reuses the MPAI quantization
+machinery (symmetric absmax), applied to a different tensor class.
+
+Error feedback (residual carrying) keeps the bias bounded across steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 2048
+QMAX = 127.0
+
+
+def _chunk_quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % CHUNK
+    flat = jnp.pad(flat, (0, pad))
+    c = flat.reshape(-1, CHUNK)
+    scale = jnp.maximum(jnp.max(jnp.abs(c), axis=1, keepdims=True), 1e-12) / QMAX
+    q = jnp.clip(jnp.round(c / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def _chunk_dequant(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_pmean(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Mean over ``axis_name`` moving int8+scales instead of fp32.
+
+    Must run inside shard_map/pmap with ``axis_name`` bound.
+    """
+    q, scale = _chunk_quant(x)
+    qs = jax.lax.all_gather(q, axis_name)           # [P, nchunk, CHUNK] int8
+    ss = jax.lax.all_gather(scale, axis_name)       # [P, nchunk, 1] f32
+    deq = qs.astype(jnp.float32) * ss
+    mean = jnp.mean(deq, axis=0)
+    return _reshape(mean, x.shape)
+
+
+def _reshape(c: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = c.reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_grad_mean(grads: Any, axis_name: str) -> Any:
+    """Tree-wide compressed mean (large leaves only; small ones go fp32)."""
+    def one(g):
+        if g.size >= CHUNK:
+            return compressed_pmean(g, axis_name)
+        return jax.lax.pmean(g, axis_name)
+    return jax.tree_util.tree_map(one, grads)
+
+
+class ErrorFeedback:
+    """Residual accumulator: feed ``apply`` the raw grad, get the
+    compressed-communicated grad plus carried quantization residual."""
+
+    @staticmethod
+    def init(grads):
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads, residual, axis_name: str):
+        def one(g, r):
+            gf = g.astype(jnp.float32) + r
+            if g.size >= CHUNK:
+                q, scale = _chunk_quant(gf)
+                local_deq = _reshape((q.astype(jnp.float32) * scale), gf.shape)
+                new_r = gf - local_deq
+                mean = compressed_pmean(gf, axis_name)
+                return mean.astype(g.dtype), new_r
+            return jax.lax.pmean(gf, axis_name).astype(g.dtype), jnp.zeros_like(gf)
+        pairs = jax.tree_util.tree_map(one, grads, residual)
+        out = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        res = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return out, res

@@ -1,0 +1,93 @@
+"""UrsoNet training/eval harness on the synthetic pose task — shared by
+the Table I benchmark, the pose example, and the QAT-beats-PTQ test.
+
+The four Table I software conditions map to (backbone, head) policies:
+  fp32 baseline : (bf16 raw,  fp32 raw)
+  int8 PTQ      : (int8 quant, int8 quant)     -- trained fp32, served int8
+  int8 QAT      : (int8 fake -> int8 quant, same)
+  MPAI          : (int8 fake -> int8 quant, bf16 raw)  -- partition-aware
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import PrecisionPolicy
+from repro.data.pipeline import pose_batch
+from repro.models.cnn import (UrsoNetConfig, pose_loss, pose_metrics,
+                              ursonet_apply, ursonet_init)
+from repro.optim import adamw
+from repro.configs.base import TrainConfig
+
+
+def train_ursonet(cfg: UrsoNetConfig,
+                  backbone_policy: PrecisionPolicy,
+                  head_policy: PrecisionPolicy,
+                  steps: int = 200, batch: int = 16, lr: float = 3e-3,
+                  seed: int = 0):
+    tc = TrainConfig(learning_rate=lr, warmup_steps=10, total_steps=steps,
+                     weight_decay=0.0, grad_clip=1.0)
+    params = ursonet_init(jax.random.PRNGKey(seed), cfg)
+    opt = adamw.init(params)
+
+    def loss_fn(p, images, loc, quat):
+        pl, pq = ursonet_apply(p, cfg, images, backbone_policy, head_policy)
+        return pose_loss(pl, pq, loc, quat)
+
+    @jax.jit
+    def step(p, opt, images, loc, quat):
+        l, g = jax.value_and_grad(loss_fn)(p, images, loc, quat)
+        p, opt, _ = adamw.apply_updates(p, g, opt, tc)
+        return p, opt, l
+
+    history = []
+    for s in range(steps):
+        b = pose_batch(batch, s, seed=seed, image_hw=cfg.image_hw)
+        params, opt, l = step(params, opt, b["images"], b["loc"], b["quat"])
+        if s % 25 == 0 or s == steps - 1:
+            history.append((s, float(l)))
+    return params, history
+
+
+def eval_ursonet(params, cfg: UrsoNetConfig,
+                 backbone_policy: PrecisionPolicy,
+                 head_policy: PrecisionPolicy,
+                 batches: int = 8, batch: int = 16, seed: int = 1000
+                 ) -> Tuple[float, float]:
+    """Returns (LOCE meters, ORIE degrees) on held-out batches."""
+    fn = jax.jit(lambda p, im: ursonet_apply(p, cfg, im, backbone_policy,
+                                             head_policy))
+    loces, ories = [], []
+    for s in range(batches):
+        b = pose_batch(batch, 10_000 + s, seed=seed, image_hw=cfg.image_hw)
+        loc, quat = fn(params, b["images"])
+        l, o = pose_metrics(loc, quat, b["loc"], b["quat"])
+        loces.append(float(l))
+        ories.append(float(o))
+    return sum(loces) / len(loces), sum(ories) / len(ories)
+
+
+POLICIES: Dict[str, Tuple[PrecisionPolicy, PrecisionPolicy,
+                          PrecisionPolicy, PrecisionPolicy]] = {
+    # name: (train_backbone, train_head, serve_backbone, serve_head)
+    "fp32": (PrecisionPolicy.bf16(), PrecisionPolicy.fp32(),
+             PrecisionPolicy.bf16(), PrecisionPolicy.fp32()),
+    "int8_ptq": (PrecisionPolicy.bf16(), PrecisionPolicy.fp32(),
+                 PrecisionPolicy.int8(), PrecisionPolicy.int8()),
+    "int8_qat": (PrecisionPolicy.int8_qat(), PrecisionPolicy.int8_qat(),
+                 PrecisionPolicy.int8(), PrecisionPolicy.int8()),
+    "mpai": (PrecisionPolicy.int8_qat(), PrecisionPolicy.bf16(),
+             PrecisionPolicy.int8(), PrecisionPolicy.bf16()),
+}
+
+
+def run_condition(name: str, cfg: UrsoNetConfig, steps: int = 200,
+                  batch: int = 16, seed: int = 0):
+    tb, th, sb, sh = POLICIES[name]
+    params, hist = train_ursonet(cfg, tb, th, steps=steps, batch=batch,
+                                 seed=seed)
+    loce, orie = eval_ursonet(params, cfg, sb, sh, batch=batch)
+    return {"condition": name, "loce": loce, "orie": orie,
+            "final_train_loss": hist[-1][1]}

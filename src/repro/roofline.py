@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``;
+collective_bytes from parsing the (partitioned, pre-SPMD) HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+op, summing *operand* sizes (resolved through a def-map of named values).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) measures how much of the
+compiled compute is useful (remat/redundancy waste shows up as a low
+ratio).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# TPU v5e constants (per chip)
+PEAK_BF16 = 197e12          # FLOP/s
+PEAK_INT8 = 394e12          # OP/s
+HBM_BW = 819e9              # B/s
+LINK_BW = 50e9              # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of one HLO type string (sums tuple elements)."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in an HLO module text."""
+    defs: Dict[str, float] = {}
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1).lstrip("%"), m.group(2)
+        # record this value's result bytes (type prefix of rhs)
+        defs[name] = _shape_bytes(rhs.split(" ", 1)[0]) or _shape_bytes(
+            rhs[:rhs.find(")") + 1] if "(" in rhs else rhs)
+        kind = next((c for c in _COLLECTIVES
+                     if re.search(rf"\b{c}(?:-start|-done)?\(", rhs)), None)
+        if kind is None:
+            continue
+        if re.search(rf"\b{kind}-done\(", rhs):
+            continue                      # avoid double count of async pairs
+        # operand names inside the call parens (up to the matching close)
+        lo = rhs.find("(")
+        hi = rhs.find(")", lo)
+        call = rhs[lo:hi + 1]
+        ops = re.findall(r"%?([\w.\-]+)(?:,|\))", call)
+        op_bytes = sum(defs.get(o, 0.0) for o in ops)
+        if op_bytes == 0.0:               # fallback: result size
+            op_bytes = _shape_bytes(rhs.split(" ", 1)[0])
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + op_bytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    """Per-device quantities: ``compiled.cost_analysis()`` and the
+    optimized-HLO collective parse are both per-partition in an SPMD
+    module, so globals are (per-device x chips) and the spec's
+    global/(chips*peak) formulas reduce to per_device/peak."""
+    arch: str
+    shape: str
+    mesh: Tuple[int, ...]
+    chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    collective_bytes: float     # per device
+    model_flops: float          # global (6*N_active*D)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = (self.hlo_flops * self.chips) / (self.chips * PEAK_BF16)
+        self.memory_s = (self.hlo_bytes * self.chips) / (self.chips * HBM_BW)
+        self.collective_s = (self.collective_bytes * self.chips) / (
+            self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs MFU bound implied by the dominant term."""
+        if self.step_s == 0:
+            return 0.0
+        return self.model_flops / (self.step_s * self.chips * PEAK_BF16)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape,
+            "mesh": "x".join(map(str, self.mesh)), "chips": self.chips,
+            "hlo_gflops": round(self.hlo_flops / 1e9, 2),
+            "hlo_gbytes": round(self.hlo_bytes / 1e9, 3),
+            "coll_gbytes": round(self.collective_bytes / 1e9, 3),
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "dominant": self.dominant,
+            "model_gflops": round(self.model_flops / 1e9, 2),
+            "useful_ratio": round(self.useful_flops_ratio, 3),
+            "roofline_frac": round(self.roofline_fraction, 4),
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training; 2*N_active*tokens for single forward."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,131 @@
+"""Paged KV cache — vLLM-style block-table memory management for serving.
+
+The dense per-request cache allocates max_len for every slot; with mixed
+request lengths most of it is dead.  Here KV storage is a shared pool of
+fixed-size token blocks; each sequence owns a block table (indices into
+the pool) that grows on demand and frees on completion — fragmentation-
+free reuse across a serving batch, the enabler for continuous batching.
+
+Pure-JAX data plane (gather/scatter on the pool) + a tiny host-side
+allocator; attention against a paged cache gathers the sequence's blocks
+then proceeds exactly like the dense path (equivalence is tested).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagedKVState(NamedTuple):
+    k_pool: jnp.ndarray       # [num_blocks, P, KVp, hd]
+    v_pool: jnp.ndarray
+    block_table: jnp.ndarray  # [B, max_blocks] int32 (-1 = unallocated)
+    lengths: jnp.ndarray      # [B] int32 tokens written per sequence
+
+
+class BlockAllocator:
+    """Host-side free-list over the shared pool."""
+
+    def __init__(self, num_blocks: int):
+        self.free: List[int] = list(range(num_blocks - 1, -1, -1))
+
+    def alloc(self) -> int:
+        if not self.free:
+            raise RuntimeError("KV block pool exhausted")
+        return self.free.pop()
+
+    def release(self, blocks) -> None:
+        for b in blocks:
+            if b >= 0:
+                self.free.append(int(b))
+
+    @property
+    def available(self) -> int:
+        return len(self.free)
+
+
+def init_paged_cache(batch: int, num_blocks: int, block_size: int,
+                     kv_heads: int, head_dim: int,
+                     dtype=jnp.bfloat16) -> PagedKVState:
+    max_blocks = num_blocks  # upper bound; tables are mostly -1
+    return PagedKVState(
+        jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        -jnp.ones((batch, max_blocks), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def ensure_blocks(state: PagedKVState, alloc: BlockAllocator,
+                  new_tokens: np.ndarray) -> PagedKVState:
+    """Host step: grow each sequence's table to cover len+new tokens."""
+    p = state.k_pool.shape[1]
+    table = np.asarray(state.block_table).copy()
+    lengths = np.asarray(state.lengths)
+    for i, add in enumerate(np.asarray(new_tokens)):
+        need = -(-(int(lengths[i]) + int(add)) // p)
+        have = int((table[i] >= 0).sum())
+        for j in range(have, need):
+            table[i, j] = alloc.alloc()
+    return state._replace(block_table=jnp.asarray(table))
+
+
+def release_sequence(state: PagedKVState, alloc: BlockAllocator,
+                     seq: int) -> PagedKVState:
+    table = np.asarray(state.block_table).copy()
+    alloc.release(table[seq][table[seq] >= 0])
+    table[seq] = -1
+    lengths = np.asarray(state.lengths).copy()
+    lengths[seq] = 0
+    return state._replace(block_table=jnp.asarray(table),
+                          lengths=jnp.asarray(lengths))
+
+
+@jax.jit
+def append_tokens(state: PagedKVState, k: jnp.ndarray,
+                  v: jnp.ndarray) -> PagedKVState:
+    """Write one new token per sequence.  k, v: [B, KVp, hd]."""
+    p = state.k_pool.shape[1]
+    blk_idx = state.lengths // p
+    blk = jnp.take_along_axis(state.block_table, blk_idx[:, None],
+                              axis=1)[:, 0]                    # [B]
+    off = state.lengths % p
+    k_pool = state.k_pool.at[blk, off].set(k.astype(state.k_pool.dtype))
+    v_pool = state.v_pool.at[blk, off].set(v.astype(state.v_pool.dtype))
+    return PagedKVState(k_pool, v_pool, state.block_table,
+                        state.lengths + 1)
+
+
+def gather_kv(state: PagedKVState, max_len: int
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Materialize each sequence's KV up to max_len.
+
+    Returns (k [B, max_len, KVp, hd], v likewise, valid [B, max_len]).
+    """
+    p = state.k_pool.shape[1]
+    nb = -(-max_len // p)
+    table = jnp.where(state.block_table[:, :nb] >= 0,
+                      state.block_table[:, :nb], 0)
+    k = state.k_pool[table]                    # [B, nb, P, KVp, hd]
+    v = state.v_pool[table]
+    b = k.shape[0]
+    k = k.reshape(b, nb * p, *k.shape[3:])[:, :max_len]
+    v = v.reshape(b, nb * p, *v.shape[3:])[:, :max_len]
+    valid = jnp.arange(max_len)[None, :] < state.lengths[:, None]
+    return k, v, valid
+
+
+def paged_decode_attention(q: jnp.ndarray, state: PagedKVState,
+                           max_len: int) -> jnp.ndarray:
+    """q: [B, KVp, gp, hd] (one token) -> [B, KVp, gp, hd]."""
+    import math
+    k, v, valid = gather_kv(state, max_len)
+    hd = q.shape[-1]
+    scores = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

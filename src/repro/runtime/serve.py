@@ -1,0 +1,75 @@
+"""Batched serving loop: request queue -> bounded batching window ->
+prefill -> greedy decode.
+
+Straggler mitigation at serve time: the batching window is bounded (a
+request waits at most ``window`` flushes), and batches are padded to a
+fixed set of bucket sizes so every flush hits a pre-compiled program —
+no compile stalls in the serving path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.partition import PartitionPlan
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new: int = 8
+    output: Optional[np.ndarray] = None
+
+
+class BatchingServer:
+    def __init__(self, params, cfg: ModelConfig,
+                 plan: Optional[PartitionPlan] = None, tp: int = 1,
+                 max_batch: int = 8, prompt_len: int = 32,
+                 max_len: int = 64):
+        self.params, self.cfg, self.plan, self.tp = params, cfg, plan, tp
+        self.max_batch, self.prompt_len, self.max_len = (max_batch,
+                                                         prompt_len, max_len)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._prefill = jax.jit(
+            lambda p, toks, cache: T.prefill(p, cfg, toks, cache, plan, tp))
+        self._decode = jax.jit(
+            lambda p, tok, cache: T.decode_step(p, cfg, tok, cache, plan, tp))
+
+    def submit(self, req: Request) -> None:
+        assert req.prompt.shape[0] <= self.prompt_len
+        self.queue.append(req)
+
+    def flush(self) -> List[Request]:
+        """Serve up to max_batch queued requests (one bounded window)."""
+        if not self.queue:
+            return []
+        batch = self.queue[:self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+        b = self.max_batch                        # fixed bucket: no recompiles
+        toks = np.zeros((b, self.prompt_len), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, -r.prompt.shape[0]:] = r.prompt   # left-pad
+        cache = T.init_cache(self.cfg, b, self.max_len, self.tp)
+        out = self._prefill(self.params, jnp.asarray(toks), cache)
+        cache = out.cache
+        last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
+        max_new = max(r.max_new for r in batch)
+        gen = [np.asarray(last)]
+        for _ in range(max_new - 1):
+            out = self._decode(self.params, last.astype(jnp.int32), cache)
+            cache = out.cache
+            last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
+            gen.append(np.asarray(last))
+        gen = np.concatenate(gen, axis=1)         # [b, max_new]
+        for i, r in enumerate(batch):
+            r.output = gen[i, :r.max_new]
+            self.done[r.rid] = r
+        return batch

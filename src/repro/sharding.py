@@ -1,0 +1,200 @@
+"""PartitionSpec rules: how every parameter, batch and cache shards over
+the production mesh.
+
+Axes: ``pod`` (cross-pod DP / MPAI stage axis), ``data`` (DP; also the
+FSDP shard axis for archs flagged ``fsdp=True``), ``model`` (TP/EP).
+
+Rules are name-based on the *trailing* dims of each leaf; extra leading
+dims (the scan-stack layer dim, MoE expert dims handled explicitly) pad
+with None.  This keeps one table covering every architecture family.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+
+MODEL = "model"
+
+
+def _fsdp_axis(cfg: ModelConfig, mesh_cfg: Optional[MeshConfig] = None):
+    if not cfg.fsdp:
+        return None
+    if mesh_cfg is not None and "pod" in mesh_cfg.axes:
+        return ("pod", "data")        # ZeRO-3 over every DP axis
+    return "data"
+
+
+# trailing-dim spec tables -------------------------------------------------
+def _trailing_spec(name: str, ndim: int, cfg: ModelConfig,
+                   mesh_cfg: Optional[MeshConfig] = None):
+    f = _fsdp_axis(cfg, mesh_cfg)
+    # MoE expert tensors (expert dim sharded over model = EP)
+    if name in ("w_in", "w_gate") and ndim == 3:
+        return (MODEL, f, None)
+    if name == "w_out" and ndim == 3:
+        return (MODEL, None, f)
+    table = {
+        # attention
+        "wq": (f, MODEL), "wk": (f, MODEL), "wv": (f, MODEL),
+        "wo": (MODEL, f),
+        # dense MLP
+        "w_in": (f, MODEL), "w_gate": (f, MODEL), "w_out": (MODEL, f),
+        # router (tiny, accuracy-critical: replicated)
+        "router": (None, None),
+        # mamba
+        "in_proj": (f, MODEL), "out_proj": (MODEL, f),
+        "x_proj": (MODEL, None), "dt_proj": (None, MODEL),
+        "conv_w": (None, MODEL), "conv_b": (MODEL,),
+        "dt_bias": (MODEL,), "A_log": (MODEL, None), "D": (MODEL,),
+        # rwkv time-mix
+        "w_r": (f, MODEL), "w_k": (f, MODEL), "w_v": (f, MODEL),
+        "w_g": (f, MODEL), "w_o": (MODEL, f),
+        "w0": (MODEL,), "wB": (None, MODEL), "u": (MODEL,),
+        "gn_scale": (MODEL,), "gn_bias": (MODEL,),
+        # rwkv channel-mix
+        "w_kc": (f, MODEL), "w_vc": (MODEL, f), "w_rc": (f, MODEL),
+    }
+    return table.get(name)
+
+
+def _leaf_name(path) -> str:
+    """Last meaningful name: skips QTensor field entries (values/scale are
+    SequenceKey/GetAttrKey under the named weight)."""
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey) and \
+                entry.name not in ("values", "scale"):
+            return entry.name
+    return ""
+
+
+def _dp_axes(mesh_cfg: Optional[MeshConfig]):
+    axes = mesh_cfg.axes if mesh_cfg is not None else ("data", "model")
+    return tuple(a for a in ("pod", "data", "model") if a in axes)
+
+
+def _sanitize(spec_tuple, shape, mesh_cfg: Optional[MeshConfig]):
+    """None out axes on size-1 dims (QTensor scales) and assert the rest."""
+    out = []
+    for dim, ax in zip(shape, spec_tuple):
+        out.append(None if (ax is not None and dim == 1) else ax)
+    return tuple(out)
+
+
+def param_specs(cfg: ModelConfig, params_shape,
+                mesh_cfg: Optional[MeshConfig] = None) -> object:
+    """PartitionSpec pytree matching ``params_shape`` (a tree of arrays or
+    ShapeDtypeStructs).  Handles QTensor leaves (values share the float
+    weight's spec; broadcast scale dims replicate)."""
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape)) if mesh_cfg else \
+        {"data": 16, "model": 16}
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        top = str(path[0].key) if isinstance(path[0], jax.tree_util.DictKey) else ""
+        in_stack = top == "layers"
+        trail_nd = nd - (1 if in_stack else 0)
+        if cfg.sharding_mode == "fsdp" and cfg.moe is None:
+            comb = _dp_axes(mesh_cfg)
+            total = 1
+            for a in comb:
+                total *= sizes.get(a, 1)
+            if top in ("embed", "lm_head"):
+                if leaf.shape[0] % total == 0:
+                    return P(comb, None)
+                return P(MODEL, None)      # vocab not mesh-divisible
+            if trail_nd >= 2:
+                # shard the first trailing dim divisible by the full mesh
+                dims = leaf.shape[-trail_nd:]
+                tsp = [None] * trail_nd
+                for i, dsz in enumerate(dims):
+                    if dsz % total == 0:
+                        tsp[i] = comb
+                        break
+                tsp = _sanitize(tuple(tsp), dims, mesh_cfg)
+                return P(*(((None,) if in_stack else ()) + tuple(tsp)))
+            return P()
+        if top in ("embed", "lm_head"):
+            # vocab-sharded only: FSDP-sharding the table's d_model dim makes
+            # the token gather unpartitionable (SPMD full-remat; observed on
+            # llama3-405b) — the table is small relative to the blocks anyway
+            return P(MODEL, None)
+        tspec = _trailing_spec(name, trail_nd, cfg, mesh_cfg)
+        if tspec is None:
+            return P()                                 # norms, scalars, mus
+        assert len(tspec) == trail_nd, (name, leaf.shape, tspec)
+        tspec = _sanitize(tuple(tspec), leaf.shape[-trail_nd:], mesh_cfg)
+        return P(*(((None,) if in_stack else ()) + tuple(tspec)))
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Data / cache / logits specs
+# ---------------------------------------------------------------------------
+def batch_axes(global_batch: int, mesh_cfg: MeshConfig,
+               include_model: bool = False):
+    """Largest prefix of the DP axes that divides the batch."""
+    pool = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in pool if a in mesh_cfg.axes]
+    sizes = {a: mesh_cfg.shape[mesh_cfg.axes.index(a)] for a in axes}
+    chosen, div = [], 1
+    for a in axes:
+        if global_batch % (div * sizes[a]) == 0:
+            chosen.append(a)
+            div *= sizes[a]
+    return tuple(chosen) or None
+
+
+def data_specs(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig):
+    b_ax = batch_axes(shape.global_batch, mesh_cfg,
+                      include_model=cfg.sharding_mode == "fsdp")
+    tok = P(b_ax, None)
+    out = {"tokens": tok}
+    if shape.kind == "train":
+        out["labels"] = tok
+    if cfg.frontend != "none" and shape.kind in ("train", "prefill"):
+        out["frontend_embeds"] = P(b_ax, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, shape: ShapeConfig,
+                mesh_cfg: MeshConfig):
+    """Spec tree matching the stacked decode cache."""
+    b_ax = batch_axes(shape.global_batch, mesh_cfg)
+
+    def spec(path, leaf):
+        nd = len(leaf.shape)
+        name = _leaf_name(path)
+        if nd <= 1:                                   # pos scalars [L]
+            return P()
+        if name in ("k", "v"):                        # [L, B, T, KVp, hd]
+            return P(None, b_ax, None, MODEL, None)
+        if name in ("k_scale", "v_scale"):            # [L, B, T, KVp, 1]
+            return P(None, b_ax, None, MODEL, None)
+        if name == "h":                               # mamba [L, B, di, N]
+            return P(None, b_ax, MODEL, None)
+        if name == "conv":                            # [L, B, k, di]
+            return P(None, b_ax, None, MODEL)
+        if name == "s":                               # rwkv [L, B, Hp, N, N]
+            return P(None, b_ax, MODEL, None, None)
+        if name in ("x_tmix", "x_cmix"):              # [L, B, D]
+            return P(None, b_ax, None)
+        return P(*((None,) * nd))
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def logits_spec(shape: ShapeConfig, mesh_cfg: MeshConfig):
+    return P(batch_axes(shape.global_batch, mesh_cfg), None, MODEL)
+
+
+def make_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

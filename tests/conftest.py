@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device faking here — tests run on
+the real single CPU device; multi-device behaviour is exercised by
+subprocess tests (tests/test_distributed.py) so the device count stays 1
+for everything else."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_dense(**kw):
+    from repro.configs.base import ModelConfig
+    base = dict(name="tiny", family="dense", num_layers=2, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                remat=False)
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,57 @@
+"""Property tests for the TP head-padding layout (DESIGN.md §5): for ANY
+(heads, kv_heads, tp) with kv | heads, the padded layout must be exact —
+every real q head appears once, mapped to its true kv head, and all
+sharding divisibility constraints hold."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import head_layout, kv_slot_map, q_slot_map
+
+
+@st.composite
+def _hkv(draw):
+    kv = draw(st.integers(1, 64))
+    group = draw(st.integers(1, 16))
+    h = kv * group
+    tp = draw(st.sampled_from([1, 2, 4, 8, 16, 32]))
+    return h, kv, tp
+
+
+@given(_hkv())
+@settings(deadline=None, max_examples=200)
+def test_layout_divisibility_and_coverage(hkv):
+    h, kv, tp = hkv
+    lay = head_layout(h, kv, tp)
+    # sharding constraints
+    assert lay.Hp % tp == 0 and lay.KVp % tp == 0
+    assert lay.KVp % kv == 0 and lay.Hp % lay.KVp == 0
+    assert lay.Hp >= h and lay.KVp >= min(kv, lay.KVp)
+    # every real q head appears exactly once
+    smap = np.asarray(q_slot_map(lay))
+    real = smap[smap >= 0]
+    assert sorted(real.tolist()) == list(range(h))
+    # padded mapping preserves the true q->kv association
+    kmap = np.asarray(kv_slot_map(lay))
+    g = h // kv
+    gp = lay.gp
+    for slot, q_real in enumerate(smap):
+        if q_real < 0:
+            continue
+        true_kv = q_real // g
+        padded_kv = slot // gp
+        assert kmap[padded_kv] == true_kv, (h, kv, tp, slot, q_real)
+
+
+@given(_hkv())
+@settings(deadline=None, max_examples=100)
+def test_layout_shard_locality(hkv):
+    """Each TP shard's q heads use only that shard's kv heads."""
+    h, kv, tp = hkv
+    lay = head_layout(h, kv, tp)
+    q_per_shard = lay.Hp // tp
+    kv_per_shard = lay.KVp // tp
+    for shard in range(tp):
+        q_slots = range(shard * q_per_shard, (shard + 1) * q_per_shard)
+        for slot in q_slots:
+            padded_kv = slot // lay.gp
+            assert padded_kv // kv_per_shard == shard

@@ -1,0 +1,98 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 256, 128),          # exactly one block
+    (256, 512, 256),          # multi-block
+    (200, 300, 130),          # ragged (padding path)
+    (8, 1024, 8),             # skinny
+    (384, 128, 512),
+])
+def test_int8_matmul_matches_ref(m, k, n):
+    x = jnp.asarray(RNG.integers(-127, 128, (m, k), dtype=np.int8))
+    w = jnp.asarray(RNG.integers(-127, 128, (k, n), dtype=np.int8))
+    out = ops.int8_matmul(x, w)
+    ref = ops.int8_matmul_ref(x, w)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(128, 128, 128), (128, 512, 256)])
+def test_int8_matmul_block_shapes(bm, bk, bn):
+    x = jnp.asarray(RNG.integers(-127, 128, (bm * 2, bk * 2), dtype=np.int8))
+    w = jnp.asarray(RNG.integers(-127, 128, (bk * 2, bn), dtype=np.int8))
+    out = ops.int8_matmul(x, w, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ops.int8_matmul_ref(x, w)))
+
+
+@pytest.mark.parametrize("m,k", [(256, 128), (100, 64), (8, 2048), (513, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rowwise_quant_matches_ref(m, k, dtype):
+    x = jnp.asarray(RNG.normal(size=(m, k)) * 3).astype(dtype)
+    q, s = ops.rowwise_quant(x)
+    qr, sr = ops.rowwise_quant_ref(x)
+    # jit rewrites /const into *reciprocal -> ULP-level scale differences can
+    # flip an exact .5 tie by one quantum on rare elements
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert diff.max() <= 1
+    assert (diff > 0).mean() < 0.01
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_rowwise_quant_roundtrip_bound():
+    x = jnp.asarray(RNG.normal(size=(64, 128)).astype(np.float32))
+    q, s = ops.rowwise_quant(x)
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(s) - np.asarray(x))
+    assert (err <= np.asarray(s) / 2 + 1e-7).all()
+
+
+@pytest.mark.parametrize("bh,s,d", [(2, 256, 32), (4, 512, 64), (1, 128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(bh, s, d, dtype):
+    q = jnp.asarray(RNG.normal(size=(bh, s, d))).astype(dtype)
+    k = jnp.asarray(RNG.normal(size=(bh, s, d))).astype(dtype)
+    v = jnp.asarray(RNG.normal(size=(bh, s, d))).astype(dtype)
+    from repro.kernels.flash_attention import flash_attention_pallas
+    out = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
+    ref = ops.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_gqa_wrapper():
+    b, s, h, kv, d = 2, 256, 8, 2, 32
+    q = jnp.asarray(RNG.normal(size=(b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)).astype(np.float32))
+    out = ops.flash_attention(q, k, v, bq=128, bk=128)
+    kr = jnp.repeat(k, h // kv, axis=2)
+    vr = jnp.repeat(v, h // kv, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    ref = ops.flash_attention_ref(fold(q), fold(kr), fold(vr))
+    ref = ref.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_flash_attention_causality():
+    """Perturbing future keys must not change earlier outputs."""
+    bh, s, d = 1, 256, 32
+    q = jnp.asarray(RNG.normal(size=(bh, s, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(bh, s, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(bh, s, d)).astype(np.float32))
+    from repro.kernels.flash_attention import flash_attention_pallas
+    out1 = flash_attention_pallas(q, k, v, bq=128, bk=128, interpret=True)
+    k2 = k.at[:, -1].add(100.0)
+    v2 = v.at[:, -1].add(100.0)
+    out2 = flash_attention_pallas(q, k2, v2, bq=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :-1]),
+                               np.asarray(out2[:, :-1]), atol=1e-5)

@@ -1,0 +1,43 @@
+"""int8 KV cache (§Perf iteration): numerics + shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.attention import _cache_deq, _cache_quant
+
+
+def test_cache_quant_roundtrip_error_small():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 64)) * 3
+    q, s = _cache_quant(x)
+    err = np.abs(np.asarray(_cache_deq(q, s)) - np.asarray(x))
+    assert err.max() <= float(s.max()) / 2 + 1e-6
+    assert q.dtype == jnp.int8 and s.shape == (2, 8, 4, 1)
+
+
+def test_int8_cache_decode_close_to_forward():
+    cfg = get_config("qwen3-14b", smoke=True).with_(kv_cache_dtype="int8",
+                                                    remat=False)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    tok1 = jax.random.randint(jax.random.PRNGKey(2), (2, 1), 0,
+                              cfg.vocab_size)
+    cache = T.init_cache(cfg, 2, 24)
+    leaves = jax.tree_util.tree_leaves(cache)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+    out = T.prefill(params, cfg, toks, cache)
+    step = T.decode_step(params, cfg, tok1, out.cache)
+    ref = T.forward(params, cfg, jnp.concatenate([toks, tok1], 1))
+    a = np.asarray(step.logits[:, 0], np.float32)
+    b = np.asarray(ref.logits[:, -1], np.float32)
+    rel = np.abs(a - b).max() / np.abs(b).max()
+    assert rel < 0.05, rel
+
+
+def test_bf16_cache_unchanged_default():
+    cfg = get_config("qwen3-14b", smoke=True)
+    cache = T.init_cache(cfg, 2, 16)
+    leaves = jax.tree_util.tree_leaves(cache)
+    assert not any(l.dtype == jnp.int8 for l in leaves)

@@ -1,0 +1,137 @@
+"""Partition-plan invariants + MPAI scheduler Pareto properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accelerators import PROFILES
+from repro.core.cost_model import (LayerCost, layer_costs_from_convspecs,
+                                   segment_cost, transformer_layer_costs)
+from repro.core.partition import PartitionPlan, Segment
+from repro.core.precision import Precision, PrecisionPolicy
+from repro.core.qat import baseline_plan, serve_plan, train_plan
+from repro.core.scheduler import (best_under_accuracy, mpai_reference_plan,
+                                  pareto_frontier, schedule)
+from repro.models.cnn import ursonet_table1_layers
+
+
+# ---------------------------------------------------------------------------
+# PartitionPlan
+# ---------------------------------------------------------------------------
+def test_mpai_plan_covers_and_validates():
+    plan = PartitionPlan.mpai(24, split=20)
+    plan.validate(24)
+    assert plan.segments[0].policy.precision is Precision.INT8
+    assert plan.segments[-1].policy.precision is Precision.BF16
+
+
+def test_plan_rejects_gap():
+    bad = PartitionPlan((Segment("a", 0, 4, PrecisionPolicy.bf16()),
+                         Segment("b", 6, 8, PrecisionPolicy.bf16())))
+    with pytest.raises(ValueError):
+        bad.validate(8)
+
+
+def test_plan_rejects_misaligned_period():
+    plan = PartitionPlan.mpai(16, split=3)
+    with pytest.raises(ValueError):
+        plan.validate(16, period=8)
+    plan.align_to_period(8, 16).validate(16, period=8)
+
+
+@given(st.integers(2, 64), st.integers(1, 63))
+@settings(deadline=None)
+def test_align_to_period_always_valid(n_layers, split):
+    for period in (1, 2, 4, 8):
+        if n_layers % period:
+            continue
+        plan = PartitionPlan.mpai(n_layers, split=min(split, n_layers))
+        plan.align_to_period(period, n_layers).validate(n_layers, period)
+
+
+def test_qat_lifecycle_conversions():
+    plan = PartitionPlan.mpai(8, split=6)
+    tp = train_plan(plan)
+    assert tp.segments[0].policy.mode == "fake"
+    sp = serve_plan(tp, use_pallas=True)
+    assert sp.segments[0].policy.mode == "quant"
+    assert sp.segments[0].policy.use_pallas
+    bp = baseline_plan(sp)
+    assert all(s.policy.precision is Precision.BF16 for s in bp.segments)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+LAYER_TABLES = st.lists(
+    st.tuples(st.floats(1e6, 1e10), st.floats(1e3, 1e7), st.floats(1e3, 1e6)),
+    min_size=2, max_size=12)
+
+
+def _mk_layers(rows):
+    return [LayerCost(f"l{i}", m, w, a, a) for i, (m, w, a) in enumerate(rows)]
+
+
+@given(LAYER_TABLES)
+@settings(deadline=None, max_examples=25)
+def test_schedule_returns_nondominated_covering_plans(rows):
+    layers = _mk_layers(rows)
+    plans = schedule(layers, ["mpsoc_dpu", "myriadx_vpu", "edge_tpu"])
+    assert plans
+    for p in plans:
+        # coverage + contiguity
+        assert p.assignments[0][0] == 0
+        assert p.assignments[-1][1] == len(layers)
+        for (s0, e0, _), (s1, e1, _) in zip(p.assignments, p.assignments[1:]):
+            assert e0 == s1
+        # non-domination within the returned set
+        assert not any(q.dominates(p) for q in plans if q is not p)
+
+
+def test_pareto_frontier_removes_dominated():
+    layers = _mk_layers([(1e9, 1e6, 1e5)] * 4)
+    # cortex_a53_fp16 has the same precision (-> same accuracy prior) as the
+    # VPU but is strictly slower and hungrier: all-CPU-fp16 must be dominated
+    plans = schedule(layers, ["mpsoc_dpu", "myriadx_vpu", "cortex_a53_fp16"])
+    names = [tuple(p.assignments) for p in plans]
+    assert ((0, 4, "cortex_a53_fp16"),) not in names
+    # while the all-fp32-CPU plan legitimately survives on the accuracy axis
+    plans2 = schedule(layers, ["myriadx_vpu", "cortex_a53"])
+    assert ((0, 4, "cortex_a53"),) in [tuple(p.assignments) for p in plans2]
+
+
+def test_mpai_reference_is_faster_than_vpu_and_near_dpu_accuracy():
+    """Table I's qualitative structure from the cost model."""
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    ref = mpai_reference_plan(layers)
+    vpu = schedule(layers, ["myriadx_vpu"], max_segments=1)[0]
+    dpu = schedule(layers, ["mpsoc_dpu"], max_segments=1)[0]
+    assert ref.latency_s < vpu.latency_s          # MPAI beats full-VPU
+    assert ref.latency_s > dpu.latency_s          # but DPU-only is fastest
+    assert ref.accuracy_penalty < dpu.accuracy_penalty  # ...and less accurate
+
+
+def test_best_under_accuracy_constraint():
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    plans = schedule(layers, ["mpsoc_dpu", "myriadx_vpu"],
+                     accuracy_penalty={"mpsoc_dpu": 0.3})
+    tight = best_under_accuracy(plans, 0.05)
+    loose = best_under_accuracy(plans, 1.0)
+    assert tight is not None and loose is not None
+    assert loose.latency_s <= tight.latency_s
+    assert tight.accuracy_penalty <= 0.05
+
+
+def test_cost_model_monotone_in_flops():
+    prof = PROFILES["tpu_v5e_bf16"]
+    small = segment_cost(_mk_layers([(1e9, 1e6, 1e5)]), prof)
+    big = segment_cost(_mk_layers([(1e12, 1e6, 1e5)]), prof)
+    assert big.compute_s > small.compute_s
+
+
+def test_transformer_layer_costs_cover_all_archs():
+    from repro.configs import ARCH_NAMES, get_config
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        layers = transformer_layer_costs(cfg, 4096)
+        assert len(layers) == cfg.num_layers
+        assert all(l.macs > 0 for l in layers)

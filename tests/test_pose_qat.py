@@ -1,0 +1,61 @@
+"""The paper's central empirical claim at test scale: partition-aware
+training (QAT int8 backbone + high-precision head) serves at near-baseline
+accuracy, while post-training quantization of everything degrades.
+
+Uses a tiny UrsoNet + short training so the suite stays fast; the full
+comparison is benchmarks/table1_ursonet.py."""
+import pytest
+
+from repro.models.cnn import UrsoNetConfig
+from repro.pose import eval_ursonet, run_condition, train_ursonet
+from repro.core.precision import PrecisionPolicy
+
+CFG = UrsoNetConfig(name="test", image_hw=(48, 64), widths=(8, 16),
+                    blocks_per_stage=1, fc_dim=32)
+
+
+@pytest.fixture(scope="module")
+def fp32_trained():
+    return train_ursonet(CFG, PrecisionPolicy.bf16(), PrecisionPolicy.fp32(),
+                         steps=120, batch=16)
+
+
+def test_training_reduces_loss(fp32_trained):
+    _, hist = fp32_trained
+    assert hist[-1][1] < hist[0][1] * 0.7, hist
+
+
+def test_int8_serving_of_fp32_model_changes_outputs(fp32_trained):
+    """PTQ: int8-everything serving visibly perturbs a model not trained
+    for it (at this tiny scale the perturbation can cut either way on a
+    noisy metric; the systematic degradation is asserted at benchmark
+    scale — table1_ursonet).  Here: outputs must differ measurably, and
+    not be wildly better (which would indicate a broken eval path)."""
+    params, _ = fp32_trained
+    base = eval_ursonet(params, CFG, PrecisionPolicy.bf16(),
+                        PrecisionPolicy.fp32(), batches=4)
+    ptq = eval_ursonet(params, CFG, PrecisionPolicy.int8(),
+                       PrecisionPolicy.int8(), batches=4)
+    score = lambda m: m[0] + m[1] / 100
+    assert abs(score(ptq) - score(base)) > 1e-4     # int8 changed outputs
+    assert score(ptq) > score(base) - 0.3           # and is no free lunch
+
+
+def test_mpai_partition_close_to_baseline(fp32_trained):
+    """MPAI condition: QAT backbone + high-precision head ~= baseline,
+    and closer than PTQ-everything."""
+    params_fp32, _ = fp32_trained
+    base = eval_ursonet(params_fp32, CFG, PrecisionPolicy.bf16(),
+                        PrecisionPolicy.fp32(), batches=4)
+    ptq = eval_ursonet(params_fp32, CFG, PrecisionPolicy.int8(),
+                       PrecisionPolicy.int8(), batches=4)
+    params_mpai, _ = train_ursonet(CFG, PrecisionPolicy.int8_qat(),
+                                   PrecisionPolicy.bf16(), steps=120,
+                                   batch=16)
+    mpai = eval_ursonet(params_mpai, CFG, PrecisionPolicy.int8(),
+                        PrecisionPolicy.bf16(), batches=4)
+    score = lambda m: m[0] + m[1] / 100        # LOCE + ORIE blend
+    # MPAI within a modest margin of its own baseline-condition score and
+    # not worse than serving the fp32 model fully quantized
+    assert score(mpai) <= score(ptq) + 0.05
+    assert score(mpai) <= score(base) * 1.5 + 0.1

@@ -1,0 +1,76 @@
+"""Roofline machinery: HLO collective parsing + model-flops accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline import (RooflineReport, _shape_bytes, model_flops,
+                            parse_collectives)
+
+HLO = """
+HloModule test
+fused_computation {
+  ...
+}
+ENTRY main {
+  %p0 = f32[16,1024]{1,0} parameter(0)
+  %p1 = bf16[8,256]{1,0} parameter(1)
+  %ar = f32[16,1024]{1,0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  %ag = bf16[16,256]{1,0} all-gather(%p1), dimensions={0}
+  %cp = f32[16,1024]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  %ars = f32[16,1024]{1,0} all-reduce-start(%p0), replica_groups={}
+  %ard = f32[16,1024]{1,0} all-reduce-done(%ars)
+  ROOT %t = (f32[16,1024]{1,0}) tuple(%cp)
+}
+"""
+
+
+def test_parse_collectives_sums_operand_bytes():
+    st = parse_collectives(HLO)
+    # all-reduce: 16*1024*4 = 65536; plus the async start pair counted once
+    assert st.bytes_by_kind["all-reduce"] == 65536 * 2
+    assert st.count_by_kind["all-reduce"] == 2
+    # all-gather operand: 8*256*2 = 4096
+    assert st.bytes_by_kind["all-gather"] == 4096
+    # collective-permute operand = the all-reduce result (65536)
+    assert st.bytes_by_kind["collective-permute"] == 65536
+    # -done must not double count
+    assert st.total_count == 4
+
+
+def test_shape_bytes_tuple_types():
+    assert _shape_bytes("(f32[2,2]{1,0}, s8[4]{0})") == 16 + 4
+    assert _shape_bytes("bf16[128]{0}") == 256
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = get_config("qwen3-14b")
+    moe = get_config("olmoe-1b-7b")
+    sh = SHAPES["train_4k"]
+    assert model_flops(dense, sh) == 6.0 * dense.param_count() * sh.tokens
+    assert model_flops(moe, sh) < 6.0 * moe.param_count() * sh.tokens
+    assert model_flops(moe, sh) == 6.0 * moe.active_param_count() * sh.tokens
+
+
+def test_roofline_report_terms_and_dominant():
+    rep = RooflineReport(arch="a", shape="s", mesh=(16, 16), chips=256,
+                         hlo_flops=197e12 * 0.1,      # 100 ms compute
+                         hlo_bytes=819e9 * 0.05,      # 50 ms memory
+                         collective_bytes=50e9 * 0.2,  # 200 ms collective
+                         model_flops=1e15)
+    assert abs(rep.compute_s - 0.1) < 1e-9
+    assert abs(rep.memory_s - 0.05) < 1e-9
+    assert abs(rep.collective_s - 0.2) < 1e-9
+    assert rep.dominant == "collective"
+    assert rep.step_s == rep.collective_s
+    r = rep.row()
+    assert r["dominant"] == "collective"
+
+
+def test_active_params_all_archs_positive_and_leq_total():
+    from repro.configs import ARCH_NAMES
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        assert 0 < cfg.active_param_count() <= cfg.param_count(), name

@@ -1,0 +1,70 @@
+"""Sharding-rule validation WITHOUT devices: every param/cache/data spec of
+every full-size architecture must divide evenly on both production meshes.
+This is the cheap static proof behind the compile-level dry-run."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shard
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.configs.base import MULTI_POD, SINGLE_POD
+from repro.launch import specs as S
+
+
+def _axis_sizes(mesh_cfg):
+    return dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+
+
+def _check_divisible(spec_tree, shape_tree, mesh_cfg, ctx):
+    sizes = _axis_sizes(mesh_cfg)
+    leaves_spec = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    leaves_shape = jax.tree_util.tree_leaves(shape_tree)
+    assert len(leaves_spec) == len(leaves_shape), ctx
+    for sp, leaf in zip(leaves_spec, leaves_shape):
+        for dim, axes in zip(leaf.shape, tuple(sp)):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            assert dim % total == 0, (ctx, leaf.shape, tuple(sp), dim, total)
+
+
+@pytest.mark.parametrize("mesh_cfg", [SINGLE_POD, MULTI_POD],
+                         ids=["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_divide(arch, mesh_cfg):
+    cfg = get_config(arch)
+    tree = S.param_structs(cfg, mesh_cfg.tp)
+    specs = shard.param_specs(cfg, tree, mesh_cfg)
+    _check_divisible(specs, tree, mesh_cfg, arch)
+
+
+@pytest.mark.parametrize("mesh_cfg", [SINGLE_POD, MULTI_POD],
+                         ids=["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_cache_and_data_specs_divide(arch, mesh_cfg):
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        if shape.name == "long_500k" and not cfg.supports_long_context():
+            continue
+        data = S.batch_specs(cfg, shape)
+        dspec = shard.data_specs(cfg, shape, mesh_cfg)
+        _check_divisible(dspec, data, mesh_cfg, (arch, shape.name, "data"))
+        if shape.kind == "decode":
+            cache = S.cache_structs(cfg, shape, mesh_cfg.tp)
+            cspec = shard.cache_specs(cfg, cache, shape, mesh_cfg)
+            _check_divisible(cspec, cache, mesh_cfg,
+                             (arch, shape.name, "cache"))
+
+
+def test_batch_axes_fallback():
+    from repro.configs.base import ShapeConfig
+    # batch 1 cannot shard -> replicated
+    assert shard.batch_axes(1, SINGLE_POD) is None
+    # batch 128 on multi-pod: 2*16=32 divides -> (pod, data)
+    assert shard.batch_axes(128, MULTI_POD) == ("pod", "data")
+    # batch 8: only pod (2) divides
+    assert shard.batch_axes(8, MULTI_POD) == ("pod",)

@@ -1,0 +1,101 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: run named (cell x variant) experiments and
+write artifacts to experiments/perf/<tag>.json.
+
+Each variant is hypothesis-driven (see EXPERIMENTS.md §Perf); the driver
+just makes the measurement reproducible:
+
+    PYTHONPATH=src python tools/hillclimb.py <experiment> [...]
+    PYTHONPATH=src python tools/hillclimb.py --list
+"""
+import argparse
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import analyze, lower_cell, probe_costs, roofline_row
+from repro.launch.mesh import make_production_mesh, production_mesh_config
+
+
+def run(tag, arch, shape_name, *, multi_pod=False, plan="bf16",
+        probe=True, tc=None, **overrides):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_cfg = production_mesh_config(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, mesh_cfg, plan, tc=tc)
+    stats = analyze(lowered, cfg, shape, mesh_cfg)
+    if probe:
+        p = probe_costs(cfg, shape, mesh, mesh_cfg, plan, tc=tc)
+        stats["scanned_raw"] = {k: stats.get(k) for k in
+                                ("flops", "hlo_bytes", "collective_bytes")}
+        stats.update(p)
+        stats["roofline"] = roofline_row(cfg, shape, mesh_cfg, stats)
+    stats["variant"] = tag
+    stats["overrides"] = {k: str(v) for k, v in overrides.items()}
+    stats["plan"] = plan
+    stats["wall_s"] = round(time.time() - t0, 1)
+    os.makedirs("experiments/perf", exist_ok=True)
+    with open(f"experiments/perf/{tag}.json", "w") as f:
+        json.dump(stats, f, indent=1)
+    r = stats["roofline"]
+    print(f"{tag}: c/m/x = {r['compute_ms']}/{r['memory_ms']}/"
+          f"{r['collective_ms']} ms dominant={r['dominant']} "
+          f"frac={r['roofline_frac']} useful={r['useful_ratio']} "
+          f"temp/dev={(stats.get('temp_size_in_bytes') or 0)/1e9:.1f}GB",
+          flush=True)
+    return stats
+
+
+EXPERIMENTS = {
+    # cell A: llama3-405b train_4k (worst roofline fraction; memory/compute)
+    "llama_base": lambda: run("llama_base", "llama3-405b", "train_4k",
+                              multi_pod=True),
+    "llama_flat_remat": lambda: run("llama_flat_remat", "llama3-405b",
+                                    "train_4k", multi_pod=True,
+                                    remat_group=0),
+    "llama_g18": lambda: run("llama_g18", "llama3-405b", "train_4k",
+                             multi_pod=True, remat_group=18),
+    "llama_accum16": lambda: run("llama_accum16", "llama3-405b", "train_4k",
+                                 multi_pod=True, grad_accum=16),
+    "llama_accum4": lambda: run("llama_accum4", "llama3-405b", "train_4k",
+                                multi_pod=True, grad_accum=4),
+    # cell B: most collective-bound train cell — TP vs pure-FSDP sharding
+    "stablelm_base": lambda: run("stablelm_base", "stablelm-1.6b",
+                                 "train_4k"),
+    "stablelm_fsdp": lambda: run("stablelm_fsdp", "stablelm-1.6b",
+                                 "train_4k", sharding_mode="fsdp"),
+    "qwen3_train_base": lambda: run("qwen3_train_base", "qwen3-14b",
+                                    "train_4k"),
+    "qwen3_train_fsdp": lambda: run("qwen3_train_fsdp", "qwen3-14b",
+                                    "train_4k", sharding_mode="fsdp"),
+    # cell C: the paper's technique on serving — bf16 vs MPAI int8 deploy
+    "qwen3_decode_bf16": lambda: run("qwen3_decode_bf16", "qwen3-14b",
+                                     "decode_32k"),
+    "qwen3_decode_mpai": lambda: run("qwen3_decode_mpai", "qwen3-14b",
+                                     "decode_32k", plan="mpai"),
+    "qwen3_prefill_bf16": lambda: run("qwen3_prefill_bf16", "qwen3-14b",
+                                      "prefill_32k"),
+    "qwen3_prefill_mpai": lambda: run("qwen3_prefill_mpai", "qwen3-14b",
+                                      "prefill_32k", plan="mpai"),
+}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or not args.names:
+        print("\n".join(EXPERIMENTS))
+        sys.exit(0)
+    for name in args.names:
+        EXPERIMENTS[name]()

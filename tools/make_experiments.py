@@ -1,0 +1,67 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json artifacts.
+
+    PYTHONPATH=src python tools/make_experiments.py > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirpath="experiments/dryrun"):
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        d["tag"] = os.path.basename(p)[:-5]
+        out.append(d)
+    return out
+
+
+def gb(x):
+    return f"{(x or 0) / 1e9:.2f}"
+
+
+def dryrun_table(rows):
+    print("| arch | shape | mesh | plan | compile s | args GB/dev | "
+          "temp GB/dev | collectives (count) | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        tag_bits = d["tag"].split("__")
+        plan = tag_bits[3] if len(tag_bits) > 3 else "bf16"
+        cc = d.get("collective_counts", {})
+        ccs = " ".join(f"{k}:{v}" for k, v in sorted(cc.items()))
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | {plan} | "
+              f"{d.get('compile_s', '-')} | "
+              f"{gb(d.get('argument_size_in_bytes'))} | "
+              f"{gb(d.get('temp_size_in_bytes'))} | {ccs} | "
+              f"{gb(d.get('collective_bytes'))} |")
+
+
+def roofline_table(rows, mesh="16x16"):
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | model GF | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        r = d.get("roofline")
+        if not r or d["mesh"] != mesh:
+            continue
+        if len(d["tag"].split("__")) > 3:      # plan variants listed in §Perf
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_ms']} | "
+              f"{r['memory_ms']} | {r['collective_ms']} | {r['dominant']} | "
+              f"{r['model_gflops']} | {r['useful_ratio']} | "
+              f"{r['roofline_frac']} |")
+
+
+if __name__ == "__main__":
+    rows = load("experiments/dryrun")
+    if os.path.isdir("experiments/dryrun_multi"):
+        rows += load("experiments/dryrun_multi")
+    print("### Dry-run table\n")
+    dryrun_table(rows)
+    print("\n### Roofline table (single-pod 16x16, 256 chips)\n")
+    roofline_table(rows)
