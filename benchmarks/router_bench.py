@@ -1,0 +1,109 @@
+"""Router benchmark: synthetic open-loop traffic through the fleet router.
+
+    PYTHONPATH=src python -m benchmarks.router_bench [--out results.json]
+
+Measures, per load level (requests/s):
+  * dispatch throughput — admitted requests / wall second of router code
+    (the routing fabric itself, not the simulated device time);
+  * end-to-end p50/p99 latency per SLO class on the virtual clock;
+  * SLO violation + rejection rates;
+and the failover scenario: same traffic with a mid-run pool loss.
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks
+and optionally writes the full metrics dict as JSON.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.cost_model import layer_costs_from_convspecs
+from repro.launch.route import open_loop
+from repro.models.cnn import ursonet_table1_layers
+from repro.router import (AcceleratorPool, CostModelExecutor,
+                          FailoverController, Router, SLO_CLASSES)
+from repro.runtime.fault import PoolFault, PoolFaultInjector
+
+MIX = [("downlink-critical", 0.2), ("realtime-tracking", 0.3),
+       ("background-science", 0.3), ("bulk-reprocess", 0.2)]
+
+
+def build(layers, fault_at=None):
+    pools = [
+        AcceleratorPool("board-a", ("mpsoc_dpu", "myriadx_vpu"),
+                        CostModelExecutor(layers), capacity=2, max_window=4),
+        AcceleratorPool("board-b", ("mpsoc_dpu", "myriadx_vpu"),
+                        CostModelExecutor(layers), capacity=2, max_window=4),
+        AcceleratorPool("sidecar", ("edge_tpu", "cortex_a53"),
+                        CostModelExecutor(layers), capacity=1, max_window=2),
+    ]
+    router = Router(layers, pools, accuracy_penalty={"mpsoc_dpu": 0.05})
+    faults = ([PoolFault("board-b", at_s=fault_at, duration_s=3.0)]
+              if fault_at is not None else [])
+    return router, FailoverController(router, PoolFaultInjector(faults))
+
+
+def run_scenario(name: str, rate_hz: float, n_requests: int,
+                 fault_at=None, seed: int = 0) -> dict:
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    router, fc = build(layers, fault_at=fault_at)
+    classes = [SLO_CLASSES[n] for n, _ in MIX]
+    weights = [w for _, w in MIX]
+
+    wall0 = time.perf_counter()
+    open_loop(router, fc, classes, weights, rate_hz=rate_hz,
+              n_requests=n_requests, seed=seed)
+    wall = time.perf_counter() - wall0
+
+    snap = router.telemetry.snapshot()
+    admitted = max(snap["admitted"], 1)
+    return {
+        "scenario": name,
+        "rate_hz": rate_hz,
+        "requests": n_requests,
+        "fault_at": fault_at,
+        "wall_s": round(wall, 4),
+        "dispatch_throughput_rps": round(snap["admitted"] / wall, 1),
+        "us_per_request": round(wall * 1e6 / admitted, 1),
+        "admitted": snap["admitted"],
+        "rejected": snap["rejected"],
+        "completed": snap["completed"],
+        "dropped": snap["dropped"],
+        "violations": snap["violations"],
+        "violation_rate": round(snap["violations"] / admitted, 4),
+        "failovers": snap["failovers"],
+        "latency_by_class": snap["latency_by_class"],
+        "violations_by_class": snap["violations_by_class"],
+    }
+
+
+def main(csv: bool = True, out: str | None = None, n: int = 400):
+    scenarios = [
+        ("router_steady_20rps", 20.0, None),
+        ("router_steady_60rps", 60.0, None),
+        ("router_overload_200rps", 200.0, None),
+        ("router_failover_60rps", 60.0, 2.0),
+    ]
+    results = [run_scenario(name, rate, n, fault_at=fa)
+               for name, rate, fa in scenarios]
+    if csv:
+        for r in results:
+            crit = r["latency_by_class"].get("downlink-critical", {})
+            print(f"{r['scenario']},{r['us_per_request']},"
+                  f"rps={r['dispatch_throughput_rps']};"
+                  f"p50={crit.get('p50', 0)};p99={crit.get('p99', 0)};"
+                  f"viol={r['violation_rate']};rej={r['rejected']};"
+                  f"failovers={r['failovers']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write full JSON here")
+    ap.add_argument("--requests", type=int, default=400)
+    args = ap.parse_args()
+    main(out=args.out, n=args.requests)

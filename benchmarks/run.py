@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                    methodology, implemented)
   * micro_*      — precision-path microbenchmarks
   * roofline_*   — per-(arch x shape) roofline terms from dry-run artifacts
+  * router_*     — fleet-router dispatch throughput / SLO violations /
+                   failover (synthetic open-loop traffic)
 """
 from __future__ import annotations
 
@@ -25,7 +27,8 @@ def main() -> None:
     args, _ = ap.parse_known_args()
 
     from benchmarks import (fig2_throughput, partition_sweep,
-                            precision_micro, roofline_bench, table1_ursonet)
+                            precision_micro, roofline_bench, router_bench,
+                            table1_ursonet)
 
     fig2_throughput.main()
     partition_sweep.main()
@@ -37,6 +40,7 @@ def main() -> None:
     else:
         table1_ursonet.main(steps=600 if args.full else 250)
     roofline_bench.main()
+    router_bench.main(n=200 if not args.full else 400)
 
 
 if __name__ == "__main__":

@@ -15,8 +15,9 @@ Invariants (property-tested):
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core.accelerators import (PRECISION_ERROR_PRIOR, AcceleratorProfile,
                                      get_profile)
@@ -80,20 +81,44 @@ def _plan_cost(layers: Sequence[LayerCost], cuts: Sequence[int],
 
 
 def pareto_frontier(plans: Sequence[ScheduledPlan]) -> List[ScheduledPlan]:
-    out = []
-    for p in plans:
-        if not any(q.dominates(p) for q in plans if q is not p):
-            out.append(p)
-    # dedupe identical objective triples
-    seen, uniq = set(), []
-    for p in sorted(out, key=lambda p: (p.latency_s, p.energy_j,
-                                        p.accuracy_penalty)):
+    """Sort-based skyline sweep, O(n log n) amortized (was O(n²) pairwise).
+
+    Plans are visited in (latency, energy, accuracy) order, so any
+    potential dominator of plan p precedes p.  A staircase over
+    (energy, accuracy) — energies strictly increasing, accuracies strictly
+    decreasing — summarizes all kept plans: p is dominated iff some kept
+    plan has energy <= p.energy and accuracy <= p.accuracy (its latency is
+    <= p's by visit order, and exact objective ties are deduped first, so
+    at least one inequality is strict).
+    """
+    order = sorted(plans, key=lambda p: (p.latency_s, p.energy_j,
+                                         p.accuracy_penalty))
+    seen, cand = set(), []
+    for p in order:
         key = (round(p.latency_s, 12), round(p.energy_j, 12),
                round(p.accuracy_penalty, 12))
         if key not in seen:
             seen.add(key)
-            uniq.append(p)
-    return uniq
+            cand.append(p)
+    es: List[float] = []      # staircase energies, strictly increasing
+    accs: List[float] = []    # staircase accuracies, strictly decreasing
+    out: List[ScheduledPlan] = []
+    for p in cand:
+        e, a = p.energy_j, p.accuracy_penalty
+        i = bisect.bisect_right(es, e)
+        if i and accs[i - 1] <= a:
+            continue                          # dominated by an earlier plan
+        out.append(p)
+        if i and es[i - 1] == e:              # tighter accuracy at same energy
+            i -= 1
+            del es[i], accs[i]
+        j = i                                 # drop steps p now supersedes
+        while j < len(es) and accs[j] >= a:
+            j += 1
+        del es[i:j], accs[i:j]
+        es.insert(i, e)
+        accs.insert(i, a)
+    return out
 
 
 def schedule(layers: Sequence[LayerCost],
@@ -128,6 +153,57 @@ def best_under_accuracy(plans: Sequence[ScheduledPlan],
                         max_penalty: float) -> Optional[ScheduledPlan]:
     ok = [p for p in plans if p.accuracy_penalty <= max_penalty]
     return min(ok, key=lambda p: p.latency_s) if ok else None
+
+
+def plan_profiles(plan: ScheduledPlan) -> frozenset:
+    """Accelerator profiles a plan needs — a pool can host the plan iff it
+    still has every one of them."""
+    return frozenset(prof for _, _, prof in plan.assignments)
+
+
+def price_assignments(layers: Sequence[LayerCost],
+                      plan: ScheduledPlan, batch: int
+                      ) -> Tuple[float, float]:
+    """Re-price a plan's segment assignments at an actual batch size.
+
+    ``schedule()`` prices the design space at a nominal batch; the router
+    batches dynamically, so dispatch re-prices each flush with the real
+    occupancy.  Returns ``(latency_s, energy_j)``.
+    """
+    lat = energy = 0.0
+    for lo, hi, prof_name in plan.assignments:
+        prof = get_profile(prof_name)
+        entry = layers[lo].act_in_elems if lo > 0 else 0.0
+        c = segment_cost(layers[lo:hi], prof, batch, entry_act_elems=entry)
+        lat += c.latency_s
+        energy += c.energy_j
+    return lat, energy
+
+
+def reschedule_over_subset(layers: Sequence[LayerCost],
+                           profile_names: Sequence[str],
+                           lost: Iterable[str] = (),
+                           batch: int = 1,
+                           max_segments: int = 2,
+                           accuracy_penalty: Optional[Dict[str, float]] = None,
+                           cut_candidates: Optional[Sequence[int]] = None
+                           ) -> List[ScheduledPlan]:
+    """Failover path: re-run the search over the surviving profile subset.
+
+    Simply *filtering* an existing frontier is not enough — dropping a
+    lost profile's plans can resurrect survivor-only plans they used to
+    dominate — so the frontier must be recomputed from scratch (cheap now
+    that ``pareto_frontier`` is a skyline sweep).  Returns ``[]`` when no
+    profile survives.
+    """
+    lost_set = set(lost)
+    surviving = [p for p in profile_names if p not in lost_set]
+    if not surviving:
+        return []
+    return schedule(layers, surviving, batch=batch,
+                    max_segments=max_segments,
+                    accuracy_penalty=accuracy_penalty,
+                    cut_candidates=cut_candidates)
 
 
 def mpai_reference_plan(layers: Sequence[LayerCost], batch: int = 1,

@@ -1,0 +1,209 @@
+"""Fleet-router demo: SLO-aware dispatch across accelerator pools with a
+mid-run fault and online failover.
+
+    PYTHONPATH=src python -m repro.launch.route                 # vision fleet
+    PYTHONPATH=src python -m repro.launch.route --lm            # + TPU pod LM
+    PYTHONPATH=src python -m repro.launch.route --execute-lm --smoke \
+        --arch qwen3-14b                                        # real decode
+
+The vision section routes a mixed-SLO UrsoNet workload across three
+pools (two DPU+VPU boards, one EdgeTPU+CPU sidecar); at ``--fault-at``
+board-b takes an SEU and drops out for ``--fault-duration`` seconds —
+its queued and in-flight requests are rescheduled over the survivors.
+The LM sections route the same SLO machinery over TPU v5e operating
+points (cost-model pools, or a real BatchingServer with ``--execute-lm``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.cost_model import (layer_costs_from_convspecs,
+                                   transformer_layer_costs)
+from repro.models.cnn import ursonet_table1_layers
+from repro.router import (AcceleratorPool, CostModelExecutor,
+                          FailoverController, Router, RouterRequest,
+                          SLO_CLASSES, ServerExecutor, SLOClass)
+from repro.runtime.fault import PoolFault, PoolFaultInjector
+
+
+def open_loop(router: Router, fc: FailoverController, classes, weights,
+              rate_hz: float, n_requests: int, seed: int = 0,
+              dt: float = 0.002, payload_fn=None):
+    """Drive Poisson open-loop traffic through the router until drained."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate_hz)
+        slo = classes[rng.choice(len(classes), p=weights)]
+        reqs.append(RouterRequest(i, slo, t,
+                                  payload=payload_fn(rng) if payload_fn
+                                  else None))
+    t, i = 0.0, 0
+    while i < len(reqs) or router.outstanding or fc.pending_faults:
+        t += dt
+        fc.poll(t)
+        while i < len(reqs) and reqs[i].arrival_s <= t:
+            router.submit(reqs[i], t)
+            i += 1
+        router.step(t)
+        if t > 600.0:          # safety net: never loop forever
+            break
+    return t
+
+
+def vision_section(args) -> dict:
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    pools = [
+        AcceleratorPool("board-a", ("mpsoc_dpu", "myriadx_vpu"),
+                        CostModelExecutor(layers), capacity=2, max_window=4),
+        AcceleratorPool("board-b", ("mpsoc_dpu", "myriadx_vpu"),
+                        CostModelExecutor(layers), capacity=2, max_window=4),
+        AcceleratorPool("sidecar", ("edge_tpu", "cortex_a53"),
+                        CostModelExecutor(layers), capacity=1, max_window=2),
+    ]
+    router = Router(layers, pools,
+                    accuracy_penalty={"mpsoc_dpu": 0.05})  # QAT'd backbone
+    n_before = len(router.frontier)
+    # board-b drops out entirely; half a scrub later the sidecar loses its
+    # Edge TPU — the only pool with that profile, so the frontier itself
+    # shrinks until the scrub completes
+    inj = PoolFaultInjector([
+        PoolFault("board-b", at_s=args.fault_at,
+                  duration_s=args.fault_duration),
+        PoolFault("sidecar", at_s=args.fault_at + args.fault_duration / 2,
+                  lost_profiles=("edge_tpu",),
+                  duration_s=args.fault_duration),
+    ])
+    fc = FailoverController(router, inj)
+    classes = [SLO_CLASSES["downlink-critical"],
+               SLO_CLASSES["realtime-tracking"],
+               SLO_CLASSES["background-science"],
+               SLO_CLASSES["bulk-reprocess"]]
+    open_loop(router, fc, classes, [0.2, 0.3, 0.3, 0.2],
+              rate_hz=args.rate, n_requests=args.requests, seed=args.seed)
+    snap = router.telemetry.snapshot()
+    snap["frontier_plans_initial"] = n_before
+    snap["frontier_plans_final"] = len(router.frontier)
+    snap["frontier_trace"] = [
+        {"t": round(t, 3), "plans": n} for t, n in fc.frontier_sizes]
+    snap["fault_events"] = [
+        {"kind": e.kind, "pool": e.fault.pool, "at_s": e.at_s}
+        for e in fc.events]
+    return snap
+
+
+def lm_section(args) -> dict:
+    from repro.configs import get_config
+    cfg = get_config(args.arch, smoke=True)
+    layers = transformer_layer_costs(cfg, seq_len=args.seq)
+    cuts = list(range(1, cfg.num_layers))
+    pools = [
+        AcceleratorPool("pod-int8", ("tpu_v5e_int8",),
+                        CostModelExecutor(layers), capacity=4, max_window=8),
+        AcceleratorPool("pod-bf16", ("tpu_v5e_bf16",),
+                        CostModelExecutor(layers), capacity=4, max_window=8),
+        AcceleratorPool("pod-mixed", ("tpu_v5e_int8", "tpu_v5e_bf16"),
+                        CostModelExecutor(layers), capacity=4, max_window=8),
+    ]
+    interactive = SLOClass("lm-interactive", max_latency_s=0.05,
+                           max_accuracy_penalty=0.02, priority=1)
+    batch = SLOClass("lm-batch", max_latency_s=1.0, max_energy_j=2.0)
+    router = Router(layers, pools, cut_candidates=cuts,
+                    accuracy_penalty={"tpu_v5e_int8": 0.015})
+    inj = PoolFaultInjector([PoolFault("pod-int8", at_s=args.fault_at,
+                                       duration_s=args.fault_duration)])
+    fc = FailoverController(router, inj)
+    open_loop(router, fc, [interactive, batch], [0.5, 0.5],
+              rate_hz=args.rate * 4, n_requests=args.requests,
+              seed=args.seed)
+    return router.telemetry.snapshot()
+
+
+def lm_execute_section(args) -> dict:
+    """Real decode: an LM pool backed by a BatchingServer, driven through
+    the router via its non-blocking step() executor."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.runtime.serve import BatchingServer
+
+    cfg = get_config(args.arch, smoke=True)
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    layers = transformer_layer_costs(cfg, seq_len=16)
+    srv = BatchingServer(params, cfg, max_batch=4, prompt_len=16, max_len=24)
+    # warm up the jitted prefill/decode so the one-off compile time does
+    # not land in the first routed batch's latency telemetry
+    from repro.runtime.serve import Request as ServeRequest
+    srv.submit(ServeRequest(-1, np.array([1, 2], np.int32), max_new=2))
+    srv.flush()
+    pools = [AcceleratorPool("lm-real", ("tpu_v5e_bf16",),
+                             ServerExecutor(srv, max_new=args.max_new),
+                             capacity=1, max_window=4, max_wait_s=0.0)]
+    relaxed = SLOClass("lm-offline", max_latency_s=120.0)
+    router = Router(layers, pools)
+    fc = FailoverController(router, PoolFaultInjector())
+    rng = np.random.default_rng(args.seed)
+
+    def prompt(r):
+        return r.integers(0, cfg.vocab_size, int(r.integers(2, 16))
+                          ).astype(np.int32)
+
+    open_loop(router, fc, [relaxed], [1.0], rate_hz=50.0,
+              n_requests=min(args.requests, 16), seed=args.seed, dt=0.05,
+              payload_fn=prompt)
+    snap = router.telemetry.snapshot()
+    snap["generated_tokens"] = sum(r.output.shape[0]
+                                   for rid, r in srv.done.items()
+                                   if rid >= 0)
+    return snap
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="open-loop arrival rate, requests/s")
+    ap.add_argument("--fault-at", type=float, default=3.0)
+    ap.add_argument("--fault-duration", type=float, default=4.0,
+                    help="SEU scrub window; inf-like values = permanent")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lm", action="store_true",
+                    help="also route an LM workload over TPU v5e pools")
+    ap.add_argument("--execute-lm", action="store_true",
+                    help="route real decodes through a BatchingServer pool")
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--smoke", action="store_true")   # accepted for parity
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--json", action="store_true",
+                    help="print raw JSON only (for scripting)")
+    args = ap.parse_args()
+
+    report = {"vision": vision_section(args)}
+    if args.lm:
+        report["lm_costmodel"] = lm_section(args)
+    if args.execute_lm:
+        report["lm_real"] = lm_execute_section(args)
+
+    if args.json:
+        print(json.dumps(report, indent=2))
+        return
+    v = report["vision"]
+    print(json.dumps(report, indent=2))
+    total = v["completed"] + v["dropped"]
+    print(f"\nvision fleet: {v['admitted']} admitted / {v['rejected']} "
+          f"rejected; {v['completed']} completed, {v['violations']} SLO "
+          f"violations ({v['dropped']} dropped); {v['failovers']} failover, "
+          f"{v['reschedules']} reschedules "
+          f"(frontier {v['frontier_plans_initial']} -> "
+          f"{v['frontier_plans_final']} plans)")
+    assert total == v["admitted"], "router lost requests"
+
+
+if __name__ == "__main__":
+    main()

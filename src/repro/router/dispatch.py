@@ -1,0 +1,189 @@
+"""Admission control + SLO-aware dispatch over heterogeneous pools.
+
+Per request the router:
+  1. filters the *live* Pareto frontier (recomputed whenever the set of
+     healthy profiles changes) down to plans whose nominal cost fits the
+     request's SLO budgets AND that at least one live pool can host;
+  2. estimates end-to-end completion per candidate (plan, pool) — nominal
+     plan latency plus a queue-wait term from the pool's current load —
+     and rejects the request at admission when no estimate fits the
+     deadline: infeasible budgets AND hopeless overload fail fast instead
+     of rotting in a queue;
+  3. otherwise picks the cheapest surviving plan (min energy, preferring
+     candidates with latency slack) and routes it to the least-loaded
+     compatible pool, where it batches inside a bounded window.
+
+The queue-wait term is what keeps a cheap plan from becoming a magnet: a
+frontier plan that funnels to one congested pool loses to a slightly
+dearer plan on an idle pool as soon as the wait estimate breaks its SLO.
+
+The router never invents plans: everything it dispatches comes from
+``core.scheduler.schedule`` / ``reschedule_over_subset``, so a dispatched
+plan is Pareto-optimal over the surviving profile set by construction —
+a property the test suite checks directly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.cost_model import LayerCost
+from repro.core.scheduler import ScheduledPlan, reschedule_over_subset
+from repro.router.pool import AcceleratorPool, PoolState, RouterRequest
+from repro.router.slo import SLOClass
+from repro.router.telemetry import Telemetry
+
+_EPS = 1e-9
+
+
+class Router:
+    def __init__(self, layers: Sequence[LayerCost],
+                 pools: Sequence[AcceleratorPool],
+                 batch: int = 1, max_segments: int = 2,
+                 accuracy_penalty: Optional[Dict[str, float]] = None,
+                 cut_candidates: Optional[Sequence[int]] = None,
+                 latency_headroom: float = 0.6,
+                 telemetry: Optional[Telemetry] = None):
+        if not pools:
+            raise ValueError("router needs at least one pool")
+        self.layers = list(layers)
+        self.latency_headroom = latency_headroom
+        self.pools: Dict[str, AcceleratorPool] = {p.name: p for p in pools}
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        for p in pools:                    # pool counters live in telemetry
+            self.telemetry.pools[p.name] = p.counters
+        self._sched_kw = dict(batch=batch, max_segments=max_segments,
+                              accuracy_penalty=accuracy_penalty,
+                              cut_candidates=cut_candidates)
+        self.all_profiles = sorted({prof for p in pools
+                                    for prof in p.profiles})
+        self.frontier: List[ScheduledPlan] = []
+        self.refresh_plans(count=False)
+
+    # ------------------------------------------------------------------
+    # plan management
+    # ------------------------------------------------------------------
+    def available_profiles(self) -> Set[str]:
+        out: Set[str] = set()
+        for p in self.pools.values():
+            if p.state is not PoolState.DEAD:
+                out |= p.effective_profiles
+        return out
+
+    def refresh_plans(self, count: bool = True) -> None:
+        """Recompute the frontier over the surviving profile subset."""
+        avail = self.available_profiles()
+        lost = [p for p in self.all_profiles if p not in avail]
+        self.frontier = reschedule_over_subset(
+            self.layers, self.all_profiles, lost=lost, **self._sched_kw)
+        if count:
+            self.telemetry.reschedules += 1
+
+    def routable_plans(self) -> List[ScheduledPlan]:
+        """Frontier plans some live pool can actually host.  (A frontier
+        plan can be unroutable when its profiles survive only split
+        across pools — segments hand off over a board-level link, not the
+        network.)"""
+        pools = self.pools.values()
+        return [pl for pl in self.frontier
+                if any(p.compatible(pl) for p in pools)]
+
+    # ------------------------------------------------------------------
+    # admission + dispatch
+    # ------------------------------------------------------------------
+    def _estimate_completion(self, plan: ScheduledPlan,
+                             pool: AcceleratorPool) -> float:
+        """Rough end-to-end estimate: the pool's backlog forms
+        ceil(load+1 / window) batches draining over ``capacity`` slots,
+        each taking about one nominal plan latency."""
+        batches = math.ceil((pool.load + 1) / pool.max_window)
+        waves = math.ceil(batches / pool.capacity)
+        return waves * plan.latency_s
+
+    def _best_pool(self, plan: ScheduledPlan
+                   ) -> Optional[Tuple[AcceleratorPool, float]]:
+        """Compatible pool with the best completion estimate (capacity and
+        window differ across pools, so least-loaded is not least-wait)."""
+        cands = [(self._estimate_completion(plan, p), p.load, p.name, p)
+                 for p in self.pools.values() if p.compatible(plan)]
+        if not cands:
+            return None
+        est, _, _, pool = min(cands, key=lambda c: c[:3])
+        return pool, est
+
+    def _choose(self, slo: SLOClass
+                ) -> Optional[Tuple[ScheduledPlan, AcceleratorPool]]:
+        """Best (plan, pool): cheapest energy whose completion estimate
+        fits the deadline, preferring candidates with latency slack."""
+        best = best_key = None
+        for plan in self.frontier:
+            if not slo.admits(plan):
+                continue
+            placed = self._best_pool(plan)
+            if placed is None:
+                continue
+            pool, est = placed
+            if est > slo.max_latency_s:
+                continue
+            slack = est <= self.latency_headroom * slo.max_latency_s
+            key = (not slack, plan.energy_j, est, plan.accuracy_penalty)
+            if best_key is None or key < best_key:
+                best_key, best = key, (plan, pool)
+        return best
+
+    def submit(self, req: RouterRequest, now: float) -> bool:
+        """Admit and dispatch, or reject (returns False) when no routable
+        plan can meet the request's SLO budgets at current load."""
+        choice = self._choose(req.slo)
+        if choice is None:
+            self.telemetry.rejected += 1
+            return False
+        self._dispatch(req, *choice, now)
+        self.telemetry.admitted += 1
+        return True
+
+    def redispatch(self, req: RouterRequest, now: float) -> None:
+        """Failover path: the request is already admitted, so it is never
+        re-rejected — if no surviving plan fits its SLO we still serve it
+        best-effort (fastest surviving estimate) and let completion record
+        the violation.  Only a total loss (nothing routable) drops it."""
+        req.rerouted += 1
+        choice = self._choose(req.slo)
+        if choice is None:
+            cands = []
+            for plan in self.routable_plans():
+                pool, est = self._best_pool(plan)
+                cands.append((est, plan.energy_j, plan, pool))
+            if cands:
+                est, _, plan, pool = min(cands, key=lambda c: c[:2])
+                choice = (plan, pool)
+        if choice is None:
+            req.dropped = True
+            req.violated = True
+            self.telemetry.record_drop(req.slo.name)
+            return
+        self._dispatch(req, *choice, now)
+
+    def _dispatch(self, req: RouterRequest, plan: ScheduledPlan,
+                  pool: AcceleratorPool, now: float) -> None:
+        req.plan = plan
+        pool.enqueue(req, now)
+
+    # ------------------------------------------------------------------
+    # progress
+    # ------------------------------------------------------------------
+    def step(self, now: float) -> List[RouterRequest]:
+        """Advance every pool one tick; record completions + violations."""
+        completed: List[RouterRequest] = []
+        for pool in self.pools.values():
+            completed.extend(pool.step(now))
+        for r in completed:
+            r.violated = r.done_s > r.deadline_s + _EPS
+            self.telemetry.record_completion(r.slo.name,
+                                             r.done_s - r.arrival_s,
+                                             r.violated)
+        return completed
+
+    @property
+    def outstanding(self) -> int:
+        return sum(p.load for p in self.pools.values())

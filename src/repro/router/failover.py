@@ -1,0 +1,58 @@
+"""Online failover: pool degradation -> reschedule -> re-dispatch.
+
+The controller consumes :class:`~repro.runtime.fault.PoolFaultInjector`
+events on the router's clock.  On a degrade event it:
+  1. marks the pool DEGRADED/DEAD and evicts every queued *and in-flight*
+     request whose plan needs a lost profile (an SEU destroys in-flight
+     work — those requests restart, they are not resumed);
+  2. refreshes the router's Pareto frontier over the surviving profile
+     subset (``reschedule_over_subset``) so subsequent admissions never
+     see a dead device;
+  3. re-dispatches each displaced request — best-effort if its SLO is no
+     longer satisfiable, dropped (and counted) only when nothing routable
+     survives anywhere.
+
+Recover events restore the profiles and refresh the frontier again, so a
+transient SEU only narrows the plan space for its scrub window.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.runtime.fault import PoolFaultEvent, PoolFaultInjector
+from repro.router.dispatch import Router
+from repro.router.pool import RouterRequest
+
+
+class FailoverController:
+    def __init__(self, router: Router, injector: PoolFaultInjector):
+        self.router = router
+        self.injector = injector
+        self.events: List[PoolFaultEvent] = []     # applied, for reports
+        self.frontier_sizes: List[tuple] = []      # (t, |frontier|) trace
+
+    def poll(self, now: float) -> List[RouterRequest]:
+        """Apply every fault event due by ``now``; returns the requests
+        that were displaced and re-dispatched (for tests/observability)."""
+        displaced_total: List[RouterRequest] = []
+        for ev in self.injector.poll(now):
+            self.events.append(ev)
+            pool = self.router.pools.get(ev.fault.pool)
+            if pool is None:
+                continue
+            if ev.kind == "degrade":
+                displaced = pool.degrade(ev.fault.lost_profiles)
+                self.router.telemetry.failovers += 1
+                self.router.refresh_plans()
+                for req in displaced:
+                    self.router.redispatch(req, now)
+                displaced_total.extend(displaced)
+            elif ev.kind == "recover":
+                pool.recover(ev.fault.lost_profiles)
+                self.router.refresh_plans()
+            self.frontier_sizes.append((now, len(self.router.frontier)))
+        return displaced_total
+
+    @property
+    def pending_faults(self) -> int:
+        return self.injector.pending

@@ -1,0 +1,112 @@
+"""Router telemetry: per-pool counters and latency/queue histograms.
+
+Everything is plain Python (no jax) and JSON-serializable via
+``snapshot()`` — the same dict feeds the launch demo's report, the
+benchmark's output file, and the tests' assertions.  Histograms keep raw
+samples (bounded) rather than buckets: the sample counts here are small
+enough that exact percentiles are cheaper than maintaining bucket edges.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class Histogram:
+    samples: List[float] = field(default_factory=list)
+    max_samples: int = 100_000            # bound memory on long runs
+
+    def record(self, v: float) -> None:
+        if len(self.samples) < self.max_samples:
+            self.samples.append(float(v))
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return 0.0
+        s = sorted(self.samples)
+        idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
+        return s[idx]
+
+    @property
+    def count(self) -> int:
+        return len(self.samples)
+
+    @property
+    def mean(self) -> float:
+        return sum(self.samples) / len(self.samples) if self.samples else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count, "mean": round(self.mean, 6),
+                "p50": round(self.percentile(50), 6),
+                "p99": round(self.percentile(99), 6)}
+
+
+@dataclass
+class PoolCounters:
+    dispatched: int = 0                   # requests routed to the pool
+    completed: int = 0
+    evicted: int = 0                      # displaced by a fault
+    batches: int = 0
+    energy_j: float = 0.0                 # cost-model energy estimate
+    busy_s: float = 0.0                   # time spent executing batches
+    queue_depth: Histogram = field(default_factory=Histogram)
+    batch_size: Histogram = field(default_factory=Histogram)
+
+    def summary(self) -> Dict:
+        return {"dispatched": self.dispatched, "completed": self.completed,
+                "evicted": self.evicted, "batches": self.batches,
+                "energy_j": round(self.energy_j, 4),
+                "busy_s": round(self.busy_s, 4),
+                "queue_depth": self.queue_depth.summary(),
+                "batch_size": self.batch_size.summary()}
+
+
+class Telemetry:
+    """One instance per Router; pools and the failover controller write
+    into it, reports read from it."""
+
+    def __init__(self):
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.violations = 0
+        self.dropped = 0                  # admitted but unservable (no pool)
+        self.failovers = 0
+        self.reschedules = 0
+        self.pools: Dict[str, PoolCounters] = defaultdict(PoolCounters)
+        self.latency_by_class: Dict[str, Histogram] = defaultdict(Histogram)
+        self.violations_by_class: Dict[str, int] = defaultdict(int)
+
+    def pool(self, name: str) -> PoolCounters:
+        return self.pools[name]
+
+    def record_completion(self, slo_name: str, latency_s: float,
+                          violated: bool) -> None:
+        self.completed += 1
+        self.latency_by_class[slo_name].record(latency_s)
+        if violated:
+            self.violations += 1
+            self.violations_by_class[slo_name] += 1
+
+    def record_drop(self, slo_name: str) -> None:
+        self.dropped += 1
+        self.violations += 1
+        self.violations_by_class[slo_name] += 1
+
+    def snapshot(self) -> Dict:
+        return {
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "violations": self.violations,
+            "dropped": self.dropped,
+            "failovers": self.failovers,
+            "reschedules": self.reschedules,
+            "pools": {k: v.summary() for k, v in sorted(self.pools.items())},
+            "latency_by_class": {k: v.summary() for k, v in
+                                 sorted(self.latency_by_class.items())},
+            "violations_by_class": dict(sorted(
+                self.violations_by_class.items())),
+        }

@@ -8,10 +8,20 @@ pipeline guarantees the replayed batches are identical.
 
 ``FaultInjector`` drives the tests: it raises at scheduled steps to prove
 recovery reproduces the uninterrupted run bit-for-bit.
+
+Serving-side faults (router subsystem): onboard accelerators in space see
+SEU-style transient upsets — a device drops out, then (usually) comes back
+after a scrub/reset.  ``PoolFault`` / ``PoolFaultInjector`` model this at
+pool granularity on the router's clock: at ``at_s`` the named pool loses
+``lost_profiles`` (or all of them), and recovers after ``duration_s``
+unless the fault is permanent (``duration_s=inf``).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import heapq
+import math
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -28,6 +38,61 @@ class FaultInjector:
         if step in self.fail_at:
             self.fail_at.discard(step)
             raise self.exc(f"injected fault at step {step}")
+
+
+@dataclass(frozen=True)
+class PoolFault:
+    """One scheduled pool-level upset on the router's clock."""
+    pool: str
+    at_s: float
+    lost_profiles: Tuple[str, ...] = ()     # () -> the whole pool drops out
+    duration_s: float = math.inf            # finite -> transient (SEU scrub)
+
+    @property
+    def transient(self) -> bool:
+        return math.isfinite(self.duration_s)
+
+
+@dataclass(frozen=True)
+class PoolFaultEvent:
+    kind: str                               # "degrade" | "recover"
+    fault: PoolFault
+    at_s: float
+
+
+class PoolFaultInjector:
+    """Time-ordered degrade/recover event stream for the serving router.
+
+    ``poll(now)`` returns every event due at or before ``now`` exactly
+    once, in time order — the FailoverController consumes them and drives
+    pool state + rescheduling.
+    """
+
+    def __init__(self, faults: Sequence[PoolFault] = ()):
+        self._heap: List[Tuple[float, int, PoolFaultEvent]] = []
+        self._n = 0
+        for f in faults:
+            self.schedule(f)
+
+    def schedule(self, fault: PoolFault) -> None:
+        self._push(PoolFaultEvent("degrade", fault, fault.at_s))
+        if fault.transient:
+            self._push(PoolFaultEvent("recover", fault,
+                                      fault.at_s + fault.duration_s))
+
+    def _push(self, ev: PoolFaultEvent) -> None:
+        heapq.heappush(self._heap, (ev.at_s, self._n, ev))
+        self._n += 1
+
+    def poll(self, now: float) -> List[PoolFaultEvent]:
+        due = []
+        while self._heap and self._heap[0][0] <= now:
+            due.append(heapq.heappop(self._heap)[2])
+        return due
+
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
 
 
 class FaultTolerantRunner:

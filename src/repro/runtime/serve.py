@@ -5,6 +5,13 @@ Straggler mitigation at serve time: the batching window is bounded (a
 request waits at most ``window`` flushes), and batches are padded to a
 fixed set of bucket sizes so every flush hits a pre-compiled program —
 no compile stalls in the serving path.
+
+Two granularities of progress:
+  * ``flush()`` — blocking: serve one whole window (prefill + full decode).
+  * ``step()``  — non-blocking building block: advance by ONE unit of work
+    (a prefill or a single decode step) and return immediately.  This is
+    what lets several servers — the router's accelerator pools — interleave
+    on one host instead of each monopolizing it for a full generation.
 """
 from __future__ import annotations
 
@@ -28,6 +35,16 @@ class Request:
     output: Optional[np.ndarray] = None
 
 
+@dataclass
+class _ActiveWindow:
+    """One in-progress bounded window (prefill done, decode underway)."""
+    batch: List[Request]
+    cache: object
+    last: object                       # [b, 1] last sampled token
+    gen: List[np.ndarray]
+    remaining: int                     # decode steps left
+
+
 class BatchingServer:
     def __init__(self, params, cfg: ModelConfig,
                  plan: Optional[PartitionPlan] = None, tp: int = 1,
@@ -38,6 +55,7 @@ class BatchingServer:
                                                          prompt_len, max_len)
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
+        self._active: Optional[_ActiveWindow] = None
         self._prefill = jax.jit(
             lambda p, toks, cache: T.prefill(p, cfg, toks, cache, plan, tp))
         self._decode = jax.jit(
@@ -47,10 +65,42 @@ class BatchingServer:
         assert req.prompt.shape[0] <= self.prompt_len
         self.queue.append(req)
 
+    @property
+    def pending(self) -> int:
+        """Requests admitted but not yet completed (queued + in-window)."""
+        return len(self.queue) + (len(self._active.batch)
+                                  if self._active else 0)
+
+    def step(self) -> List[Request]:
+        """Advance by one unit of work and return requests it completed.
+
+        No active window: start one (prefill + first token) from the queue.
+        Active window: run one decode step.  Returns [] until the window's
+        last decode step, at which point the whole batch is finalized.
+        """
+        if self._active is None:
+            if not self.queue:
+                return []
+            self._start_window()
+        else:
+            w = self._active
+            out = self._decode(self.params, w.last.astype(jnp.int32), w.cache)
+            w.cache = out.cache
+            w.last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
+            w.gen.append(np.asarray(w.last))
+            w.remaining -= 1
+        return self._finish_if_done()
+
     def flush(self) -> List[Request]:
-        """Serve up to max_batch queued requests (one bounded window)."""
-        if not self.queue:
+        """Serve one bounded window to completion (blocking form of step)."""
+        if self._active is None and not self.queue:
             return []
+        while True:
+            batch = self.step()
+            if batch:
+                return batch
+
+    def _start_window(self) -> None:
         batch = self.queue[:self.max_batch]
         self.queue = self.queue[self.max_batch:]
         b = self.max_batch                        # fixed bucket: no recompiles
@@ -59,17 +109,18 @@ class BatchingServer:
             toks[i, -r.prompt.shape[0]:] = r.prompt   # left-pad
         cache = T.init_cache(self.cfg, b, self.max_len, self.tp)
         out = self._prefill(self.params, jnp.asarray(toks), cache)
-        cache = out.cache
         last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
         max_new = max(r.max_new for r in batch)
-        gen = [np.asarray(last)]
-        for _ in range(max_new - 1):
-            out = self._decode(self.params, last.astype(jnp.int32), cache)
-            cache = out.cache
-            last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
-            gen.append(np.asarray(last))
-        gen = np.concatenate(gen, axis=1)         # [b, max_new]
-        for i, r in enumerate(batch):
+        self._active = _ActiveWindow(batch, out.cache, last,
+                                     [np.asarray(last)], max_new - 1)
+
+    def _finish_if_done(self) -> List[Request]:
+        w = self._active
+        if w is None or w.remaining > 0:
+            return []
+        gen = np.concatenate(w.gen, axis=1)       # [b, max_new]
+        for i, r in enumerate(w.batch):
             r.output = gen[i, :r.max_new]
             self.done[r.rid] = r
-        return batch
+        self._active = None
+        return w.batch

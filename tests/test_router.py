@@ -1,0 +1,335 @@
+"""Fleet router: SLO admission, least-loaded routing, failover, and the
+Pareto-optimality of every dispatched plan."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import LayerCost, layer_costs_from_convspecs
+from repro.core.scheduler import (ScheduledPlan, pareto_frontier,
+                                  plan_profiles, price_assignments,
+                                  reschedule_over_subset, schedule)
+from repro.models.cnn import ursonet_table1_layers
+from repro.router import (AcceleratorPool, CostModelExecutor,
+                          FailoverController, PoolState, Router,
+                          RouterRequest, SLOClass, select_plan)
+from repro.runtime.fault import PoolFault, PoolFaultInjector
+
+from conftest import tiny_dense
+
+
+def _layers(n=6):
+    return [LayerCost(f"l{i}", 1e9, 1e6, 1e5, 1e5) for i in range(n)]
+
+
+def _pool(name, profiles, layers, **kw):
+    kw.setdefault("capacity", 2)
+    kw.setdefault("max_wait_s", 0.01)
+    return AcceleratorPool(name, profiles, CostModelExecutor(layers), **kw)
+
+
+RELAXED = SLOClass("relaxed", max_latency_s=30.0)
+ACC_TIGHT = SLOClass("acc-tight", max_latency_s=30.0,
+                     max_accuracy_penalty=0.05)
+CRITICAL = SLOClass("critical", max_latency_s=0.2, priority=2)
+
+
+def _drive(router, fc, reqs, dt=0.002, t_end=120.0):
+    t, i = 0.0, 0
+    while i < len(reqs) or router.outstanding or (fc and fc.pending_faults):
+        t += dt
+        if fc:
+            fc.poll(t)
+        while i < len(reqs) and reqs[i].arrival_s <= t:
+            router.submit(reqs[i], t)
+            i += 1
+        router.step(t)
+        assert t < t_end, "router failed to drain"
+    return t
+
+
+# ---------------------------------------------------------------------------
+# scheduler satellites: skyline frontier + subset rescheduling + re-pricing
+# ---------------------------------------------------------------------------
+def _brute_frontier(plans):
+    out = [p for p in plans
+           if not any(q.dominates(p) for q in plans if q is not p)]
+    seen, uniq = set(), []
+    for p in sorted(out, key=lambda p: (p.latency_s, p.energy_j,
+                                        p.accuracy_penalty)):
+        key = (round(p.latency_s, 12), round(p.energy_j, 12),
+               round(p.accuracy_penalty, 12))
+        if key not in seen:
+            seen.add(key)
+            uniq.append(p)
+    return uniq
+
+
+def test_skyline_frontier_matches_bruteforce():
+    rng = np.random.default_rng(0)
+    for trial in range(50):
+        n = int(rng.integers(0, 40))
+        grid = rng.integers(1, 4, size=(n, 3)).astype(float)  # many ties
+        plans = [ScheduledPlan(((0, 1, f"p{i}"),), *row)
+                 for i, row in enumerate(grid)]
+        want = [(p.latency_s, p.energy_j, p.accuracy_penalty)
+                for p in _brute_frontier(plans)]
+        got = [(p.latency_s, p.energy_j, p.accuracy_penalty)
+               for p in pareto_frontier(plans)]
+        assert want == got
+
+
+def test_reschedule_over_subset_excludes_lost():
+    layers = _layers()
+    names = ["mpsoc_dpu", "myriadx_vpu", "edge_tpu"]
+    plans = reschedule_over_subset(layers, names, lost=["myriadx_vpu"])
+    assert plans
+    for p in plans:
+        assert "myriadx_vpu" not in plan_profiles(p)
+    assert reschedule_over_subset(layers, names, lost=names) == []
+    # survivors-only equals a direct schedule over the survivors
+    direct = schedule(layers, ["mpsoc_dpu", "edge_tpu"])
+    assert ([p.assignments for p in plans]
+            == [p.assignments for p in direct])
+
+
+def test_price_assignments_monotone_in_batch():
+    layers = _layers()
+    plan = schedule(layers, ["mpsoc_dpu"])[0]
+    l1, e1 = price_assignments(layers, plan, batch=1)
+    l8, e8 = price_assignments(layers, plan, batch=8)
+    assert l8 > l1 and e8 > e1
+    assert l1 == pytest.approx(plan.latency_s)
+
+
+# ---------------------------------------------------------------------------
+# SLO admission
+# ---------------------------------------------------------------------------
+def test_admission_rejects_infeasible_latency_budget():
+    layers = _layers()
+    router = Router(layers, [_pool("a", ("mpsoc_dpu",), layers)])
+    req = RouterRequest(0, SLOClass("impossible", max_latency_s=1e-9), 0.0)
+    assert not router.submit(req, 0.0)
+    assert router.telemetry.rejected == 1
+    assert router.telemetry.admitted == 0
+
+
+def test_admission_rejects_infeasible_accuracy_budget():
+    layers = _layers()
+    # both profiles carry a nonzero accuracy prior -> 0.005 is unmeetable
+    router = Router(layers, [_pool("a", ("mpsoc_dpu", "myriadx_vpu"),
+                                  layers)])
+    bad = SLOClass("too-accurate", max_latency_s=30.0,
+                   max_accuracy_penalty=0.005)
+    assert not router.submit(RouterRequest(0, bad, 0.0), 0.0)
+    assert router.submit(RouterRequest(1, RELAXED, 0.0), 0.0)
+
+
+def test_admission_sheds_load_when_queues_hopeless():
+    layers = _layers()
+    router = Router(layers, [_pool("a", ("mpsoc_dpu",), layers,
+                                   capacity=1, max_window=1)])
+    tight = SLOClass("tight", max_latency_s=router.frontier[0].latency_s
+                     * 1.5)
+    admitted = sum(router.submit(RouterRequest(i, tight, 0.0), 0.0)
+                   for i in range(10))
+    assert 1 <= admitted < 10          # backlog estimate rejects the rest
+    assert router.telemetry.rejected == 10 - admitted
+
+
+def test_select_plan_nominal_policy():
+    layers = _layers()
+    plans = schedule(layers, ["mpsoc_dpu", "myriadx_vpu", "edge_tpu"])
+    pick = select_plan(plans, RELAXED)
+    assert pick is not None
+    # cheapest energy among admissible plans
+    assert pick.energy_j == min(p.energy_j for p in plans)
+    assert select_plan(plans, SLOClass("no", max_latency_s=1e-12)) is None
+    # headroom prefers a faster plan when the cheapest is deadline-tight
+    tight = SLOClass("tight", max_latency_s=pick.latency_s * 1.05)
+    slack_pick = select_plan(plans, tight, latency_headroom=0.5)
+    assert slack_pick is not None
+    assert (slack_pick.latency_s <= 0.5 * tight.max_latency_s
+            or slack_pick is pick)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+def test_least_loaded_routing_spreads_requests():
+    layers = _layers()
+    pools = [_pool("a", ("mpsoc_dpu",), layers),
+             _pool("b", ("mpsoc_dpu",), layers)]
+    router = Router(layers, pools)
+    for i in range(4):
+        assert router.submit(RouterRequest(i, RELAXED, 0.0), 0.0)
+    assert pools[0].load == 2 and pools[1].load == 2
+
+
+def test_pool_choice_uses_completion_estimate_not_raw_load():
+    layers = _layers()
+    a = _pool("a", ("mpsoc_dpu",), layers, capacity=1, max_window=1)
+    b = _pool("b", ("mpsoc_dpu",), layers, capacity=4, max_window=4)
+    router = Router(layers, [a, b])
+    plan = router.frontier[0]
+    for i in range(3):       # a: 3 queued serial batches (slow drain)
+        a.enqueue(RouterRequest(100 + i, RELAXED, 0.0, plan=plan), 0.0)
+    for i in range(4):       # b: nominally "more loaded" but one wave
+        b.enqueue(RouterRequest(200 + i, RELAXED, 0.0, plan=plan), 0.0)
+    slo = SLOClass("two-lat", max_latency_s=2.0 * plan.latency_s)
+    req = RouterRequest(0, slo, 0.0)
+    assert router.submit(req, 0.0)     # b's estimate fits, a's does not
+    assert req.pool == "b"
+
+
+def test_dispatch_selects_admissible_frontier_plan():
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    pools = [_pool("board", ("mpsoc_dpu", "myriadx_vpu"), layers),
+             _pool("sidecar", ("edge_tpu",), layers)]
+    router = Router(layers, pools)
+    for slo in (RELAXED, ACC_TIGHT, CRITICAL):
+        req = RouterRequest(0, slo, 0.0)
+        assert router.submit(req, 0.0)
+        assert req.plan in router.frontier
+        assert slo.admits(req.plan)
+        assert not any(q.dominates(req.plan) for q in router.frontier)
+
+
+def test_urgent_requests_launch_without_window_fill():
+    layers = _layers()
+    pool = _pool("a", ("mpsoc_dpu",), layers, max_window=8,
+                 max_wait_s=10.0)
+    router = Router(layers, [pool])
+    router.submit(RouterRequest(0, CRITICAL, 0.0), 0.0)
+    router.step(1e-4)                  # long before max_wait_s
+    assert pool.in_flight == 1
+    router2 = Router(layers, [_pool("b", ("mpsoc_dpu",), layers,
+                                    max_window=8, max_wait_s=10.0)])
+    router2.submit(RouterRequest(0, RELAXED, 0.0), 0.0)
+    router2.step(1e-4)
+    assert router2.pools["b"].in_flight == 0   # still batching
+
+
+# ---------------------------------------------------------------------------
+# failover
+# ---------------------------------------------------------------------------
+def _mixed_fleet(layers):
+    return [_pool("pool-dpu", ("mpsoc_dpu",), layers),
+            _pool("pool-vpu", ("myriadx_vpu",), layers),
+            _pool("pool-tpu", ("edge_tpu",), layers)]
+
+
+def test_failover_completes_all_inflight_requests():
+    layers = layer_costs_from_convspecs(ursonet_table1_layers())
+    router = Router(layers, _mixed_fleet(layers))
+    fc = FailoverController(router, PoolFaultInjector(
+        [PoolFault("pool-vpu", at_s=0.05, duration_s=math.inf)]))
+    # ACC_TIGHT admits only VPU plans -> everything lands on pool-vpu
+    reqs = [RouterRequest(i, ACC_TIGHT, 0.001 * i) for i in range(12)]
+    _drive(router, fc, reqs)
+    snap = router.telemetry.snapshot()
+    assert snap["admitted"] == 12
+    assert snap["completed"] == 12 and snap["dropped"] == 0
+    assert snap["failovers"] == 1
+    assert snap["pools"]["pool-vpu"]["evicted"] > 0
+    for r in reqs:
+        assert r.done_s is not None
+        if r.rerouted:                 # displaced -> served by a survivor
+            assert "myriadx_vpu" not in plan_profiles(r.plan)
+    # the degraded profile is gone from the live frontier
+    assert all("myriadx_vpu" not in plan_profiles(p)
+               for p in router.frontier)
+    assert router.pools["pool-vpu"].state is PoolState.DEAD
+
+
+def test_transient_fault_recovers_frontier():
+    layers = _layers()
+    router = Router(layers, _mixed_fleet(layers))
+    fc = FailoverController(router, PoolFaultInjector(
+        [PoolFault("pool-vpu", at_s=0.01, duration_s=0.05)]))
+    fc.poll(0.02)                      # degrade applied
+    assert router.pools["pool-vpu"].state is PoolState.DEAD
+    assert "myriadx_vpu" not in router.available_profiles()
+    fc.poll(0.07)                      # scrub window over
+    assert router.pools["pool-vpu"].state is PoolState.HEALTHY
+    assert "myriadx_vpu" in router.available_profiles()
+    assert any("myriadx_vpu" in plan_profiles(p) for p in router.frontier)
+
+
+def test_total_loss_drops_and_reports():
+    layers = _layers()
+    router = Router(layers, [_pool("only", ("mpsoc_dpu",), layers)])
+    fc = FailoverController(router, PoolFaultInjector(
+        [PoolFault("only", at_s=0.0, duration_s=math.inf)]))
+    assert router.submit(RouterRequest(0, RELAXED, 0.0), 0.0)
+    fc.poll(0.01)
+    snap = router.telemetry.snapshot()
+    assert snap["dropped"] == 1 and snap["violations"] == 1
+    assert router.outstanding == 0
+
+
+def test_pool_fault_injector_orders_events():
+    inj = PoolFaultInjector([PoolFault("b", at_s=2.0, duration_s=1.0),
+                             PoolFault("a", at_s=1.0)])
+    assert [e.fault.pool for e in inj.poll(1.5)] == ["a"]
+    evs = inj.poll(10.0)
+    assert [(e.kind, e.fault.pool) for e in evs] == [("degrade", "b"),
+                                                     ("recover", "b")]
+    assert inj.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# property: dispatch never selects a Pareto-dominated plan
+# ---------------------------------------------------------------------------
+LAYER_TABLES = st.lists(
+    st.tuples(st.floats(1e6, 1e10), st.floats(1e3, 1e7),
+              st.floats(1e3, 1e6)),
+    min_size=2, max_size=8)
+
+
+@given(LAYER_TABLES, st.sampled_from(["none", "kill-vpu"]))
+@settings(deadline=None, max_examples=20)
+def test_dispatch_never_selects_dominated_plan(rows, fault):
+    layers = [LayerCost(f"l{i}", m, w, a, a)
+              for i, (m, w, a) in enumerate(rows)]
+    router = Router(layers, _mixed_fleet(layers))
+    if fault == "kill-vpu":
+        FailoverController(router, PoolFaultInjector(
+            [PoolFault("pool-vpu", at_s=0.0)])).poll(0.0)
+    reference = schedule(layers, sorted(router.available_profiles()))
+    for j, slo in enumerate((RELAXED, ACC_TIGHT, CRITICAL)):
+        req = RouterRequest(j, slo, 0.0)
+        if router.submit(req, 0.0):
+            assert not any(q.dominates(req.plan) for q in reference)
+
+
+# ---------------------------------------------------------------------------
+# BatchingServer non-blocking step API
+# ---------------------------------------------------------------------------
+def test_server_step_interleaves_to_same_outputs():
+    import jax
+
+    from repro.models import transformer as T
+    from repro.runtime.serve import BatchingServer, Request
+
+    cfg = tiny_dense()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(3)]
+
+    srv_a = BatchingServer(params, cfg, max_batch=2, prompt_len=8,
+                           max_len=16)
+    srv_b = BatchingServer(params, cfg, max_batch=2, prompt_len=8,
+                           max_len=16)
+    for i, p in enumerate(prompts):
+        srv_a.submit(Request(i, p, max_new=3))
+        srv_b.submit(Request(i, p, max_new=3))
+    while srv_a.pending:               # one decode step at a time
+        srv_a.step()
+    done_b = srv_b.flush() + srv_b.flush()
+    assert len(done_b) == 3 and len(srv_a.done) == 3
+    for i in range(3):
+        np.testing.assert_array_equal(srv_a.done[i].output,
+                                      srv_b.done[i].output)
