@@ -1,0 +1,167 @@
+"""Decode-engine benchmark: continuous batching vs the windowed baseline.
+
+    PYTHONPATH=src python -m benchmarks.decode_bench [--smoke] \
+        [--out BENCH_decode.json] [--min-speedup 1.5]
+
+Serves the same mixed-``max_new`` workload through the windowed
+:class:`BatchingServer` and the slot-based
+:class:`ContinuousBatchingEngine` on two tiny configs (CPU / interpret
+numbers — the *ratio* is the point: the windowed loop burns
+``max(max_new)`` decode steps on every request in a window and blocks
+admissions until the window drains, so its tokens/s collapses as the
+``max_new`` mix widens).  Measures per run:
+
+  * tokens/s — real sampled tokens over wall time;
+  * p50/p99 inter-token latency — decode-step durations (the gap
+    between consecutive tokens of any in-flight request);
+  * mean slot occupancy — useful slots per decode step.
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks
+and writes the full metrics as JSON (the CI smoke step keeps
+``BENCH_decode.json`` as the perf-trajectory point).  With
+``--min-speedup`` the run *fails* when continuous/windowed tokens/s
+falls below the bar — the CI regression tripwire for the decode path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+PROMPT_LEN = 8
+
+
+def _configs():
+    from repro.configs.base import ModelConfig
+    return [
+        ModelConfig(name="tiny-mha", family="dense", num_layers=2,
+                    d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                    vocab_size=256, remat=False),
+        ModelConfig(name="tiny-gqa", family="dense", num_layers=2,
+                    d_model=64, num_heads=8, num_kv_heads=2, d_ff=128,
+                    vocab_size=256, remat=False),
+    ]
+
+
+def _workload(n: int, max_new_hi: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [(i, rng.integers(0, 256, int(rng.integers(2, PROMPT_LEN))
+                             ).astype(np.int32),
+             int(rng.integers(1, max_new_hi + 1)))
+            for i in range(n)]
+
+
+def _serve(server, workload) -> dict:
+    from repro.runtime.serve import Request
+    for rid, prompt, max_new in workload:
+        server.submit(Request(rid, prompt, max_new=max_new))
+    step_times = []
+    t0 = time.perf_counter()
+    c0 = time.process_time()
+    while server.pending:
+        s0 = time.perf_counter()
+        server.step()
+        step_times.append(time.perf_counter() - s0)
+    cpu = time.process_time() - c0     # immune to co-tenant wall noise
+    wall = time.perf_counter() - t0
+    tokens = sum(len(server.done[rid].output) for rid, _, _ in workload)
+    st = np.sort(np.asarray(step_times))
+    return {"tokens": tokens, "wall_s": round(wall, 4),
+            "cpu_s": round(cpu, 4),
+            "tokens_per_s": round(tokens / cpu, 1),
+            "tokens_per_wall_s": round(tokens / wall, 1),
+            "steps": len(step_times),
+            "intertoken_p50_ms": round(1e3 * float(st[len(st) // 2]), 3),
+            "intertoken_p99_ms": round(
+                1e3 * float(st[min(len(st) - 1, int(0.99 * len(st)))]), 3)}
+
+
+def run_config(cfg, n_requests: int, max_new_hi: int, slots: int = 8,
+               repeats: int = 3) -> dict:
+    import jax
+    from repro.models import transformer as T
+    from repro.runtime.serve import BatchingServer, ContinuousBatchingEngine
+
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    max_len = PROMPT_LEN + max_new_hi
+    workload = _workload(n_requests, max_new_hi)
+
+    def fresh(kind):
+        if kind == "windowed":
+            return BatchingServer(params, cfg, max_batch=slots,
+                                  prompt_len=PROMPT_LEN, max_len=max_len)
+        return ContinuousBatchingEngine(params, cfg, max_slots=slots,
+                                        prompt_len=PROMPT_LEN,
+                                        max_len=max_len, block_size=8)
+
+    out = {"config": cfg.name, "requests": n_requests,
+           "max_new_mix": [1, max_new_hi], "slots": slots}
+    for kind in ("windowed", "continuous"):
+        srv = fresh(kind)
+        # warm every jitted program on the SAME instance (each server owns
+        # its own jit wrappers), negative rids so they never collide
+        warm = [(-rid - 1, p, mn)
+                for rid, p, mn in _workload(slots, max_new_hi, seed=99)]
+        _serve(srv, warm)
+        if kind == "continuous":          # restart telemetry post-warm
+            srv.total_tokens, srv.decode_steps, srv.occupancy_sum = 0, 0, 0.0
+        # best-of-N: co-tenant noise on shared CI boxes only ever slows a
+        # run down, so min CPU time is the honest per-step cost estimate
+        best = None
+        for rep in range(repeats):
+            shifted = [(rid + rep * n_requests, p, mn)
+                       for rid, p, mn in workload]
+            res = _serve(srv, shifted)
+            if best is None or res["cpu_s"] < best["cpu_s"]:
+                best = res
+        res = best
+        if kind == "continuous":
+            res["mean_occupancy"] = round(srv.stats()["mean_occupancy"], 4)
+        out[kind] = res
+    out["speedup_tokens_per_s"] = round(
+        out["continuous"]["tokens_per_s"] / out["windowed"]["tokens_per_s"],
+        3)
+    return out
+
+
+def main(csv: bool = True, out: str | None = None, smoke: bool = False,
+         min_speedup: float = 0.0):
+    n = 64 if smoke else 96
+    results = [run_config(cfg, n_requests=n, max_new_hi=24,
+                          repeats=3 if smoke else 4)
+               for cfg in _configs()]
+    if csv:
+        for r in results:
+            w, c = r["windowed"], r["continuous"]
+            # us_per_call column is wall time like every other benchmark's
+            # CSV row; the speedup/derived fields use the noise-robust
+            # CPU-time tokens/s
+            us = 1e6 / max(c["tokens_per_wall_s"], 1e-9)
+            print(f"decode_{r['config']},{us:.1f},"
+                  f"cont_tps={c['tokens_per_s']};win_tps={w['tokens_per_s']};"
+                  f"speedup={r['speedup_tokens_per_s']};"
+                  f"p50_ms={c['intertoken_p50_ms']};"
+                  f"p99_ms={c['intertoken_p99_ms']};"
+                  f"occ={c['mean_occupancy']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    for r in results:
+        if min_speedup and r["speedup_tokens_per_s"] < min_speedup:
+            raise SystemExit(
+                f"decode perf regression: {r['config']} continuous/windowed "
+                f"speedup {r['speedup_tokens_per_s']} < {min_speedup}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write full JSON here")
+    ap.add_argument("--smoke", action="store_true", help="small CI run")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail unless continuous beats windowed by this "
+                         "tokens/s factor")
+    args = ap.parse_args()
+    main(out=args.out, smoke=args.smoke, min_speedup=args.min_speedup)

@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * roofline_*   — per-(arch x shape) roofline terms from dry-run artifacts
   * router_*     — fleet-router dispatch throughput / SLO violations /
                    failover (synthetic open-loop traffic)
+  * decode_*     — continuous-batching engine vs windowed baseline
+                   (tokens/s, inter-token p50/p99, slot occupancy)
 """
 from __future__ import annotations
 
@@ -26,7 +28,7 @@ def main() -> None:
                     help="cost-model rows only (fast CI mode)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (fig2_throughput, partition_sweep,
+    from benchmarks import (decode_bench, fig2_throughput, partition_sweep,
                             precision_micro, roofline_bench, router_bench,
                             table1_ursonet)
 
@@ -41,6 +43,7 @@ def main() -> None:
         table1_ursonet.main(steps=600 if args.full else 250)
     roofline_bench.main()
     router_bench.main(n=200 if not args.full else 400)
+    decode_bench.main(smoke=not args.full)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,8 @@ Public API surface:
     from repro.core import qat                 # train/serve plan lifecycle
     from repro.models import transformer       # forward / decode / loss
     from repro.runtime.train_loop import Trainer
-    from repro.runtime.serve import BatchingServer
+    from repro.runtime.serve import BatchingServer          # windowed
+    from repro.runtime.serve import ContinuousBatchingEngine  # paged slots
 """
 
 __version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""Version compat for Pallas TPU symbols.
+
+``pltpu.CompilerParams`` was ``pltpu.TPUCompilerParams`` before the
+rename; the container's jax only has the old name.  Every kernel module
+imports the resolved class from here so the kernels run on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+assert CompilerParams is not None, "no Pallas TPU CompilerParams class"

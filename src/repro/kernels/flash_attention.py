@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import _compat
+
 DEFAULT_BQ = 256
 DEFAULT_BK = 256
 NEG_INF = -1e30
@@ -28,6 +30,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   bq: int, bk: int, scale: float, num_kv: int):
+    q_idx = pl.program_id(1)
     kv_idx = pl.program_id(2)
 
     @pl.when(kv_idx == 0)
@@ -36,24 +39,30 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32) * scale          # [bq, d]
-    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
-    v = v_ref[0].astype(jnp.float32)
+    # Causality: a tile whose first k position is past the tile's last q
+    # position is fully masked — skip both MXU matmuls for the whole
+    # upper-triangular half of the (q, kv) grid (~2x at long S).
+    @pl.when(kv_idx * bk <= q_idx * bq + bq - 1)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale      # [bq, d]
+        k = k_ref[0].astype(jnp.float32)              # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
 
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)     # [bq, bk]
-    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
-        jnp.int32, (bq, bk), 0)
-    k_pos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [bq, bk]
+        q_pos = q_idx * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        k_pos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (bq, bk), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(kv_idx == num_kv - 1)
     def _finalize():
@@ -88,7 +97,7 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

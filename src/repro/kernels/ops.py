@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.int8_matmul import (DEFAULT_BK, DEFAULT_BM, DEFAULT_BN,
                                        int8_matmul_pallas)
 from repro.kernels.quant import rowwise_quant_pallas
@@ -78,6 +79,78 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     out = flash_attention_pallas(fold(q), fold(k), fold(v), bq=bq, bk=bk_,
                                  interpret=_interpret())
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def paged_attention_xla(q: jnp.ndarray, k_pool: jnp.ndarray,
+                        v_pool: jnp.ndarray, block_table: jnp.ndarray,
+                        lengths: jnp.ndarray) -> jnp.ndarray:
+    """XLA-native analogue of the Pallas paged-decode kernel: a scan over
+    block-table columns with online softmax — one block per sequence in
+    flight at a time, never the materialized [B, max_len] KV of
+    ``gather_kv``.  This is the fast path on non-TPU backends, where the
+    Pallas kernel would run under the (slow) interpreter."""
+    b, kvp, gp, hd = q.shape
+    page = k_pool.shape[1]
+    mb = block_table.shape[1]
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+
+    def step(carry, j):
+        m, l, acc = carry
+        rows = jnp.maximum(block_table[:, j], 0)
+        k = k_pool[rows].astype(jnp.float32)          # [B, P, KVp, hd]
+        v = v_pool[rows].astype(jnp.float32)
+        s = jnp.einsum("bkgd,bpkd->bkgp", qf, k)
+        pos = j * page + jnp.arange(page)
+        mask = pos[None, :] < lengths[:, None]        # [B, P]
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # zero masked contributions explicitly: for a fully-masked row
+        # (lengths == 0) m_new stays -1e30 and exp(s - m_new) would be 1,
+        # leaking clamped row-0 V; the Pallas kernel returns exactly 0
+        # there (its body never runs) and this path must match
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgp,bpkd->bkgd", p, v)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, kvp, gp), -1e30, jnp.float32),
+            jnp.zeros((b, kvp, gp), jnp.float32),
+            jnp.zeros((b, kvp, gp, hd), jnp.float32))
+    # unrolled: MB is small (max_len / P) and per-iteration scan overhead
+    # would dominate the tiny per-block einsums on CPU
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(mb), unroll=True)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_table: jnp.ndarray,
+                    lengths: jnp.ndarray) -> jnp.ndarray:
+    """One-token paged decode attention — walks the block table, never
+    materializing a sequence's full KV.
+
+    q: [B, KVp, gp, hd] (one query token per sequence, grouped-query
+    layout); k_pool/v_pool: [num_rows, P, KVp, hd] shared block pools;
+    block_table: [B, MB] int32; lengths: [B] int32.  Returns
+    [B, KVp, gp, hd].  See kernels/paged_attention.py for the layout
+    contract.  No shape padding here: head_layout already aligns KVp/gp
+    and the pool's P is the engine's block size.
+
+    Backend selection differs from the other wrappers: on TPU the Pallas
+    kernel runs compiled; elsewhere the serving path takes the XLA
+    block-walk analogue at full native speed instead of the Pallas
+    interpreter (which emulates the grid serially — fine for the
+    equivalence tests that pin kernel-vs-reference numerics, hopeless
+    for a throughput benchmark).  ``REPRO_PAGED_PALLAS=1`` forces the
+    interpreted kernel for debugging.
+    """
+    if not _interpret() or os.environ.get("REPRO_PAGED_PALLAS") == "1":
+        return paged_attention_pallas(q, k_pool, v_pool, block_table,
+                                      lengths, interpret=_interpret())
+    return paged_attention_xla(q, k_pool, v_pool, block_table, lengths)
 
 
 def selective_scan(x, dt, b, c, a, d, bd: int = 512, q: int = 256):

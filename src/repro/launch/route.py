@@ -124,26 +124,39 @@ def lm_section(args) -> dict:
 
 
 def lm_execute_section(args) -> dict:
-    """Real decode: an LM pool backed by a BatchingServer, driven through
+    """Real decode: an LM pool backed by the continuous-batching engine
+    (or the windowed baseline with ``--windowed-lm``), driven through
     the router via its non-blocking step() executor."""
     import jax
 
     from repro.configs import get_config
     from repro.models import transformer as T
-    from repro.runtime.serve import BatchingServer
+    from repro.runtime.serve import BatchingServer, ContinuousBatchingEngine
 
     cfg = get_config(args.arch, smoke=True)
     params = T.model_init(jax.random.PRNGKey(0), cfg)
     layers = transformer_layer_costs(cfg, seq_len=16)
-    srv = BatchingServer(params, cfg, max_batch=4, prompt_len=16, max_len=24)
+    max_len = 16 + max(args.max_new, 2)    # warm-up request uses max_new=2
+    srv = None
+    if not args.windowed_lm:
+        try:
+            srv = ContinuousBatchingEngine(params, cfg, max_slots=4,
+                                           prompt_len=16, max_len=max_len,
+                                           block_size=8)
+        except ValueError:        # hybrid/SSM stack: paged decode is attn-only
+            pass
+    if srv is None:
+        srv = BatchingServer(params, cfg, max_batch=4, prompt_len=16,
+                             max_len=max_len)
     # warm up the jitted prefill/decode so the one-off compile time does
     # not land in the first routed batch's latency telemetry
     from repro.runtime.serve import Request as ServeRequest
     srv.submit(ServeRequest(-1, np.array([1, 2], np.int32), max_new=2))
     srv.flush()
-    pools = [AcceleratorPool("lm-real", ("tpu_v5e_bf16",),
-                             ServerExecutor(srv, max_new=args.max_new),
+    executor = ServerExecutor(srv, max_new=args.max_new)
+    pools = [AcceleratorPool("lm-real", ("tpu_v5e_bf16",), executor,
                              capacity=1, max_window=4, max_wait_s=0.0)]
+    executor.counters = pools[0].counters      # tokens/s + occupancy
     relaxed = SLOClass("lm-offline", max_latency_s=120.0)
     router = Router(layers, pools)
     fc = FailoverController(router, PoolFaultInjector())
@@ -175,7 +188,10 @@ def main():
     ap.add_argument("--lm", action="store_true",
                     help="also route an LM workload over TPU v5e pools")
     ap.add_argument("--execute-lm", action="store_true",
-                    help="route real decodes through a BatchingServer pool")
+                    help="route real decodes through an LM server pool")
+    ap.add_argument("--windowed-lm", action="store_true",
+                    help="--execute-lm with the windowed BatchingServer "
+                         "baseline instead of the continuous engine")
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true")   # accepted for parity
     ap.add_argument("--seq", type=int, default=512)

@@ -28,7 +28,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.precision import PrecisionPolicy, DEFAULT_POLICY
 from repro.core.quantization import pdot
+from repro.kernels import ops as kops
 from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+from repro.runtime import paging
 
 NEG_INF = -1e30
 
@@ -240,6 +242,34 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int = 1,
     return KVCache(jnp.zeros(shape, dtype),
                    jnp.zeros(shape, dtype),
                    jnp.zeros((), jnp.int32))
+
+
+def paged_decode_attention_apply(params: Dict, cfg: ModelConfig,
+                                 x: jnp.ndarray,
+                                 state: paging.PagedKVState,
+                                 positions: jnp.ndarray,
+                                 policy: PrecisionPolicy = DEFAULT_POLICY
+                                 ) -> Tuple[jnp.ndarray, paging.PagedKVState]:
+    """One-token decode step against a paged KV cache.  x: [B, 1, D].
+
+    Unlike the dense path there is no single ``cache.pos``: every batch
+    slot sits at its own context length, so the caller passes per-
+    sequence rope ``positions`` [B, 1] (== ``state.lengths[:, None]``).
+    The new token is appended into the slot's current block and
+    attention walks the block table in the Pallas kernel — the full KV
+    is never materialized.  Sliding-window and int8 KV modes are dense-
+    path-only (the serving engine rejects those configs up front).
+    """
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim()
+    q, k, v = _project_qkv(params, cfg, x, positions, policy)
+    state = paging.append_tokens(state, k[:, 0], v[:, 0])
+    kvp = k.shape[2]
+    qh = q[:, 0].reshape(b, kvp, -1, hd)          # grouped-query layout
+    out = kops.paged_attention(qh, state.k_pool, state.v_pool,
+                               state.block_table, state.lengths)
+    out = out.reshape(b, 1, -1).astype(x.dtype)
+    return pdot(out, params["wo"], policy), state
 
 
 def decode_attention_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,

@@ -24,6 +24,8 @@ from repro.core.partition import PartitionPlan
 from repro.core.precision import PrecisionPolicy
 from repro.models import attention as attn
 from repro.models import mamba as mam
+from repro.runtime import paging
+from repro.runtime.paging import PagedKVState
 from repro.models import rwkv as rwk
 from repro.models import moe as moe_mod
 from repro.models.layers import (cross_entropy, embed, embedding_init,
@@ -123,6 +125,49 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int = 1):
         lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape), one)
 
 
+def init_paged_decode_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                            block_size: int, tp: int = 1,
+                            max_blocks: Optional[int] = None,
+                            dtype=jnp.bfloat16):
+    """Per-sublayer paged KV caches for continuous-batching decode.
+
+    Every attention sublayer gets its own block pool; table and lengths
+    are replicated per super-block so the stacked cache scans exactly
+    like the dense one (the engine keeps them in lockstep from its
+    host-side mirror).  Paged decode is attention-only for now — SSM /
+    RWKV recurrent states are tiny and per-slot already, but their
+    prefill handoff into a mixed paged batch is future work (see
+    ROADMAP "decode engine").
+    """
+    pat = sublayer_pattern(cfg)
+    bad = [kind for kind, _ in pat if kind != "attention"]
+    if bad:
+        raise ValueError(f"paged decode needs an attention-only stack; "
+                         f"{cfg.name} has {sorted(set(bad))} sublayers")
+    if cfg.sliding_window:
+        raise ValueError("paged decode does not support sliding windows")
+    if cfg.kv_cache_dtype == "int8":
+        raise ValueError("paged decode does not support int8 KV caches")
+    lay = attn.head_layout(cfg.num_heads, cfg.num_kv_heads, tp)
+    hd = cfg.resolved_head_dim()
+    n_super = cfg.num_layers // len(pat)
+    one = {f"sub_{j}": paging.init_paged_cache(
+               batch, num_blocks, block_size, lay.KVp, hd, dtype=dtype,
+               max_blocks=max_blocks)
+           for j in range(len(pat))}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape), one)
+
+
+def first_paged_state(cache) -> Optional[PagedKVState]:
+    """The first PagedKVState in a cache tree (None when fully dense)."""
+    for leaf in jax.tree_util.tree_leaves(
+            cache, is_leaf=lambda s: isinstance(s, PagedKVState)):
+        if isinstance(leaf, PagedKVState):
+            return leaf
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Apply
 # ---------------------------------------------------------------------------
@@ -137,8 +182,12 @@ def _sublayer_apply(sub: Dict, cfg: ModelConfig, kind: str, is_moe: bool,
     new_cache = cache
     if kind == "attention":
         if decode:
-            out, new_cache = attn.decode_attention_apply(sub["mixer"], cfg, h,
-                                                         cache, policy)
+            if isinstance(cache, PagedKVState):
+                out, new_cache = attn.paged_decode_attention_apply(
+                    sub["mixer"], cfg, h, cache, positions, policy)
+            else:
+                out, new_cache = attn.decode_attention_apply(
+                    sub["mixer"], cfg, h, cache, policy)
         else:
             out = attn.attention_apply(sub["mixer"], cfg, h, positions, policy)
             if cache is not None:
@@ -332,8 +381,16 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
     if frontend_embeds is not None:
         x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
     if decode:
-        start = cache_position(cfg, cache)
-        positions = jnp.broadcast_to(start, (x.shape[0], 1)).astype(jnp.int32)
+        ps = first_paged_state(cache)
+        if ps is not None:
+            # paged decode: every batch slot sits at its own context
+            # length, so positions are per-sequence, not a scalar
+            lens = ps.lengths[0] if ps.lengths.ndim == 2 else ps.lengths
+            positions = lens[:, None].astype(jnp.int32)
+        else:
+            start = cache_position(cfg, cache)
+            positions = jnp.broadcast_to(start,
+                                         (x.shape[0], 1)).astype(jnp.int32)
     else:
         positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
                                      x.shape[:2])

@@ -51,16 +51,26 @@ class PoolCounters:
     batches: int = 0
     energy_j: float = 0.0                 # cost-model energy estimate
     busy_s: float = 0.0                   # time spent executing batches
+    tokens_generated: int = 0             # LM pools: real sampled tokens
     queue_depth: Histogram = field(default_factory=Histogram)
     batch_size: Histogram = field(default_factory=Histogram)
+    slot_occupancy: Histogram = field(default_factory=Histogram)
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Decode throughput over time actually spent executing."""
+        return self.tokens_generated / self.busy_s if self.busy_s else 0.0
 
     def summary(self) -> Dict:
         return {"dispatched": self.dispatched, "completed": self.completed,
                 "evicted": self.evicted, "batches": self.batches,
                 "energy_j": round(self.energy_j, 4),
                 "busy_s": round(self.busy_s, 4),
+                "tokens_generated": self.tokens_generated,
+                "tokens_per_s": round(self.tokens_per_s, 2),
                 "queue_depth": self.queue_depth.summary(),
-                "batch_size": self.batch_size.summary()}
+                "batch_size": self.batch_size.summary(),
+                "slot_occupancy": self.slot_occupancy.summary()}
 
 
 class Telemetry:

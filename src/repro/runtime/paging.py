@@ -6,9 +6,24 @@ fixed-size token blocks; each sequence owns a block table (indices into
 the pool) that grows on demand and frees on completion — fragmentation-
 free reuse across a serving batch, the enabler for continuous batching.
 
-Pure-JAX data plane (gather/scatter on the pool) + a tiny host-side
-allocator; attention against a paged cache gathers the sequence's blocks
-then proceeds exactly like the dense path (equivalence is tested).
+Pure-JAX data plane (scatter on the pool) + a tiny host-side allocator.
+Two attention paths read the paged cache:
+
+  * ``paged_decode_attention`` — gathers the sequence's blocks into a
+    dense ``[B, max_len, ...]`` buffer, then a dense softmax.  O(context)
+    HBM traffic per decode step; kept as the *reference* the Pallas
+    kernel is validated against.
+  * ``kernels.ops.paged_attention`` — walks the block table inside the
+    kernel grid (scalar-prefetch index maps), O(blocks-touched) traffic.
+    This is what the continuous-batching engine serves with.
+
+Layout note: pools carry ``num_blocks + 1`` rows.  The last row is a
+*trash row* the allocator never hands out; ``append_tokens`` routes
+writes from batch slots with no allocated blocks (inactive slots of a
+fixed-size serving batch) into it so they can ride in the same scatter
+without corrupting live blocks.  Readers never touch it: ``gather_kv``
+clamps dead table entries to row 0 and masks by length, and the Pallas
+kernel predicates those blocks off entirely.
 """
 from __future__ import annotations
 
@@ -19,8 +34,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class OutOfBlocksError(RuntimeError):
+    """KV block pool exhausted — callers defer admission instead of dying.
+
+    Subclasses RuntimeError so legacy ``except RuntimeError`` sites keep
+    working; the serving engine catches this type to hold a request in
+    its queue until completions release blocks.
+    """
+
+
 class PagedKVState(NamedTuple):
-    k_pool: jnp.ndarray       # [num_blocks, P, KVp, hd]
+    k_pool: jnp.ndarray       # [num_blocks + 1, P, KVp, hd] (last = trash)
     v_pool: jnp.ndarray
     block_table: jnp.ndarray  # [B, max_blocks] int32 (-1 = unallocated)
     lengths: jnp.ndarray      # [B] int32 tokens written per sequence
@@ -30,11 +54,12 @@ class BlockAllocator:
     """Host-side free-list over the shared pool."""
 
     def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
         self.free: List[int] = list(range(num_blocks - 1, -1, -1))
 
     def alloc(self) -> int:
         if not self.free:
-            raise RuntimeError("KV block pool exhausted")
+            raise OutOfBlocksError("KV block pool exhausted")
         return self.free.pop()
 
     def release(self, blocks) -> None:
@@ -49,26 +74,64 @@ class BlockAllocator:
 
 def init_paged_cache(batch: int, num_blocks: int, block_size: int,
                      kv_heads: int, head_dim: int,
-                     dtype=jnp.bfloat16) -> PagedKVState:
-    max_blocks = num_blocks  # upper bound; tables are mostly -1
+                     dtype=jnp.bfloat16,
+                     max_blocks: Optional[int] = None) -> PagedKVState:
+    """Pools get one extra trash row (see module docstring).
+
+    ``max_blocks`` bounds the per-sequence table width (defaults to
+    ``num_blocks``: any sequence may own the whole pool).  The serving
+    engine passes ``ceil(max_len / block_size)`` so the kernel's table
+    walk is O(max_len / P), not O(pool size).
+    """
+    if max_blocks is None:
+        max_blocks = num_blocks
     return PagedKVState(
-        jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
-        jnp.zeros((num_blocks, block_size, kv_heads, head_dim), dtype),
+        jnp.zeros((num_blocks + 1, block_size, kv_heads, head_dim), dtype),
+        jnp.zeros((num_blocks + 1, block_size, kv_heads, head_dim), dtype),
         -jnp.ones((batch, max_blocks), jnp.int32),
         jnp.zeros((batch,), jnp.int32))
 
 
-def ensure_blocks(state: PagedKVState, alloc: BlockAllocator,
-                  new_tokens: np.ndarray) -> PagedKVState:
-    """Host step: grow each sequence's table to cover len+new tokens."""
-    p = state.k_pool.shape[1]
-    table = np.asarray(state.block_table).copy()
-    lengths = np.asarray(state.lengths)
-    for i, add in enumerate(np.asarray(new_tokens)):
-        need = -(-(int(lengths[i]) + int(add)) // p)
-        have = int((table[i] >= 0).sum())
+def plan_blocks(table: np.ndarray, alloc: BlockAllocator,
+                need_blocks: np.ndarray) -> np.ndarray:
+    """Host step: grow each sequence's table row to ``need_blocks[i]``.
+
+    Atomic: the total block need is checked against the allocator before
+    anything is taken, so an :class:`OutOfBlocksError` leaks nothing and
+    the caller can simply retry later.  Returns a new table array
+    (``table`` itself is not mutated).  Counts are *blocks*, not tokens —
+    ``ensure_blocks`` does the token division; the serving engine calls
+    this directly on its host-side table mirror.
+    """
+    table = np.asarray(table).copy()
+    grows = []
+    total = 0
+    for i, add in enumerate(np.asarray(need_blocks)):
+        need, have = int(add), int((table[i] >= 0).sum())
+        if need > table.shape[1]:
+            raise OutOfBlocksError(
+                f"KV block pool exhausted: sequence {i} needs {need} "
+                f"blocks > table width {table.shape[1]}")
+        if need > have:
+            grows.append((i, have, need))
+            total += need - have
+    if total > alloc.available:
+        raise OutOfBlocksError(
+            f"KV block pool exhausted: need {total} blocks, "
+            f"{alloc.available} available")
+    for i, have, need in grows:
         for j in range(have, need):
             table[i, j] = alloc.alloc()
+    return table
+
+
+def ensure_blocks(state: PagedKVState, alloc: BlockAllocator,
+                  new_tokens: np.ndarray) -> PagedKVState:
+    """Grow each sequence's table to cover len+new tokens (atomic)."""
+    p = state.k_pool.shape[1]
+    lengths = np.asarray(state.lengths)
+    need = -(-(lengths + np.asarray(new_tokens)) // p)   # blocks, not tokens
+    table = plan_blocks(np.asarray(state.block_table), alloc, need)
     return state._replace(block_table=jnp.asarray(table))
 
 
@@ -86,16 +149,79 @@ def release_sequence(state: PagedKVState, alloc: BlockAllocator,
 @jax.jit
 def append_tokens(state: PagedKVState, k: jnp.ndarray,
                   v: jnp.ndarray) -> PagedKVState:
-    """Write one new token per sequence.  k, v: [B, KVp, hd]."""
+    """Write one new token per sequence.  k, v: [B, KVp, hd].
+
+    Sequences whose next block is unallocated (inactive slots of a
+    fixed-size serving batch) write to the trash row instead and their
+    length does not advance — the continuous-batching engine relies on
+    this to run one fixed-shape scatter for a partially-occupied batch.
+    """
     p = state.k_pool.shape[1]
-    blk_idx = state.lengths // p
+    trash = state.k_pool.shape[0] - 1
+    blk_idx = jnp.minimum(state.lengths // p, state.block_table.shape[1] - 1)
     blk = jnp.take_along_axis(state.block_table, blk_idx[:, None],
                               axis=1)[:, 0]                    # [B]
-    off = state.lengths % p
+    active = blk >= 0
+    blk = jnp.where(active, blk, trash)
+    off = jnp.where(active, state.lengths % p, 0)
     k_pool = state.k_pool.at[blk, off].set(k.astype(state.k_pool.dtype))
     v_pool = state.v_pool.at[blk, off].set(v.astype(state.v_pool.dtype))
     return PagedKVState(k_pool, v_pool, state.block_table,
-                        state.lengths + 1)
+                        state.lengths + active.astype(jnp.int32))
+
+
+@jax.jit
+def write_prefill(state: PagedKVState, k: jnp.ndarray, v: jnp.ndarray,
+                  seq) -> PagedKVState:
+    """Paste a prefilled sequence's KV into its blocks in one scatter.
+
+    k, v: [S, KVp, hd] — tokens 0..S-1 of sequence ``seq`` (whose table
+    row must already cover ceil(S / P) blocks and whose length restarts
+    at S).  The pad tail of the last block is zero-filled; it sits past
+    ``lengths[seq]`` so every reader masks it off, and subsequent
+    ``append_tokens`` writes land on the exact slots anyway.
+    """
+    p = state.k_pool.shape[1]
+    s = k.shape[0]
+    nb = -(-s // p)
+    pad = nb * p - s
+
+    def blocked(x):
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        return x.reshape(nb, p, *x.shape[1:])
+    rows = jnp.maximum(state.block_table[seq, :nb], 0)
+    k_pool = state.k_pool.at[rows].set(blocked(k).astype(state.k_pool.dtype))
+    v_pool = state.v_pool.at[rows].set(blocked(v).astype(state.v_pool.dtype))
+    return PagedKVState(k_pool, v_pool, state.block_table,
+                        state.lengths.at[seq].set(s))
+
+
+@jax.jit
+def write_prefill_batch(state: PagedKVState, k: jnp.ndarray,
+                        v: jnp.ndarray, admit: jnp.ndarray) -> PagedKVState:
+    """Batched :func:`write_prefill`: paste every admitted slot's prefill
+    KV in one scatter.
+
+    k, v: [B, S, KVp, hd] — the whole prefill batch; ``admit``: [B] bool.
+    Non-admitted rows (occupied slots riding along in the fixed-shape
+    prefill bucket, or empty slots) scatter into the trash row; admitted
+    rows land in their table blocks and restart at length S.
+    """
+    p = state.k_pool.shape[1]
+    trash = state.k_pool.shape[0] - 1
+    b, s = k.shape[:2]
+    nb = -(-s // p)
+    pad = nb * p - s
+
+    def blocked(x):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x.reshape(b * nb, p, *x.shape[2:])
+    rows = state.block_table[:, :nb]
+    rows = jnp.where(admit[:, None] & (rows >= 0), rows, trash).reshape(-1)
+    k_pool = state.k_pool.at[rows].set(blocked(k).astype(state.k_pool.dtype))
+    v_pool = state.v_pool.at[rows].set(blocked(v).astype(state.v_pool.dtype))
+    return PagedKVState(k_pool, v_pool, state.block_table,
+                        jnp.where(admit, s, state.lengths))
 
 
 def gather_kv(state: PagedKVState, max_len: int
@@ -119,7 +245,12 @@ def gather_kv(state: PagedKVState, max_len: int
 
 def paged_decode_attention(q: jnp.ndarray, state: PagedKVState,
                            max_len: int) -> jnp.ndarray:
-    """q: [B, KVp, gp, hd] (one token) -> [B, KVp, gp, hd]."""
+    """q: [B, KVp, gp, hd] (one token) -> [B, KVp, gp, hd].
+
+    Reference path: gathers the full KV then runs a dense softmax.  The
+    serving engine uses the Pallas kernel (``kernels.ops.paged_attention``)
+    instead; tests check the two agree.
+    """
     import math
     k, v, valid = gather_kv(state, max_len)
     hd = q.shape[-1]

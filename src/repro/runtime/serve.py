@@ -1,21 +1,45 @@
-"""Batched serving loop: request queue -> bounded batching window ->
-prefill -> greedy decode.
+"""Serving loops: windowed batching (baseline) and slot-based continuous
+batching (the fast path).
 
-Straggler mitigation at serve time: the batching window is bounded (a
-request waits at most ``window`` flushes), and batches are padded to a
-fixed set of bucket sizes so every flush hits a pre-compiled program —
-no compile stalls in the serving path.
+Two servers share one request API (``submit`` / ``step`` / ``flush`` /
+``done``), so the router's :class:`~repro.router.pool.ServerExecutor`
+drives either:
+
+* :class:`BatchingServer` — the original *windowed* loop: a bounded
+  window of requests prefills together, then every request decodes for
+  ``max(max_new)`` steps.  Finished requests keep burning decode steps
+  as padding, and newly-arrived requests wait for the whole window to
+  drain.  Kept as the baseline that ``benchmarks/decode_bench.py``
+  measures the continuous engine against.
+
+* :class:`ContinuousBatchingEngine` — a fixed set of *slots* over a
+  shared paged KV pool (``runtime/paging.py``).  A request is admitted
+  into any free slot the moment enough KV blocks exist (its whole
+  ``prompt_len + max_new`` budget is reserved up front, so a running
+  request can never strand mid-decode); it decodes for *exactly* its
+  own ``max_new`` steps; the step it finishes, its blocks free and its
+  slot is re-admittable — decode proceeds continuously while slots
+  churn.  Admission that would overcommit the pool raises
+  :class:`~repro.runtime.paging.OutOfBlocksError` internally and the
+  request simply waits in the queue.  Attention runs the Pallas
+  paged-decode kernel (``kernels/paged_attention.py``): the block table
+  is walked in-kernel, so per-step HBM traffic is O(blocks touched),
+  not O(batch * max_len) gather.
+
+Shapes stay bucket-fixed in both servers (``max_batch`` / ``max_slots``
+and ``prompt_len``), so every step hits a pre-compiled program — no
+compile stalls in the serving path.
 
 Two granularities of progress:
-  * ``flush()`` — blocking: serve one whole window (prefill + full decode).
-  * ``step()``  — non-blocking building block: advance by ONE unit of work
-    (a prefill or a single decode step) and return immediately.  This is
-    what lets several servers — the router's accelerator pools — interleave
-    on one host instead of each monopolizing it for a full generation.
+  * ``flush()`` — blocking: run until at least one request completes.
+  * ``step()``  — non-blocking building block: advance by ONE unit of
+    work and return immediately.  This is what lets several servers —
+    the router's accelerator pools — interleave on one host instead of
+    each monopolizing it for a full generation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import jax
@@ -25,6 +49,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.partition import PartitionPlan
 from repro.models import transformer as T
+from repro.runtime import paging
+from repro.runtime.paging import BlockAllocator, OutOfBlocksError
 
 
 @dataclass
@@ -70,6 +96,13 @@ class BatchingServer:
         """Requests admitted but not yet completed (queued + in-window)."""
         return len(self.queue) + (len(self._active.batch)
                                   if self._active else 0)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of batch slots doing useful work right now."""
+        if self._active is None:
+            return 0.0
+        return len(self._active.batch) / self.max_batch
 
     def step(self) -> List[Request]:
         """Advance by one unit of work and return requests it completed.
@@ -124,3 +157,227 @@ class BatchingServer:
             self.done[r.rid] = r
         self._active = None
         return w.batch
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+@dataclass
+class _Slot:
+    """One occupied decode slot."""
+    req: Request
+    gen: List[int]                     # sampled tokens so far
+    remaining: int                     # decode steps left (exact)
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous-batching decode over a paged KV pool.
+
+    ``max_slots`` batch slots share a pool of ``num_blocks`` KV blocks
+    of ``block_size`` tokens.  Requests admit into free slots as soon as
+    the pool can cover their full ``prompt_len + max_new`` budget (the
+    reservation is up-front, so admitted work never deadlocks on
+    blocks), decode for exactly their own ``max_new`` steps, and free
+    their slot + blocks the step they finish.  One ``step()`` =
+    admissions (each a batch-1 prefill pasted into the pool) + one
+    batched decode step for every occupied slot.
+
+    The engine keeps the block table and per-slot lengths as host-side
+    numpy mirrors (the allocator is host code) and pushes them into the
+    per-layer :class:`~repro.runtime.paging.PagedKVState` before each
+    device call; device-side length bumps from ``append_tokens`` are
+    mirrored by the host bookkeeping, so the push is idempotent.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 plan: Optional[PartitionPlan] = None, tp: int = 1,
+                 max_slots: int = 8, prompt_len: int = 32,
+                 max_len: int = 64, block_size: int = 8,
+                 num_blocks: Optional[int] = None):
+        self.params, self.cfg, self.plan, self.tp = params, cfg, plan, tp
+        self.max_slots, self.prompt_len = max_slots, prompt_len
+        self.max_len, self.block_size = max_len, block_size
+        assert max_len > prompt_len, (max_len, prompt_len)
+        self.table_width = -(-max_len // block_size)
+        if num_blocks is None:
+            num_blocks = max_slots * self.table_width
+        assert num_blocks >= self.table_width, \
+            "pool smaller than one max-length request"
+        self.alloc = BlockAllocator(num_blocks)
+        self.table = -np.ones((max_slots, self.table_width), np.int32)
+        self.lengths = np.zeros(max_slots, np.int32)
+        self.caches = T.init_paged_decode_cache(
+            cfg, max_slots, num_blocks, block_size, tp,
+            max_blocks=self.table_width)
+        self.slots: List[Optional[_Slot]] = [None] * max_slots
+        self.last = np.zeros((max_slots, 1), np.int32)
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._dirty = True                    # host table/lengths changed
+        # telemetry
+        self.total_tokens = 0                 # real sampled tokens only
+        self.decode_steps = 0
+        self.occupancy_sum = 0.0
+        # admissions prefill together at the max_slots bucket (rows for
+        # non-admitted slots are dead weight but keep shapes fixed)
+        self._prefill_cache = T.init_cache(cfg, max_slots, prompt_len, tp)
+        self._admit_step = jax.jit(self._admit_impl)
+
+        def _decode_and_sample(p, toks, caches):
+            out = T.decode_step(p, cfg, toks, caches, plan, tp)
+            # greedy sampling inside the program: one dispatch per step,
+            # [B] ints on the wire instead of [B, V] logits
+            return jnp.argmax(out.logits[:, -1], axis=-1), out.cache
+        self._decode = jax.jit(_decode_and_sample)
+
+    # ------------------------------------------------------------------
+    # public API (shared with BatchingServer)
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert req.prompt.shape[0] <= self.prompt_len
+        assert self.prompt_len + req.max_new <= self.max_len, \
+            (req.rid, req.max_new, self.max_len)
+        self.queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        """Requests admitted but not yet completed (queued + in-slot)."""
+        return len(self.queue) + sum(s is not None for s in self.slots)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of decode slots doing useful work right now."""
+        return sum(s is not None for s in self.slots) / self.max_slots
+
+    def step(self) -> List[Request]:
+        """Admit into free slots, then run one decode step; returns the
+        requests completed by either (admission completes ``max_new==1``
+        requests outright — their single token comes from prefill)."""
+        completed = self._admit()
+        completed += self._decode_once()
+        return completed
+
+    def flush(self) -> List[Request]:
+        """Blocking form: run until at least one request completes."""
+        if not self.pending:
+            return []
+        while True:
+            done = self.step()
+            if done:
+                return done
+
+    def stats(self) -> Dict[str, float]:
+        steps = max(self.decode_steps, 1)
+        return {"total_tokens": self.total_tokens,
+                "decode_steps": self.decode_steps,
+                "mean_occupancy": self.occupancy_sum / steps}
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _admit_impl(self, params, toks, prefill_cache, caches, admit):
+        """One fused device call per admission round: bucket-shaped
+        prefill, paste of every admitted row's KV into its paged blocks
+        (non-admitted rows scatter to the trash row), and the first
+        sampled token per row.  The intermediate dense prefill cache
+        never leaves the XLA program."""
+        out = T.prefill(params, self.cfg, toks, prefill_cache,
+                        self.plan, self.tp)
+        new_caches = {}
+        for key, st in caches.items():
+            dc = out.cache[key]
+            new_caches[key] = jax.vmap(
+                paging.write_prefill_batch,
+                in_axes=(0, 0, 0, None))(st, dc.k, dc.v, admit)
+        return jnp.argmax(out.logits[:, -1], axis=-1), new_caches
+
+    def _push_tables(self) -> None:
+        tbl = jnp.asarray(self.table)
+        lens = jnp.asarray(self.lengths)
+
+        def fix(st: paging.PagedKVState) -> paging.PagedKVState:
+            return st._replace(
+                block_table=jnp.broadcast_to(tbl, st.block_table.shape),
+                lengths=jnp.broadcast_to(lens, st.lengths.shape))
+        self.caches = jax.tree_util.tree_map(
+            fix, self.caches,
+            is_leaf=lambda s: isinstance(s, paging.PagedKVState))
+
+    def _admit(self) -> List[Request]:
+        admits: List[tuple] = []
+        for i in range(self.max_slots):
+            if not self.queue:
+                break
+            if self.slots[i] is not None:
+                continue
+            req = self.queue[0]
+            need = [int((self.table[j] >= 0).sum())
+                    for j in range(self.max_slots)]
+            need[i] = -(-(self.prompt_len + req.max_new) // self.block_size)
+            try:
+                self.table = paging.plan_blocks(self.table, self.alloc, need)
+            except OutOfBlocksError:
+                break                      # defer admission; blocks will free
+            admits.append((i, self.queue.pop(0)))
+        if not admits:
+            return []
+        self._push_tables()                # freed + freshly-planned rows
+        self._dirty = False
+        # every admission this round rides one fused prefill+paste call;
+        # each admitted request occupies its slot's batch row, dead rows
+        # keep the compiled shape fixed
+        toks = np.zeros((self.max_slots, self.prompt_len), np.int32)
+        admit = np.zeros(self.max_slots, bool)
+        for i, req in admits:
+            toks[i, -req.prompt.shape[0]:] = req.prompt      # left-pad
+            admit[i] = True
+        firsts, self.caches = self._admit_step(
+            self.params, jnp.asarray(toks), self._prefill_cache,
+            self.caches, jnp.asarray(admit))
+        firsts = np.asarray(firsts)
+        completed: List[Request] = []
+        for i, req in admits:
+            self.lengths[i] = self.prompt_len
+            tok = int(firsts[i])
+            self.total_tokens += 1
+            if req.max_new <= 1:       # done at admission (0 => empty,
+                completed.append(       # matching the windowed baseline)
+                    self._finalize(i, req, [tok][:req.max_new]))
+            else:
+                self.slots[i] = _Slot(req, [tok], req.max_new - 1)
+                self.last[i, 0] = tok
+        return completed
+
+    def _decode_once(self) -> List[Request]:
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return []
+        if self._dirty:
+            self._push_tables()
+            self._dirty = False
+        nxt, self.caches = self._decode(self.params, jnp.asarray(self.last),
+                                        self.caches)
+        nxt = np.asarray(nxt)
+        completed: List[Request] = []
+        for i in active:
+            self.lengths[i] += 1           # mirror device append_tokens
+            s = self.slots[i]
+            s.gen.append(int(nxt[i]))
+            s.remaining -= 1
+            self.last[i, 0] = nxt[i]
+            if s.remaining <= 0:
+                completed.append(self._finalize(i, s.req, s.gen))
+                self.slots[i] = None
+        self.decode_steps += 1
+        self.total_tokens += len(active)
+        self.occupancy_sum += len(active) / self.max_slots
+        return completed
+
+    def _finalize(self, i: int, req: Request, gen: List[int]) -> Request:
+        req.output = np.asarray(gen, np.int32)
+        self.done[req.rid] = req
+        self.alloc.release(self.table[i][self.table[i] >= 0])
+        self.table[i] = -1
+        self.lengths[i] = 0
+        self._dirty = True        # device sees the freed row at next push
+        return req

@@ -69,13 +69,20 @@ def test_compressed_grad_mean_close_to_exact():
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import compressed_grad_mean, CHUNK
 
+        # jax.shard_map (check_vma=) is the renamed
+        # jax.experimental.shard_map.shard_map (check_rep=)
+        if hasattr(jax, "shard_map"):
+            shard_map = partial(jax.shard_map, check_vma=False)
+        else:
+            from jax.experimental.shard_map import shard_map
+            shard_map = partial(shard_map, check_rep=False)
+
         mesh = jax.make_mesh((8,), ("pod",))
         grads = {"w": jax.random.normal(jax.random.PRNGKey(0),
                                         (8, CHUNK * 2)),
                  "b": jax.random.normal(jax.random.PRNGKey(1), (8, 4))}
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("pod"),
-                 out_specs=P(), check_vma=False)
+        @partial(shard_map, mesh=mesh, in_specs=P("pod"), out_specs=P())
         def comp(g):
             g = jax.tree.map(lambda a: a[0], g)
             return compressed_grad_mean(g, "pod")

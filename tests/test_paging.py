@@ -73,3 +73,35 @@ def test_pool_exhaustion_raises():
     state = init_paged_cache(1, 2, P, KV, HD)
     with pytest.raises(RuntimeError, match="exhausted"):
         ensure_blocks(state, alloc, np.array([P * 3]))
+
+
+def test_exhaustion_is_typed_and_atomic():
+    from repro.runtime.paging import OutOfBlocksError
+    alloc = BlockAllocator(3)
+    state = init_paged_cache(2, 3, P, KV, HD)
+    state = ensure_blocks(state, alloc, np.array([P, 0]))
+    with pytest.raises(OutOfBlocksError):
+        # needs 1 + 3 more blocks, only 2 left — nothing may leak, not
+        # even seq 0's satisfiable share
+        ensure_blocks(state, alloc, np.array([P * 2, P * 3]))
+    assert alloc.available == 2
+    assert int((np.asarray(state.block_table) >= 0).sum()) == 1
+
+
+def test_write_prefill_roundtrips_through_gather():
+    from repro.runtime.paging import write_prefill
+    alloc = BlockAllocator(8)
+    state = init_paged_cache(2, 8, P, KV, HD, dtype=jnp.float32)
+    s = 7                                     # partial last block
+    state = ensure_blocks(state, alloc, np.array([s, 0]))
+    rng = np.random.default_rng(5)
+    k = jnp.asarray(rng.normal(size=(s, KV, HD)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(s, KV, HD)).astype(np.float32))
+    state = write_prefill(state, k, v, 0)
+    assert int(state.lengths[0]) == s and int(state.lengths[1]) == 0
+    gk, gv, valid = gather_kv(state, 8)
+    np.testing.assert_allclose(np.asarray(gk[0, :s]), np.asarray(k),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gv[0, :s]), np.asarray(v),
+                               atol=1e-6)
+    assert bool(valid[0, :s].all()) and not bool(valid[0, s:].any())

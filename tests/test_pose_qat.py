@@ -16,8 +16,11 @@ CFG = UrsoNetConfig(name="test", image_hw=(48, 64), widths=(8, 16),
 
 @pytest.fixture(scope="module")
 def fp32_trained():
+    # 250 steps: at 120 the tiny model's noisy per-batch loss sits right
+    # at the 0.7x bar (0.71-0.73 across lrs) — this is the smallest run
+    # that clears it with margin
     return train_ursonet(CFG, PrecisionPolicy.bf16(), PrecisionPolicy.fp32(),
-                         steps=120, batch=16)
+                         steps=250, batch=16)
 
 
 def test_training_reduces_loss(fp32_trained):
@@ -50,7 +53,7 @@ def test_mpai_partition_close_to_baseline(fp32_trained):
     ptq = eval_ursonet(params_fp32, CFG, PrecisionPolicy.int8(),
                        PrecisionPolicy.int8(), batches=4)
     params_mpai, _ = train_ursonet(CFG, PrecisionPolicy.int8_qat(),
-                                   PrecisionPolicy.bf16(), steps=120,
+                                   PrecisionPolicy.bf16(), steps=250,
                                    batch=16)
     mpai = eval_ursonet(params_mpai, CFG, PrecisionPolicy.int8(),
                         PrecisionPolicy.bf16(), batches=4)
