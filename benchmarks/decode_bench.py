@@ -4,8 +4,8 @@
         [--out BENCH_decode.json] [--min-speedup 1.5]
 
 Serves the same mixed-``max_new`` workload through the windowed
-:class:`BatchingServer` and the slot-based
-:class:`ContinuousBatchingEngine` on two tiny configs (CPU / interpret
+baseline and the slot-based continuous-batching engine (both built via
+``repro.serving.make_server``) on two tiny configs (CPU / interpret
 numbers — the *ratio* is the point: the windowed loop burns
 ``max(max_new)`` decode steps on every request in a window and blocks
 admissions until the window drains, so its tokens/s collapses as the
@@ -82,19 +82,19 @@ def run_config(cfg, n_requests: int, max_new_hi: int, slots: int = 8,
                repeats: int = 3) -> dict:
     import jax
     from repro.models import transformer as T
-    from repro.runtime.serve import BatchingServer, ContinuousBatchingEngine
+    from repro.serving import PoolSpec, make_server
 
     params = T.model_init(jax.random.PRNGKey(0), cfg)
-    max_len = PROMPT_LEN + max_new_hi
     workload = _workload(n_requests, max_new_hi)
 
     def fresh(kind):
-        if kind == "windowed":
-            return BatchingServer(params, cfg, max_batch=slots,
-                                  prompt_len=PROMPT_LEN, max_len=max_len)
-        return ContinuousBatchingEngine(params, cfg, max_slots=slots,
-                                        prompt_len=PROMPT_LEN,
-                                        max_len=max_len, block_size=8)
+        # the facade's sanctioned server constructor — the benchmark
+        # builds exactly what FleetSpec-backed pools serve with
+        backend = "windowed" if kind == "windowed" else "engine"
+        return make_server(cfg, params, PoolSpec(
+            f"bench-{kind}", ("tpu_v5e_bf16",), backend=backend,
+            max_slots=slots, prompt_len=PROMPT_LEN, max_new=max_new_hi,
+            block_size=8), warm=False)
 
     out = {"config": cfg.name, "requests": n_requests,
            "max_new_mix": [1, max_new_hi], "slots": slots}
@@ -105,8 +105,7 @@ def run_config(cfg, n_requests: int, max_new_hi: int, slots: int = 8,
         warm = [(-rid - 1, p, mn)
                 for rid, p, mn in _workload(slots, max_new_hi, seed=99)]
         _serve(srv, warm)
-        if kind == "continuous":          # restart telemetry post-warm
-            srv.total_tokens, srv.decode_steps, srv.occupancy_sum = 0, 0, 0.0
+        srv.reset_stats()                 # restart telemetry post-warm
         # best-of-N: co-tenant noise on shared CI boxes only ever slows a
         # run down, so min CPU time is the honest per-step cost estimate
         best = None

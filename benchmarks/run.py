@@ -11,7 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * micro_*      — precision-path microbenchmarks
   * roofline_*   — per-(arch x shape) roofline terms from dry-run artifacts
   * router_*     — fleet-router dispatch throughput / SLO violations /
-                   failover (synthetic open-loop traffic)
+                   failover (synthetic open-loop traffic through the
+                   repro.serving facade), plus router_lm_serving:
+                   engine-backed routed decode vs the windowed baseline
   * decode_*     — continuous-batching engine vs windowed baseline
                    (tokens/s, inter-token p50/p99, slot occupancy)
 """

@@ -4,7 +4,9 @@
   2. let the MPAI scheduler choose a partition (int8 backbone / bf16 head),
   3. partition-aware training (QAT) with the distributed Trainer,
   4. deploy: convert the plan to real-int8 serving and compare perplexity
-     against the bf16 baseline and a PTQ (no-QAT) deployment.
+     against the bf16 baseline and a PTQ (no-QAT) deployment,
+  5. serve the trained model through the ``repro.serving`` facade:
+     FleetSpec -> ServingClient -> streamed tokens.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 200]
 """
@@ -72,6 +74,18 @@ def main():
           f"PTQ-int8={ptq:.4f}")
     print("MPAI deployment keeps the backbone int8 (2x MXU rate, half the "
           "weight bytes) at near-baseline loss; PTQ shows the gap QAT closes.")
+
+    # 5. one front door over the fleet: declare a pool, submit, stream
+    from repro.serving import FleetSpec, PoolSpec
+    fleet = FleetSpec(
+        pools=[PoolSpec("deploy", ("tpu_v5e_int8", "tpu_v5e_bf16"),
+                        backend="engine", capacity=1, max_wait_s=0.0,
+                        max_slots=2, prompt_len=8, max_new=8)],
+        workload="transformer", arch=args.arch, seq_len=shape.seq_len)
+    client = fleet.build(model=(cfg, state.params))
+    prompt = lm_batch(cfg, shape, 42)["tokens"][0, :8]
+    handle = client.submit(jnp.asarray(prompt), slo="offline", max_new=8)
+    print("served through repro.serving:", list(handle.stream()))
 
 
 if __name__ == "__main__":

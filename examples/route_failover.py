@@ -3,50 +3,35 @@
     PYTHONPATH=src python examples/route_failover.py
 
 Routes 60 mixed-SLO UrsoNet inferences across two DPU+VPU boards and an
-EdgeTPU sidecar.  At t=0.5s board-b takes a transient fault; its queued
-and in-flight requests are rescheduled over the survivors and every
-admitted request completes (deadline misses are *reported*, not dropped).
+EdgeTPU sidecar — five lines of fleet spec, one submission interface.
+The sidecar is the energy-optimal operating point, so the router loads
+it up; at t=0.5s it takes a transient SEU and its queued and in-flight
+requests are rescheduled onto the (dearer) boards.  Every admitted
+request completes — deadline misses are *reported*, not dropped.
 """
-import numpy as np
+from repro.router import SLO_CLASSES
+from repro.serving import FaultSpec, FleetSpec, PoolSpec, open_loop
 
-from repro.core.cost_model import layer_costs_from_convspecs
-from repro.models.cnn import ursonet_table1_layers
-from repro.router import (AcceleratorPool, CostModelExecutor,
-                          FailoverController, Router, RouterRequest,
-                          SLO_CLASSES)
-from repro.runtime.fault import PoolFault, PoolFaultInjector
+spec = FleetSpec(
+    pools=[PoolSpec("board-a", ("mpsoc_dpu", "myriadx_vpu"), capacity=2),
+           PoolSpec("board-b", ("mpsoc_dpu", "myriadx_vpu"), capacity=2),
+           PoolSpec("sidecar", ("edge_tpu", "cortex_a53"), capacity=1)],
+    workload="ursonet",
+    accuracy_penalty={"mpsoc_dpu": 0.05},
+    faults=[FaultSpec("sidecar", at_s=0.5, duration_s=1.0)])
+client = spec.build()
 
-layers = layer_costs_from_convspecs(ursonet_table1_layers())
-pools = [
-    AcceleratorPool("board-a", ("mpsoc_dpu", "myriadx_vpu"),
-                    CostModelExecutor(layers), capacity=2),
-    AcceleratorPool("board-b", ("mpsoc_dpu", "myriadx_vpu"),
-                    CostModelExecutor(layers), capacity=2),
-    AcceleratorPool("sidecar", ("edge_tpu", "cortex_a53"),
-                    CostModelExecutor(layers), capacity=1),
-]
-router = Router(layers, pools, accuracy_penalty={"mpsoc_dpu": 0.05})
-fc = FailoverController(router, PoolFaultInjector(
-    [PoolFault("board-b", at_s=0.5, duration_s=1.0)]))
-
-rng = np.random.default_rng(0)
 classes = list(SLO_CLASSES.values())
-t, arrivals = 0.0, []
-for i in range(60):
-    t += rng.exponential(1.0 / 30.0)                     # ~30 req/s
-    arrivals.append(RouterRequest(i, classes[rng.integers(len(classes))], t))
+weights = [1.0 / len(classes)] * len(classes)
+handles = open_loop(client, classes, weights, rate_hz=30.0,
+                    n_requests=60)
 
-t, i = 0.0, 0
-while i < len(arrivals) or router.outstanding or fc.pending_faults:
-    t += 0.002
-    fc.poll(t)
-    while i < len(arrivals) and arrivals[i].arrival_s <= t:
-        router.submit(arrivals[i], t)
-        i += 1
-    router.step(t)
-
-snap = router.telemetry.snapshot()
+snap = client.telemetry
 print(f"admitted={snap['admitted']} completed={snap['completed']} "
       f"violations={snap['violations']} dropped={snap['dropped']} "
       f"failovers={snap['failovers']}")
+rerouted = sum(h.telemetry["rerouted"] > 0 for h in handles)
+print(f"{rerouted} requests were displaced by the SEU and re-served "
+      f"by the surviving boards")
 assert snap["completed"] + snap["dropped"] == snap["admitted"]
+assert rerouted > 0, "the fault should displace in-flight work"

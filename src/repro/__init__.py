@@ -9,8 +9,12 @@ Public API surface:
     from repro.core import qat                 # train/serve plan lifecycle
     from repro.models import transformer       # forward / decode / loss
     from repro.runtime.train_loop import Trainer
-    from repro.runtime.serve import BatchingServer          # windowed
-    from repro.runtime.serve import ContinuousBatchingEngine  # paged slots
+    from repro.serving import FleetSpec, PoolSpec           # fleets as data
+    from repro.serving import ServingClient                 # the front door
+
+Serving goes through ``repro.serving`` (FleetSpec -> ServingClient ->
+ResponseHandle.stream()); the decode engine and windowed baseline in
+``repro.runtime.serve`` are internal to it.
 """
 
 __version__ = "1.0.0"

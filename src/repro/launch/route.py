@@ -1,5 +1,6 @@
 """Fleet-router demo: SLO-aware dispatch across accelerator pools with a
-mid-run fault and online failover.
+mid-run fault and online failover — all through the ``repro.serving``
+facade (declarative :class:`FleetSpec` + :class:`ServingClient`).
 
     PYTHONPATH=src python -m repro.launch.route                 # vision fleet
     PYTHONPATH=src python -m repro.launch.route --lm            # + TPU pod LM
@@ -11,7 +12,8 @@ pools (two DPU+VPU boards, one EdgeTPU+CPU sidecar); at ``--fault-at``
 board-b takes an SEU and drops out for ``--fault-duration`` seconds —
 its queued and in-flight requests are rescheduled over the survivors.
 The LM sections route the same SLO machinery over TPU v5e operating
-points (cost-model pools, or a real BatchingServer with ``--execute-lm``).
+points (cost-model pools, or the continuous-batching engine behind an
+engine-backed pool with ``--execute-lm``).
 """
 from __future__ import annotations
 
@@ -20,159 +22,115 @@ import json
 
 import numpy as np
 
-from repro.core.cost_model import (layer_costs_from_convspecs,
-                                   transformer_layer_costs)
-from repro.models.cnn import ursonet_table1_layers
-from repro.router import (AcceleratorPool, CostModelExecutor,
-                          FailoverController, Router, RouterRequest,
-                          SLO_CLASSES, ServerExecutor, SLOClass)
-from repro.runtime.fault import PoolFault, PoolFaultInjector
+from repro.router import SLO_CLASSES
+from repro.serving import FaultSpec, FleetSpec, PoolSpec
+from repro.serving.traffic import open_loop
 
 
-def open_loop(router: Router, fc: FailoverController, classes, weights,
-              rate_hz: float, n_requests: int, seed: int = 0,
-              dt: float = 0.002, payload_fn=None):
-    """Drive Poisson open-loop traffic through the router until drained."""
-    rng = np.random.default_rng(seed)
-    t = 0.0
-    reqs = []
-    for i in range(n_requests):
-        t += rng.exponential(1.0 / rate_hz)
-        slo = classes[rng.choice(len(classes), p=weights)]
-        reqs.append(RouterRequest(i, slo, t,
-                                  payload=payload_fn(rng) if payload_fn
-                                  else None))
-    t, i = 0.0, 0
-    while i < len(reqs) or router.outstanding or fc.pending_faults:
-        t += dt
-        fc.poll(t)
-        while i < len(reqs) and reqs[i].arrival_s <= t:
-            router.submit(reqs[i], t)
-            i += 1
-        router.step(t)
-        if t > 600.0:          # safety net: never loop forever
-            break
-    return t
+def vision_fleet_spec(faults=()) -> FleetSpec:
+    """The canonical three-pool MPAI vision fleet — two DPU+VPU boards
+    and an EdgeTPU+CPU sidecar with a QAT'd-backbone accuracy prior.
+    ``benchmarks/router_bench.py`` reuses this spec (faults differ per
+    scenario), so the demo and the benchmark measure one fleet."""
+    return FleetSpec(
+        pools=[
+            PoolSpec("board-a", ("mpsoc_dpu", "myriadx_vpu"),
+                     capacity=2, max_window=4),
+            PoolSpec("board-b", ("mpsoc_dpu", "myriadx_vpu"),
+                     capacity=2, max_window=4),
+            PoolSpec("sidecar", ("edge_tpu", "cortex_a53"),
+                     capacity=1, max_window=2),
+        ],
+        workload="ursonet",
+        accuracy_penalty={"mpsoc_dpu": 0.05},      # QAT'd backbone
+        faults=list(faults))
 
 
 def vision_section(args) -> dict:
-    layers = layer_costs_from_convspecs(ursonet_table1_layers())
-    pools = [
-        AcceleratorPool("board-a", ("mpsoc_dpu", "myriadx_vpu"),
-                        CostModelExecutor(layers), capacity=2, max_window=4),
-        AcceleratorPool("board-b", ("mpsoc_dpu", "myriadx_vpu"),
-                        CostModelExecutor(layers), capacity=2, max_window=4),
-        AcceleratorPool("sidecar", ("edge_tpu", "cortex_a53"),
-                        CostModelExecutor(layers), capacity=1, max_window=2),
-    ]
-    router = Router(layers, pools,
-                    accuracy_penalty={"mpsoc_dpu": 0.05})  # QAT'd backbone
-    n_before = len(router.frontier)
-    # board-b drops out entirely; half a scrub later the sidecar loses its
-    # Edge TPU — the only pool with that profile, so the frontier itself
-    # shrinks until the scrub completes
-    inj = PoolFaultInjector([
-        PoolFault("board-b", at_s=args.fault_at,
+    # board-b drops out entirely; half a scrub later the sidecar loses
+    # its Edge TPU — the only pool with that profile, so the frontier
+    # itself shrinks until the scrub completes
+    spec = vision_fleet_spec(faults=[
+        FaultSpec("board-b", at_s=args.fault_at,
                   duration_s=args.fault_duration),
-        PoolFault("sidecar", at_s=args.fault_at + args.fault_duration / 2,
+        FaultSpec("sidecar", at_s=args.fault_at + args.fault_duration / 2,
                   lost_profiles=("edge_tpu",),
                   duration_s=args.fault_duration),
     ])
-    fc = FailoverController(router, inj)
+    client = spec.build()
+    n_before = len(client.router.frontier)
     classes = [SLO_CLASSES["downlink-critical"],
                SLO_CLASSES["realtime-tracking"],
                SLO_CLASSES["background-science"],
                SLO_CLASSES["bulk-reprocess"]]
-    open_loop(router, fc, classes, [0.2, 0.3, 0.3, 0.2],
+    open_loop(client, classes, [0.2, 0.3, 0.3, 0.2],
               rate_hz=args.rate, n_requests=args.requests, seed=args.seed)
-    snap = router.telemetry.snapshot()
+    snap = client.telemetry
     snap["frontier_plans_initial"] = n_before
-    snap["frontier_plans_final"] = len(router.frontier)
+    snap["frontier_plans_final"] = len(client.router.frontier)
     snap["frontier_trace"] = [
-        {"t": round(t, 3), "plans": n} for t, n in fc.frontier_sizes]
+        {"t": round(t, 3), "plans": n}
+        for t, n in client.failover.frontier_sizes]
     snap["fault_events"] = [
         {"kind": e.kind, "pool": e.fault.pool, "at_s": e.at_s}
-        for e in fc.events]
+        for e in client.failover.events]
     return snap
 
 
 def lm_section(args) -> dict:
     from repro.configs import get_config
     cfg = get_config(args.arch, smoke=True)
-    layers = transformer_layer_costs(cfg, seq_len=args.seq)
-    cuts = list(range(1, cfg.num_layers))
-    pools = [
-        AcceleratorPool("pod-int8", ("tpu_v5e_int8",),
-                        CostModelExecutor(layers), capacity=4, max_window=8),
-        AcceleratorPool("pod-bf16", ("tpu_v5e_bf16",),
-                        CostModelExecutor(layers), capacity=4, max_window=8),
-        AcceleratorPool("pod-mixed", ("tpu_v5e_int8", "tpu_v5e_bf16"),
-                        CostModelExecutor(layers), capacity=4, max_window=8),
-    ]
-    interactive = SLOClass("lm-interactive", max_latency_s=0.05,
-                           max_accuracy_penalty=0.02, priority=1)
-    batch = SLOClass("lm-batch", max_latency_s=1.0, max_energy_j=2.0)
-    router = Router(layers, pools, cut_candidates=cuts,
-                    accuracy_penalty={"tpu_v5e_int8": 0.015})
-    inj = PoolFaultInjector([PoolFault("pod-int8", at_s=args.fault_at,
-                                       duration_s=args.fault_duration)])
-    fc = FailoverController(router, inj)
-    open_loop(router, fc, [interactive, batch], [0.5, 0.5],
-              rate_hz=args.rate * 4, n_requests=args.requests,
-              seed=args.seed)
-    return router.telemetry.snapshot()
+    spec = FleetSpec(
+        pools=[
+            PoolSpec("pod-int8", ("tpu_v5e_int8",),
+                     capacity=4, max_window=8),
+            PoolSpec("pod-bf16", ("tpu_v5e_bf16",),
+                     capacity=4, max_window=8),
+            PoolSpec("pod-mixed", ("tpu_v5e_int8", "tpu_v5e_bf16"),
+                     capacity=4, max_window=8),
+        ],
+        workload="transformer", arch=args.arch, seq_len=args.seq,
+        cut_candidates=list(range(1, cfg.num_layers)),
+        accuracy_penalty={"tpu_v5e_int8": 0.015},
+        slos=[dict(name="lm-interactive", max_latency_s=0.05,
+                   max_accuracy_penalty=0.02, priority=1),
+              dict(name="lm-batch", max_latency_s=1.0, max_energy_j=2.0)],
+        faults=[FaultSpec("pod-int8", at_s=args.fault_at,
+                          duration_s=args.fault_duration)])
+    client = spec.build()
+    classes = [client.resolve_slo("lm-interactive"),
+               client.resolve_slo("lm-batch")]
+    open_loop(client, classes, [0.5, 0.5], rate_hz=args.rate * 4,
+              n_requests=args.requests, seed=args.seed)
+    return client.telemetry
 
 
 def lm_execute_section(args) -> dict:
     """Real decode: an LM pool backed by the continuous-batching engine
-    (or the windowed baseline with ``--windowed-lm``), driven through
-    the router via its non-blocking step() executor."""
-    import jax
-
-    from repro.configs import get_config
-    from repro.models import transformer as T
-    from repro.runtime.serve import BatchingServer, ContinuousBatchingEngine
-
-    cfg = get_config(args.arch, smoke=True)
-    params = T.model_init(jax.random.PRNGKey(0), cfg)
-    layers = transformer_layer_costs(cfg, seq_len=16)
-    max_len = 16 + max(args.max_new, 2)    # warm-up request uses max_new=2
-    srv = None
-    if not args.windowed_lm:
-        try:
-            srv = ContinuousBatchingEngine(params, cfg, max_slots=4,
-                                           prompt_len=16, max_len=max_len,
-                                           block_size=8)
-        except ValueError:        # hybrid/SSM stack: paged decode is attn-only
-            pass
-    if srv is None:
-        srv = BatchingServer(params, cfg, max_batch=4, prompt_len=16,
-                             max_len=max_len)
-    # warm up the jitted prefill/decode so the one-off compile time does
-    # not land in the first routed batch's latency telemetry
-    from repro.runtime.serve import Request as ServeRequest
-    srv.submit(ServeRequest(-1, np.array([1, 2], np.int32), max_new=2))
-    srv.flush()
-    executor = ServerExecutor(srv, max_new=args.max_new)
-    pools = [AcceleratorPool("lm-real", ("tpu_v5e_bf16",), executor,
-                             capacity=1, max_window=4, max_wait_s=0.0)]
-    executor.counters = pools[0].counters      # tokens/s + occupancy
-    relaxed = SLOClass("lm-offline", max_latency_s=120.0)
-    router = Router(layers, pools)
-    fc = FailoverController(router, PoolFaultInjector())
-    rng = np.random.default_rng(args.seed)
+    (or the windowed baseline with ``--windowed-lm``), routed through
+    the facade."""
+    spec = FleetSpec(
+        pools=[PoolSpec("lm-real", ("tpu_v5e_bf16",),
+                        backend="windowed" if args.windowed_lm
+                        else "engine",
+                        capacity=1, max_window=4, max_wait_s=0.0,
+                        max_slots=4, prompt_len=16,
+                        max_new=args.max_new)],
+        workload="transformer", arch=args.arch, seq_len=16,
+        slos=[dict(name="lm-offline", max_latency_s=120.0)])
+    client = spec.build()           # build() warms jit out of telemetry
+    vocab = client.engines["lm-real"].cfg.vocab_size
 
     def prompt(r):
-        return r.integers(0, cfg.vocab_size, int(r.integers(2, 16))
+        return r.integers(0, vocab, int(r.integers(2, 16))
                           ).astype(np.int32)
 
-    open_loop(router, fc, [relaxed], [1.0], rate_hz=50.0,
-              n_requests=min(args.requests, 16), seed=args.seed, dt=0.05,
-              payload_fn=prompt)
-    snap = router.telemetry.snapshot()
-    snap["generated_tokens"] = sum(r.output.shape[0]
-                                   for rid, r in srv.done.items()
-                                   if rid >= 0)
+    handles = open_loop(client, [client.resolve_slo("lm-offline")], [1.0],
+                        rate_hz=50.0,
+                        n_requests=min(args.requests, 16),
+                        seed=args.seed, dt=0.05, payload_fn=prompt)
+    snap = client.telemetry
+    snap["generated_tokens"] = sum(len(h.tokens) for h in handles)
     return snap
 
 
@@ -190,8 +148,8 @@ def main():
     ap.add_argument("--execute-lm", action="store_true",
                     help="route real decodes through an LM server pool")
     ap.add_argument("--windowed-lm", action="store_true",
-                    help="--execute-lm with the windowed BatchingServer "
-                         "baseline instead of the continuous engine")
+                    help="--execute-lm with the windowed baseline "
+                         "instead of the continuous engine")
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true")   # accepted for parity
     ap.add_argument("--seq", type=int, default=512)

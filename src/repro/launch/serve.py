@@ -1,21 +1,22 @@
-"""Serving launcher: batched requests against an MPAI-partitioned model.
+"""Serving launcher: batched requests against an MPAI-partitioned model,
+through the ``repro.serving`` facade.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
         --plan mpai --requests 16
+
+Throughput note: tokens/s is reported *decode-only* (sampled decode
+tokens over wall time inside decode steps), the same definition
+``benchmarks/decode_bench.py`` uses — the old launcher divided total
+tokens (prompt handling included) by end-to-end wall time, which mixed
+prefill-window idle time into the number.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_config
-from repro.core import qat
-from repro.core.partition import PartitionPlan
-from repro.models import transformer as T
-from repro.runtime.serve import BatchingServer, Request
+from repro.serving import FleetSpec, PoolSpec
 
 
 def main():
@@ -28,26 +29,31 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    params = T.model_init(jax.random.PRNGKey(0), cfg)
-    plan = (qat.serve_plan(PartitionPlan.mpai(cfg.num_layers))
-            if args.plan == "mpai" else None)
-    srv = BatchingServer(params, cfg, plan=plan, max_batch=args.max_batch,
-                         prompt_len=16, max_len=16 + args.max_new)
+    spec = FleetSpec(
+        pools=[PoolSpec("serve", ("tpu_v5e_bf16",), backend="engine",
+                        capacity=1, max_window=args.max_batch,
+                        max_wait_s=0.0, max_slots=args.max_batch,
+                        prompt_len=16, max_new=args.max_new,
+                        plan=args.plan if args.plan == "mpai" else None)],
+        workload="transformer", arch=args.arch, smoke=args.smoke,
+        seq_len=16)
+    client = spec.build()
+
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        srv.submit(Request(i, rng.integers(
-            0, cfg.vocab_size, rng.integers(2, 16)).astype(np.int32),
-            max_new=args.max_new))
-    t0 = time.perf_counter()
-    windows = 0
-    while srv.queue:
-        srv.flush()
-        windows += 1
-    dt = time.perf_counter() - t0
-    tok = sum(r.output.shape[0] for r in srv.done.values())
-    print(f"served {len(srv.done)} requests / {tok} tokens in {windows} "
-          f"windows, {dt:.2f}s ({tok/dt:.1f} tok/s on this host)")
+    vocab = client.engines["serve"].cfg.vocab_size
+    handles = [client.submit(
+        rng.integers(0, vocab, rng.integers(2, 16)).astype(np.int32),
+        slo="offline", max_new=args.max_new)
+        for _ in range(args.requests)]
+    client.drain()
+
+    pool = client.telemetry["pools"]["serve"]
+    served = sum(h.admitted and not h.telemetry["dropped"]
+                 for h in handles)
+    print(f"served {served} requests / {pool['tokens_generated']} tokens "
+          f"in {pool['batches']} batches, {pool['busy_s']:.2f}s busy "
+          f"({pool['decode_tokens_per_s']:.1f} decode tok/s, "
+          f"occupancy p50 {pool['slot_occupancy']['p50']})")
 
 
 if __name__ == "__main__":

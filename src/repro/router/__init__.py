@@ -39,13 +39,18 @@ Key design points:
   from ``schedule()`` / ``reschedule_over_subset()`` output, so every
   routed plan is Pareto-optimal over the currently-live profile subset.
 
+This package is the routing *fabric*; the public serving surface is
+``repro.serving`` (FleetSpec -> ServingClient), which assembles routers,
+pools, and engine-backed executors from declarative specs — call sites
+should not construct :class:`Router` directly.
+
 Demo: ``PYTHONPATH=src python -m repro.launch.route --requests 400``.
 Bench: ``PYTHONPATH=src python -m benchmarks.router_bench``.
 """
 from repro.router.dispatch import Router
 from repro.router.failover import FailoverController
 from repro.router.pool import (AcceleratorPool, CostModelExecutor,
-                               PoolState, RouterRequest, ServerExecutor)
+                               PoolState, RouterRequest)
 from repro.router.slo import (SLO_CLASSES, SLOClass, admissible_plans,
                               select_plan)
 from repro.router.telemetry import Telemetry
@@ -53,5 +58,5 @@ from repro.router.telemetry import Telemetry
 __all__ = [
     "AcceleratorPool", "CostModelExecutor", "FailoverController",
     "PoolState", "Router", "RouterRequest", "SLOClass", "SLO_CLASSES",
-    "ServerExecutor", "Telemetry", "admissible_plans", "select_plan",
+    "Telemetry", "admissible_plans", "select_plan",
 ]

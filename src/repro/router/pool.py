@@ -12,11 +12,11 @@ Execution is pluggable:
     model at its actual size — the pool advances on the router's virtual
     clock.  This is what the failover demo / benchmark use: the routing
     fabric is exercised end-to-end without real boards.
-  * :class:`ServerExecutor` drives a real LM server — the continuous-
-    batching engine or the windowed :class:`BatchingServer` — via the
-    shared non-blocking ``step()`` API and reports measured wall latency
-    plus decode telemetry (tokens/s, slot occupancy) — the LM path of
-    ``launch/route.py``.
+  * :class:`~repro.serving.executor.EngineExecutor` (the serving
+    facade) drives a real LM server — the continuous-batching engine or
+    the windowed baseline — via the shared non-blocking ``step()`` API
+    and reports measured wall latency plus decode telemetry (decode-only
+    tokens/s, slot occupancy, OutOfBlocks deferrals).
 
 Health is tri-state: HEALTHY, DEGRADED (lost a strict subset of its
 profiles — SEU took a device out), DEAD (nothing survives).  Degrading
@@ -25,7 +25,6 @@ profile; the FailoverController re-dispatches them.
 """
 from __future__ import annotations
 
-import time
 from collections import Counter
 from dataclasses import dataclass
 from enum import Enum
@@ -73,48 +72,6 @@ class CostModelExecutor:
     def run(self, plan: ScheduledPlan,
             requests: Sequence[RouterRequest]) -> Tuple[float, float]:
         return price_assignments(self.layers, plan, batch=len(requests))
-
-
-class ServerExecutor:
-    """Execute a batch on a real LM server (windowed ``BatchingServer``
-    or slot-based ``ContinuousBatchingEngine`` — same submit/step/done
-    API).
-
-    Request payloads are token prompts; the batch is submitted and driven
-    to completion with the server's non-blocking ``step()``.  Latency is
-    measured wall time; energy falls back to the plan's nominal estimate
-    scaled by batch size.  Given ``counters`` (the pool's PoolCounters —
-    the same object Telemetry reads), it also records decode telemetry:
-    real tokens generated (so tokens/s lands in snapshots) and the
-    server's slot occupancy sampled after every step.
-    """
-
-    def __init__(self, server, max_new: int = 8,
-                 counters: Optional[PoolCounters] = None):
-        self.server = server
-        self.max_new = max_new
-        self.counters = counters
-
-    def run(self, plan: ScheduledPlan,
-            requests: Sequence[RouterRequest]) -> Tuple[float, float]:
-        from repro.runtime.serve import Request as ServeRequest
-        t0 = time.perf_counter()
-        want = set()
-        for r in requests:
-            self.server.submit(ServeRequest(r.rid, r.payload,
-                                            max_new=self.max_new))
-            want.add(r.rid)
-        while not all(rid in self.server.done for rid in want):
-            self.server.step()
-            if self.counters is not None and hasattr(self.server,
-                                                     "occupancy"):
-                self.counters.slot_occupancy.record(self.server.occupancy)
-        for r in requests:
-            r.payload = self.server.done[r.rid].output
-        if self.counters is not None:
-            self.counters.tokens_generated += sum(
-                int(self.server.done[rid].output.shape[0]) for rid in want)
-        return time.perf_counter() - t0, plan.energy_j * len(requests)
 
 
 @dataclass

@@ -52,14 +52,25 @@ class PoolCounters:
     energy_j: float = 0.0                 # cost-model energy estimate
     busy_s: float = 0.0                   # time spent executing batches
     tokens_generated: int = 0             # LM pools: real sampled tokens
+    decode_tokens: int = 0                # tokens from decode steps only
+    decode_s: float = 0.0                 # wall time inside decode steps
+    deferrals: int = 0                    # OutOfBlocks admission deferrals
     queue_depth: Histogram = field(default_factory=Histogram)
     batch_size: Histogram = field(default_factory=Histogram)
     slot_occupancy: Histogram = field(default_factory=Histogram)
 
     @property
     def tokens_per_s(self) -> float:
-        """Decode throughput over time actually spent executing."""
+        """Throughput over time spent executing batches end-to-end
+        (prefill, admission stalls, and decode all included)."""
         return self.tokens_generated / self.busy_s if self.busy_s else 0.0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        """Decode-only throughput: sampled decode tokens over wall time
+        inside decode steps — the number ``benchmarks/decode_bench.py``
+        reports, free of prefill-window idle time and prompt tokens."""
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
 
     def summary(self) -> Dict:
         return {"dispatched": self.dispatched, "completed": self.completed,
@@ -68,6 +79,10 @@ class PoolCounters:
                 "busy_s": round(self.busy_s, 4),
                 "tokens_generated": self.tokens_generated,
                 "tokens_per_s": round(self.tokens_per_s, 2),
+                "decode_tokens": self.decode_tokens,
+                "decode_s": round(self.decode_s, 4),
+                "decode_tokens_per_s": round(self.decode_tokens_per_s, 2),
+                "deferrals": self.deferrals,
                 "queue_depth": self.queue_depth.summary(),
                 "batch_size": self.batch_size.summary(),
                 "slot_occupancy": self.slot_occupancy.summary()}

@@ -1,16 +1,9 @@
-"""Serving loops: windowed batching (baseline) and slot-based continuous
-batching (the fast path).
+"""Serving loops: slot-based continuous batching (the fast path) and the
+legacy windowed loop (kept as a measured baseline).
 
 Two servers share one request API (``submit`` / ``step`` / ``flush`` /
-``done``), so the router's :class:`~repro.router.pool.ServerExecutor`
-drives either:
-
-* :class:`BatchingServer` — the original *windowed* loop: a bounded
-  window of requests prefills together, then every request decodes for
-  ``max(max_new)`` steps.  Finished requests keep burning decode steps
-  as padding, and newly-arrived requests wait for the whole window to
-  drain.  Kept as the baseline that ``benchmarks/decode_bench.py``
-  measures the continuous engine against.
+``done``), so the serving facade's
+:class:`~repro.serving.executor.EngineExecutor` drives either:
 
 * :class:`ContinuousBatchingEngine` — a fixed set of *slots* over a
   shared paged KV pool (``runtime/paging.py``).  A request is admitted
@@ -20,11 +13,31 @@ drives either:
   own ``max_new`` steps; the step it finishes, its blocks free and its
   slot is re-admittable — decode proceeds continuously while slots
   churn.  Admission that would overcommit the pool raises
-  :class:`~repro.runtime.paging.OutOfBlocksError` internally and the
-  request simply waits in the queue.  Attention runs the Pallas
+  :class:`~repro.runtime.paging.OutOfBlocksError` internally; the
+  request waits in the queue and the deferral is counted (the facade
+  surfaces it as backpressure telemetry).  Attention runs the Pallas
   paged-decode kernel (``kernels/paged_attention.py``): the block table
   is walked in-kernel, so per-step HBM traffic is O(blocks touched),
-  not O(batch * max_len) gather.
+  not O(batch * max_len) gather.  Sampling (greedy by default, or
+  per-request temperature/top-k/seed via
+  :class:`~repro.runtime.sampling.SamplingParams`) happens *inside* the
+  fused decode program — one dispatch per step, ``[B]`` ints on the
+  wire.
+
+* :class:`WindowedBaselineServer` — the original *windowed* loop: a
+  bounded window of requests prefills together, then every request
+  decodes for ``max(max_new)`` steps.  Finished requests keep burning
+  decode steps as padding, and newly-arrived requests wait for the
+  whole window to drain.  Kept only as the baseline that
+  ``benchmarks/decode_bench.py`` and ``benchmarks/router_bench.py``
+  measure the continuous engine against.
+
+``BatchingServer`` — the windowed loop's old public name — is now a
+deprecated shim: it warns and forwards construction to the engine
+(falling back to the windowed loop only for stacks paged decode cannot
+serve).  New code should not call either constructor directly; build a
+:class:`~repro.serving.FleetSpec` and serve through
+:class:`~repro.serving.ServingClient` instead.
 
 Shapes stay bucket-fixed in both servers (``max_batch`` / ``max_slots``
 and ``prompt_len``), so every step hits a pre-compiled program — no
@@ -39,8 +52,10 @@ Two granularities of progress:
 """
 from __future__ import annotations
 
+import time
+import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +66,7 @@ from repro.core.partition import PartitionPlan
 from repro.models import transformer as T
 from repro.runtime import paging
 from repro.runtime.paging import BlockAllocator, OutOfBlocksError
+from repro.runtime.sampling import GREEDY, SamplingParams, sample_logits
 
 
 @dataclass
@@ -58,6 +74,7 @@ class Request:
     rid: int
     prompt: np.ndarray                 # [S] int32
     max_new: int = 8
+    sampling: Optional[SamplingParams] = None   # None -> greedy
     output: Optional[np.ndarray] = None
 
 
@@ -69,9 +86,13 @@ class _ActiveWindow:
     last: object                       # [b, 1] last sampled token
     gen: List[np.ndarray]
     remaining: int                     # decode steps left
+    steps_done: int = 0                # decode steps taken so far
 
 
-class BatchingServer:
+class WindowedBaselineServer:
+    """The legacy windowed batching loop (greedy-only).  Baseline for the
+    decode benchmarks; serve through ``repro.serving`` instead."""
+
     def __init__(self, params, cfg: ModelConfig,
                  plan: Optional[PartitionPlan] = None, tp: int = 1,
                  max_batch: int = 8, prompt_len: int = 32,
@@ -86,9 +107,24 @@ class BatchingServer:
             lambda p, toks, cache: T.prefill(p, cfg, toks, cache, plan, tp))
         self._decode = jax.jit(
             lambda p, tok, cache: T.decode_step(p, cfg, tok, cache, plan, tp))
+        self.reset_stats()
+
+    def reset_stats(self) -> None:
+        self.total_tokens = 0             # real sampled tokens only
+        self.decode_steps = 0
+        self.decode_tokens = 0            # tokens produced by decode steps
+        self.decode_s = 0.0               # wall time inside decode steps
+        self.deferrals = 0                # windowed loop never defers
 
     def submit(self, req: Request) -> None:
         assert req.prompt.shape[0] <= self.prompt_len
+        assert self.prompt_len + req.max_new <= self.max_len, \
+            (req.rid, req.max_new, self.max_len)
+        if req.sampling is not None and not req.sampling.greedy:
+            warnings.warn(
+                f"request {req.rid}: the windowed baseline decodes "
+                f"greedily and ignores SamplingParams; use an engine-"
+                f"backed pool for non-greedy sampling")
         self.queue.append(req)
 
     @property
@@ -117,11 +153,19 @@ class BatchingServer:
             self._start_window()
         else:
             w = self._active
+            t0 = time.perf_counter()
             out = self._decode(self.params, w.last.astype(jnp.int32), w.cache)
             w.cache = out.cache
             w.last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
             w.gen.append(np.asarray(w.last))
+            self.decode_s += time.perf_counter() - t0
             w.remaining -= 1
+            w.steps_done += 1
+            self.decode_steps += 1
+            # padding rows past a request's own max_new are not tokens
+            useful = sum(1 for r in w.batch if w.steps_done <= r.max_new - 1)
+            self.decode_tokens += useful
+            self.total_tokens += useful
         return self._finish_if_done()
 
     def flush(self) -> List[Request]:
@@ -132,6 +176,13 @@ class BatchingServer:
             batch = self.step()
             if batch:
                 return batch
+
+    def stats(self) -> Dict[str, float]:
+        return {"total_tokens": self.total_tokens,
+                "decode_steps": self.decode_steps,
+                "decode_tokens": self.decode_tokens,
+                "decode_s": self.decode_s,
+                "deferrals": self.deferrals}
 
     def _start_window(self) -> None:
         batch = self.queue[:self.max_batch]
@@ -144,6 +195,7 @@ class BatchingServer:
         out = self._prefill(self.params, jnp.asarray(toks), cache)
         last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
         max_new = max(r.max_new for r in batch)
+        self.total_tokens += sum(1 for r in batch if r.max_new >= 1)
         self._active = _ActiveWindow(batch, out.cache, last,
                                      [np.asarray(last)], max_new - 1)
 
@@ -159,6 +211,56 @@ class BatchingServer:
         return w.batch
 
 
+def engine_or_windowed(params, cfg: ModelConfig,
+                       plan: Optional[PartitionPlan] = None, tp: int = 1,
+                       max_slots: int = 8, prompt_len: int = 32,
+                       max_len: int = 64, block_size: int = 8,
+                       num_blocks: Optional[int] = None,
+                       on_fallback=None):
+    """The one engine-with-windowed-fallback policy.
+
+    Constructs a :class:`ContinuousBatchingEngine`; stacks paged decode
+    cannot serve (hybrid/SSM mixers, sliding windows, int8 KV — the
+    engine raises ``ValueError``) fall back to the windowed loop, after
+    calling ``on_fallback(exc)`` if given.  Both the serving facade's
+    ``make_server`` and the deprecated :func:`BatchingServer` shim come
+    through here, so the fallback conditions live in exactly one place.
+    """
+    if max_len > prompt_len:
+        try:
+            return ContinuousBatchingEngine(
+                params, cfg, plan=plan, tp=tp, max_slots=max_slots,
+                prompt_len=prompt_len, max_len=max_len,
+                block_size=block_size, num_blocks=num_blocks)
+        except ValueError as e:    # non-pageable: keep the windowed loop
+            if on_fallback is not None:
+                on_fallback(e)
+    return WindowedBaselineServer(params, cfg, plan=plan, tp=tp,
+                                  max_batch=max_slots,
+                                  prompt_len=prompt_len, max_len=max_len)
+
+
+def BatchingServer(params, cfg: ModelConfig,
+                   plan: Optional[PartitionPlan] = None, tp: int = 1,
+                   max_batch: int = 8, prompt_len: int = 32,
+                   max_len: int = 64):
+    """Deprecated windowed-server entry point.
+
+    Warns and forwards to :class:`ContinuousBatchingEngine` (same
+    submit/step/flush/done API, strictly better scheduling), falling
+    back to the windowed loop via :func:`engine_or_windowed`.  New code
+    should build a :class:`repro.serving.FleetSpec` and go through
+    :class:`repro.serving.ServingClient` instead.
+    """
+    warnings.warn(
+        "BatchingServer is deprecated; serve through repro.serving "
+        "(FleetSpec -> ServingClient). Forwarding to the continuous-"
+        "batching engine.", DeprecationWarning, stacklevel=2)
+    return engine_or_windowed(params, cfg, plan=plan, tp=tp,
+                              max_slots=max_batch, prompt_len=prompt_len,
+                              max_len=max_len)
+
+
 # ---------------------------------------------------------------------------
 # Continuous batching
 # ---------------------------------------------------------------------------
@@ -168,6 +270,7 @@ class _Slot:
     req: Request
     gen: List[int]                     # sampled tokens so far
     remaining: int                     # decode steps left (exact)
+    sampled: bool = False              # non-greedy sampling requested
 
 
 class ContinuousBatchingEngine:
@@ -181,6 +284,17 @@ class ContinuousBatchingEngine:
     their slot + blocks the step they finish.  One ``step()`` =
     admissions (each a batch-1 prefill pasted into the pool) + one
     batched decode step for every occupied slot.
+
+    Sampling is per-request (``Request.sampling``): greedy when unset,
+    otherwise temperature/top-k with a counter-based key
+    (``fold_in(seed, token_index)``) so outputs are independent of batch
+    composition.  Both the admission prefill and the decode step sample
+    inside their fused jitted programs.
+
+    Per-token observability: set ``on_token`` to a callable
+    ``(rid, token)``; it fires the step each token is sampled (admission
+    first-tokens included) — this is what feeds the serving facade's
+    ``ResponseHandle.stream()``.
 
     The engine keeps the block table and per-slot lengths as host-side
     numpy mirrors (the allocator is host code) and pushes them into the
@@ -214,24 +328,56 @@ class ContinuousBatchingEngine:
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
         self._dirty = True                    # host table/lengths changed
-        # telemetry
-        self.total_tokens = 0                 # real sampled tokens only
-        self.decode_steps = 0
-        self.occupancy_sum = 0.0
+        self.on_token: Optional[Callable[[int, int], None]] = None
+        # per-slot sampling knobs, threaded through the jit boundary.
+        # Device copies are refreshed per admission round (the only
+        # place they change) and the per-token step counters only when
+        # a sampled request is active, so the greedy decode hot path
+        # pays no per-step transfers.
+        self._temps = np.zeros(max_slots, np.float32)
+        self._topks = np.zeros(max_slots, np.int32)
+        self._seeds = np.zeros(max_slots, np.int32)
+        self._gen_counts = np.zeros(max_slots, np.int32)  # tokens so far
+        self._knobs_dev = (jnp.asarray(self._temps),
+                           jnp.asarray(self._topks),
+                           jnp.asarray(self._seeds))
+        self.reset_stats()
         # admissions prefill together at the max_slots bucket (rows for
         # non-admitted slots are dead weight but keep shapes fixed)
         self._prefill_cache = T.init_cache(cfg, max_slots, prompt_len, tp)
-        self._admit_step = jax.jit(self._admit_impl)
+        # two compiled variants per program: a pure-argmax one (identical
+        # to the pre-sampling program — an all-greedy batch pays zero
+        # sampling overhead, which matters on tiny configs where the
+        # PRNG work rivals the forward pass) and a sampling one; the
+        # host picks per call based on the live slots
+        self._admit_step = jax.jit(self._admit_impl, static_argnums=(8,))
 
-        def _decode_and_sample(p, toks, caches):
+        def _decode_greedy(p, toks, caches):
             out = T.decode_step(p, cfg, toks, caches, plan, tp)
             # greedy sampling inside the program: one dispatch per step,
             # [B] ints on the wire instead of [B, V] logits
             return jnp.argmax(out.logits[:, -1], axis=-1), out.cache
-        self._decode = jax.jit(_decode_and_sample)
+        self._decode = jax.jit(_decode_greedy)
+
+        def _decode_sampled(p, toks, caches, temps, topks, seeds, steps):
+            out = T.decode_step(p, cfg, toks, caches, plan, tp)
+            nxt = sample_logits(out.logits[:, -1], temps, topks, seeds,
+                                steps)
+            return nxt, out.cache
+        self._decode_with = jax.jit(_decode_sampled)
+
+    def reset_stats(self) -> None:
+        """Zero the telemetry counters (post-jit-warmup)."""
+        self.total_tokens = 0                 # real sampled tokens only
+        self.decode_steps = 0
+        self.occupancy_sum = 0.0
+        self.decode_tokens = 0                # tokens from decode steps only
+        self.decode_s = 0.0                   # wall time in decode steps
+        self.admit_s = 0.0                    # wall time in admission steps
+        self.deferrals = 0                    # OutOfBlocks admission deferrals
 
     # ------------------------------------------------------------------
-    # public API (shared with BatchingServer)
+    # public API (shared with WindowedBaselineServer)
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         assert req.prompt.shape[0] <= self.prompt_len
@@ -270,17 +416,22 @@ class ContinuousBatchingEngine:
         steps = max(self.decode_steps, 1)
         return {"total_tokens": self.total_tokens,
                 "decode_steps": self.decode_steps,
-                "mean_occupancy": self.occupancy_sum / steps}
+                "mean_occupancy": self.occupancy_sum / steps,
+                "decode_tokens": self.decode_tokens,
+                "decode_s": self.decode_s,
+                "admit_s": self.admit_s,
+                "deferrals": self.deferrals}
 
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
-    def _admit_impl(self, params, toks, prefill_cache, caches, admit):
+    def _admit_impl(self, params, toks, prefill_cache, caches, admit,
+                    temps, topks, seeds, sampled):
         """One fused device call per admission round: bucket-shaped
         prefill, paste of every admitted row's KV into its paged blocks
         (non-admitted rows scatter to the trash row), and the first
-        sampled token per row.  The intermediate dense prefill cache
-        never leaves the XLA program."""
+        sampled token per row (token index 0 for the sampling key;
+        ``sampled`` is static — all-greedy rounds compile to argmax)."""
         out = T.prefill(params, self.cfg, toks, prefill_cache,
                         self.plan, self.tp)
         new_caches = {}
@@ -289,7 +440,13 @@ class ContinuousBatchingEngine:
             new_caches[key] = jax.vmap(
                 paging.write_prefill_batch,
                 in_axes=(0, 0, 0, None))(st, dc.k, dc.v, admit)
-        return jnp.argmax(out.logits[:, -1], axis=-1), new_caches
+        logits = out.logits[:, -1]
+        if sampled:
+            firsts = sample_logits(logits, temps, topks, seeds,
+                                   jnp.zeros_like(seeds))
+        else:
+            firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return firsts, new_caches
 
     def _push_tables(self) -> None:
         tbl = jnp.asarray(self.table)
@@ -302,6 +459,10 @@ class ContinuousBatchingEngine:
         self.caches = jax.tree_util.tree_map(
             fix, self.caches,
             is_leaf=lambda s: isinstance(s, paging.PagedKVState))
+
+    def _emit(self, rid: int, tok: int) -> None:
+        if self.on_token is not None:
+            self.on_token(rid, tok)
 
     def _admit(self) -> List[Request]:
         admits: List[tuple] = []
@@ -317,7 +478,8 @@ class ContinuousBatchingEngine:
             try:
                 self.table = paging.plan_blocks(self.table, self.alloc, need)
             except OutOfBlocksError:
-                break                      # defer admission; blocks will free
+                self.deferrals += 1    # defer admission; blocks will free
+                break
             admits.append((i, self.queue.pop(0)))
         if not admits:
             return []
@@ -328,23 +490,41 @@ class ContinuousBatchingEngine:
         # keep the compiled shape fixed
         toks = np.zeros((self.max_slots, self.prompt_len), np.int32)
         admit = np.zeros(self.max_slots, bool)
+        any_sampled = False
         for i, req in admits:
             toks[i, -req.prompt.shape[0]:] = req.prompt      # left-pad
             admit[i] = True
+            sp = req.sampling or GREEDY
+            self._temps[i] = sp.temperature
+            self._topks[i] = sp.top_k
+            self._seeds[i] = sp.seed
+            any_sampled |= not sp.greedy
+        self._knobs_dev = (jnp.asarray(self._temps),
+                           jnp.asarray(self._topks),
+                           jnp.asarray(self._seeds))
+        temps_d, topks_d, seeds_d = self._knobs_dev
+        t0 = time.perf_counter()
         firsts, self.caches = self._admit_step(
             self.params, jnp.asarray(toks), self._prefill_cache,
-            self.caches, jnp.asarray(admit))
+            self.caches, jnp.asarray(admit), temps_d, topks_d, seeds_d,
+            any_sampled)
         firsts = np.asarray(firsts)
+        self.admit_s += time.perf_counter() - t0
         completed: List[Request] = []
         for i, req in admits:
             self.lengths[i] = self.prompt_len
+            self._gen_counts[i] = 1
             tok = int(firsts[i])
             self.total_tokens += 1
+            if req.max_new >= 1:
+                self._emit(req.rid, tok)
             if req.max_new <= 1:       # done at admission (0 => empty,
                 completed.append(       # matching the windowed baseline)
                     self._finalize(i, req, [tok][:req.max_new]))
             else:
-                self.slots[i] = _Slot(req, [tok], req.max_new - 1)
+                sp = req.sampling or GREEDY
+                self.slots[i] = _Slot(req, [tok], req.max_new - 1,
+                                      sampled=not sp.greedy)
                 self.last[i, 0] = tok
         return completed
 
@@ -355,21 +535,34 @@ class ContinuousBatchingEngine:
         if self._dirty:
             self._push_tables()
             self._dirty = False
-        nxt, self.caches = self._decode(self.params, jnp.asarray(self.last),
-                                        self.caches)
+        any_sampled = any(s is not None and s.sampled for s in self.slots)
+        t0 = time.perf_counter()
+        if any_sampled:
+            temps_d, topks_d, seeds_d = self._knobs_dev
+            nxt, self.caches = self._decode_with(
+                self.params, jnp.asarray(self.last), self.caches,
+                temps_d, topks_d, seeds_d, jnp.asarray(self._gen_counts))
+        else:
+            nxt, self.caches = self._decode(
+                self.params, jnp.asarray(self.last), self.caches)
         nxt = np.asarray(nxt)
+        self.decode_s += time.perf_counter() - t0
         completed: List[Request] = []
         for i in active:
             self.lengths[i] += 1           # mirror device append_tokens
+            self._gen_counts[i] += 1
             s = self.slots[i]
-            s.gen.append(int(nxt[i]))
+            tok = int(nxt[i])
+            s.gen.append(tok)
             s.remaining -= 1
             self.last[i, 0] = nxt[i]
+            self._emit(s.req.rid, tok)
             if s.remaining <= 0:
                 completed.append(self._finalize(i, s.req, s.gen))
                 self.slots[i] = None
         self.decode_steps += 1
         self.total_tokens += len(active)
+        self.decode_tokens += len(active)
         self.occupancy_sum += len(active) / self.max_slots
         return completed
 

@@ -1,0 +1,54 @@
+"""repro.serving — the one serving API over the heterogeneous fleet.
+
+MPAI's architectural claim is a *single submission interface* in front
+of co-processors: the host dispatches each inference to whichever
+accelerator operating point fits, and the caller never learns which
+device ran it.  This package is that front door for the whole repo —
+declarative fleet specs, one client, streaming responses:
+
+    from repro.serving import FleetSpec, PoolSpec
+
+    spec = FleetSpec(pools=[PoolSpec("lm", ("tpu_v5e_bf16",),
+                                     backend="engine", max_slots=4,
+                                     max_new=16)],
+                     workload="transformer", arch="qwen3-14b")
+    client = spec.build()
+    handle = client.submit(prompt_tokens, slo="offline", max_new=16)
+    for tok in handle.stream():          # tokens arrive per decode step
+        ...
+    print(handle.result(), client.telemetry)
+
+Layers (one module per concern)::
+
+    spec.py     FleetSpec / PoolSpec / FaultSpec — fleets as data; dict/
+                JSON round-trip; build() assembles Router + pools +
+                engines; make_server() is the only sanctioned decode-
+                server constructor
+    client.py   ServingClient (submit/step/drain + fleet clock) and
+                ResponseHandle (.result / .stream / .telemetry)
+    executor.py EngineExecutor — adapts the continuous-batching engine
+                to the router's executor protocol: LMWork payloads,
+                per-token relay, decode-only tokens/s, OutOfBlocks
+                deferrals as backpressure telemetry
+    traffic.py  Poisson open-loop driver shared by launchers,
+                benchmarks, and tests
+
+Everything else — ``launch/serve.py``, ``launch/route.py``, the
+examples, and both serving benchmarks — goes through this package; no
+other call site constructs ``Router``, ``ContinuousBatchingEngine``, or
+the windowed baseline directly.
+"""
+from repro.router.slo import SLO_CLASSES, SLOClass
+from repro.runtime.sampling import GREEDY, SamplingParams
+from repro.serving.client import Response, ResponseHandle, ServingClient
+from repro.serving.executor import EngineExecutor, LMWork
+from repro.serving.spec import (DEFAULT_SLOS, FaultSpec, FleetSpec,
+                                PoolSpec, make_server)
+from repro.serving.traffic import open_loop, poisson_arrivals
+
+__all__ = [
+    "DEFAULT_SLOS", "EngineExecutor", "FaultSpec", "FleetSpec", "GREEDY",
+    "LMWork", "PoolSpec", "Response", "ResponseHandle", "SLOClass",
+    "SLO_CLASSES", "SamplingParams", "ServingClient", "make_server",
+    "open_loop", "poisson_arrivals",
+]

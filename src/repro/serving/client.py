@@ -1,0 +1,275 @@
+"""The serving front door: submit requests, get handles, stream tokens.
+
+:class:`ServingClient` is the single entry point over the whole
+heterogeneous fleet (MPAI's one-submission-interface).  It owns the
+fleet's clock: ``submit()`` admits a request through the router at the
+current virtual time, ``step()`` advances one tick (fault injection +
+pool progress), and both :meth:`ResponseHandle.result` and
+:meth:`ResponseHandle.stream` drive that clock themselves, so callers
+never touch Router/FailoverController directly.
+
+Per-token streaming: engine-backed pools relay every sampled token
+(rid, token, engine decode step) the step it is produced; the handle
+buffers them, ``stream()`` yields them in order, and the step stamps
+let tests assert tokens really arrived incrementally across decode
+steps rather than at batch completion.  Pools without a token hook (the
+windowed baseline, cost-model pools) backfill the buffer at completion,
+so ``stream()``/``result()`` behave identically everywhere — just
+without mid-batch granularity.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.router import FailoverController, Router, RouterRequest
+from repro.router.slo import SLO_CLASSES, SLOClass
+from repro.runtime.sampling import SamplingParams
+from repro.serving.executor import LMWork
+
+
+@dataclass
+class Response:
+    """Terminal record for one request."""
+    rid: int
+    admitted: bool
+    tokens: Optional[np.ndarray]         # None for cost-model requests
+    latency_s: Optional[float]
+    violated: bool
+    dropped: bool
+    pool: Optional[str]
+
+
+class ResponseHandle:
+    """Caller's view of one in-flight request."""
+
+    def __init__(self, client: "ServingClient", rreq: RouterRequest,
+                 work: Optional[LMWork], admitted: bool):
+        self._client = client
+        self._rreq = rreq
+        self._work = work
+        self.admitted = admitted
+        self._tokens: List[int] = []
+        self._token_steps: List[Optional[int]] = []
+        self._reroutes_seen = 0
+
+    # fed by the engine's per-token callback, via the client
+    def _push(self, tok: int, step: Optional[int]) -> None:
+        if self._rreq.rerouted != self._reroutes_seen:
+            # an SEU destroyed the in-flight decode; the re-dispatched
+            # request restarts its stream from token 0 on the new pool
+            self._reroutes_seen = self._rreq.rerouted
+            self._tokens.clear()
+            self._token_steps.clear()
+        self._tokens.append(int(tok))
+        self._token_steps.append(step)
+
+    def _backfill(self) -> None:
+        """Hook-less backends deliver tokens only at completion."""
+        out = None if self._work is None else self._work.output
+        if out is not None:
+            for tok in np.asarray(out)[len(self._tokens):]:
+                self._push(int(tok), None)
+
+    @property
+    def rid(self) -> int:
+        return self._rreq.rid
+
+    @property
+    def done(self) -> bool:
+        return (not self.admitted or self._rreq.dropped
+                or self._rreq.done_s is not None)
+
+    @property
+    def tokens(self) -> List[int]:
+        """Tokens received so far (does not advance the fleet)."""
+        if self.done:
+            self._backfill()       # hook-less backends deliver at the end
+        return list(self._tokens)
+
+    @property
+    def token_steps(self) -> List[Optional[int]]:
+        """Engine decode-step stamp per received token (None = delivered
+        at completion by a hook-less backend)."""
+        if self.done:
+            self._backfill()
+        return list(self._token_steps)
+
+    def result(self, max_s: float = 600.0) -> Response:
+        """Drive the fleet until this request completes (or is dropped)."""
+        while not self.done:
+            self._client.step()
+            if self._client.now > max_s:
+                raise RuntimeError(f"request {self.rid} did not complete "
+                                   f"by t={max_s}s")
+        self._backfill()
+        r = self._rreq
+        tokens = (np.asarray(self._tokens, np.int32)
+                  if self._work is not None else None)
+        latency = None if r.done_s is None else r.done_s - r.arrival_s
+        return Response(r.rid, self.admitted, tokens, latency,
+                        violated=r.violated, dropped=r.dropped, pool=r.pool)
+
+    def stream(self, max_s: float = 600.0) -> Iterator[int]:
+        """Yield tokens as they arrive, driving the fleet in between."""
+        i = 0
+        while True:
+            while i < len(self._tokens):
+                yield self._tokens[i]
+                i += 1
+            if self.done:
+                self._backfill()
+                while i < len(self._tokens):
+                    yield self._tokens[i]
+                    i += 1
+                return
+            self._client.step()
+            if self._client.now > max_s:
+                raise RuntimeError(f"request {self.rid} stalled at "
+                                   f"t={max_s}s")
+
+    @property
+    def telemetry(self) -> Dict:
+        """Per-request slice of the fleet's bookkeeping."""
+        if self.done:
+            self._backfill()
+        r = self._rreq
+        return {
+            "rid": r.rid,
+            "admitted": self.admitted,
+            "pool": r.pool,
+            "dropped": r.dropped,
+            "violated": r.violated,
+            "rerouted": r.rerouted,
+            "arrival_s": r.arrival_s,
+            "done_s": r.done_s,
+            "latency_s": (None if r.done_s is None
+                          else r.done_s - r.arrival_s),
+            "tokens": len(self._tokens),
+        }
+
+
+class ServingClient:
+    """One front door over the fleet; constructed by ``FleetSpec.build``."""
+
+    def __init__(self, router: Router,
+                 failover: Optional[FailoverController] = None,
+                 engines: Optional[Dict[str, object]] = None,
+                 spec=None, dt: float = 0.002,
+                 slo_map: Optional[Dict[str, SLOClass]] = None):
+        self.router = router
+        self.failover = failover
+        self.engines = dict(engines or {})   # pool name -> LM server
+        self.spec = spec
+        self.dt = dt
+        self.now = 0.0
+        self._next_rid = 0
+        self._handles: Dict[int, ResponseHandle] = {}
+        self._slos = dict(slo_map or {})
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def resolve_slo(self, slo) -> SLOClass:
+        if isinstance(slo, SLOClass):
+            return slo
+        if slo in self._slos:
+            return self._slos[slo]
+        if slo in SLO_CLASSES:
+            return SLO_CLASSES[slo]
+        raise KeyError(f"unknown SLO class {slo!r}; known: "
+                       f"{sorted(self._slos) + sorted(SLO_CLASSES)}")
+
+    def submit(self, prompt=None, slo="offline", *,
+               max_new: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               arrival: Optional[float] = None,
+               rid: Optional[int] = None) -> ResponseHandle:
+        """Admit one request at the current fleet time.
+
+        ``prompt``: token array for LM pools (or a prebuilt
+        :class:`LMWork`); None routes a cost-model (vision) request.
+        Rejection at admission (no plan fits the SLO at current load) is
+        surfaced on the handle, not raised.
+        """
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        work = None
+        if isinstance(prompt, LMWork):
+            work = prompt
+        elif prompt is not None:
+            work = LMWork(np.asarray(prompt, np.int32), max_new=max_new,
+                          sampling=sampling)
+        if work is not None and work.max_new is not None and self.engines:
+            # fail fast with an actionable error instead of counting the
+            # request admitted and crashing inside a pool's batch.  The
+            # bound is the SMALLEST engine pool's budget: dispatch is
+            # payload-blind, so any LM pool may end up serving this
+            # request (routing by max_new is future work)
+            budget = min(e.max_len - e.prompt_len
+                         for e in self.engines.values())
+            if work.max_new > budget:
+                raise ValueError(
+                    f"max_new={work.max_new} exceeds the smallest LM "
+                    f"pool's budget ({budget}), and dispatch does not "
+                    f"route by max_new; raise PoolSpec.max_new — it "
+                    f"sizes the per-request KV allocation")
+        rreq = RouterRequest(rid, self.resolve_slo(slo),
+                             self.now if arrival is None else arrival,
+                             payload=work)
+        admitted = self.router.submit(rreq, self.now)
+        handle = ResponseHandle(self, rreq, work, admitted)
+        self._handles[rid] = handle
+        return handle
+
+    def _on_token(self, rid: int, tok: int, step: int) -> None:
+        h = self._handles.get(rid)
+        if h is not None:
+            h._push(tok, step)
+
+    # ------------------------------------------------------------------
+    # clock
+    # ------------------------------------------------------------------
+    def advance(self, dt: Optional[float] = None) -> None:
+        """Move the fleet clock one tick and apply due fault events."""
+        self.now += self.dt if dt is None else dt
+        if self.failover is not None:
+            self.failover.poll(self.now)
+
+    def pump(self) -> List[RouterRequest]:
+        """Advance every pool at the current time (non-blocking)."""
+        return self.router.step(self.now)
+
+    def step(self, dt: Optional[float] = None) -> List[RouterRequest]:
+        self.advance(dt)
+        return self.pump()
+
+    def drain(self, max_s: float = 600.0,
+              dt: Optional[float] = None) -> None:
+        """Run until every admitted request and scheduled fault resolves."""
+        while self.outstanding or self.pending_faults:
+            self.step(dt)
+            if self.now > max_s:
+                raise RuntimeError(f"fleet failed to drain by t={max_s}s")
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    @property
+    def outstanding(self) -> int:
+        return self.router.outstanding
+
+    @property
+    def pending_faults(self) -> int:
+        return 0 if self.failover is None else self.failover.pending_faults
+
+    @property
+    def telemetry(self) -> Dict:
+        """The fleet-wide snapshot (JSON-serializable)."""
+        return self.router.telemetry.snapshot()
+
+    def handle(self, rid: int) -> ResponseHandle:
+        return self._handles[rid]

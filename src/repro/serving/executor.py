@@ -1,0 +1,125 @@
+"""Engine-backed pool executor: adapts an LM server to the router.
+
+:class:`EngineExecutor` is the bridge between the routing fabric
+(``router/pool.py`` calls ``executor.run(plan, batch)`` and gets back
+``(latency_s, energy_j)``) and a real decode server — the
+:class:`~repro.runtime.serve.ContinuousBatchingEngine` by preference,
+or the windowed baseline for comparison runs.  Beyond the old
+``ServerExecutor`` it:
+
+* understands :class:`LMWork` payloads (per-request ``max_new`` and
+  :class:`~repro.runtime.sampling.SamplingParams`), not just raw prompt
+  arrays;
+* relays the engine's per-token callback upward (rid, token, engine
+  decode step) — the feed for ``ResponseHandle.stream()``;
+* records *decode-only* telemetry into the pool's counters
+  (``decode_tokens`` / ``decode_s`` deltas around each batch), so
+  ``tokens/s`` in snapshots is decode throughput, not
+  prefill-window-idle-time-diluted throughput — consistent with
+  ``benchmarks/decode_bench.py``;
+* surfaces the engine's ``OutOfBlocksError`` admission deferrals as a
+  backpressure counter (``deferrals``) in the same snapshot.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import ScheduledPlan
+from repro.router.pool import RouterRequest
+from repro.router.telemetry import PoolCounters
+from repro.runtime.sampling import SamplingParams
+
+
+@dataclass
+class LMWork:
+    """One LM request flowing through the facade: prompt in, tokens out."""
+    prompt: np.ndarray
+    max_new: Optional[int] = None        # None -> the pool's default
+    sampling: Optional[SamplingParams] = None
+    output: Optional[np.ndarray] = None
+
+
+class EngineExecutor:
+    """Execute a routed batch on a real LM server (continuous-batching
+    engine or the windowed baseline — same submit/step/done API).
+
+    Request payloads are :class:`LMWork` (or bare token prompts); the
+    batch is submitted and driven to completion with the server's
+    non-blocking ``step()``.  Latency is measured wall time; energy
+    falls back to the plan's nominal estimate scaled by batch size.
+    Given ``counters`` (the pool's PoolCounters — the same object
+    Telemetry reads) it records decode telemetry: tokens generated,
+    slot occupancy after every step, and decode-only token/time deltas.
+    """
+
+    def __init__(self, server, max_new: int = 8,
+                 counters: Optional[PoolCounters] = None,
+                 on_token: Optional[Callable[[int, int, int], None]] = None):
+        self.server = server
+        self.max_new = max_new
+        self.counters = counters
+        self.on_token = on_token             # (rid, token, engine_step)
+        if hasattr(server, "on_token"):
+            server.on_token = self._relay
+
+    def _relay(self, rid: int, tok: int) -> None:
+        if self.on_token is not None:
+            self.on_token(rid, tok, getattr(self.server, "decode_steps", 0))
+
+    def _stats(self) -> Tuple[int, float, int]:
+        s = self.server
+        return (getattr(s, "decode_tokens", 0),
+                getattr(s, "decode_s", 0.0),
+                getattr(s, "deferrals", 0))
+
+    @property
+    def max_new_budget(self) -> int:
+        """Largest per-request ``max_new`` this server can honor."""
+        return self.server.max_len - self.server.prompt_len
+
+    def run(self, plan: ScheduledPlan,
+            requests: Sequence[RouterRequest]) -> Tuple[float, float]:
+        from repro.runtime.serve import Request as ServeRequest
+        t0 = time.perf_counter()
+        tok0, dec0, def0 = self._stats()
+        want = {}
+        for r in requests:
+            work = (r.payload if isinstance(r.payload, LMWork)
+                    else LMWork(np.asarray(r.payload, np.int32)))
+            r.payload = work
+            if r.rid in self.server.done:
+                # failover re-dispatch of a batch this server already
+                # ran to completion: hand back the finished output
+                # instead of decoding (and emitting tokens) twice
+                work.output = self.server.done[r.rid].output
+                continue
+            max_new = self.max_new if work.max_new is None else work.max_new
+            if max_new > self.max_new_budget:
+                raise ValueError(
+                    f"request {r.rid}: max_new={max_new} exceeds this "
+                    f"pool's budget of {self.max_new_budget} (PoolSpec "
+                    f"max_new sizes the KV allocation; raise it or "
+                    f"lower the request's max_new)")
+            want[r.rid] = work
+            self.server.submit(ServeRequest(r.rid, work.prompt,
+                                            max_new=max_new,
+                                            sampling=work.sampling))
+        while not all(rid in self.server.done for rid in want):
+            self.server.step()
+            if self.counters is not None and hasattr(self.server,
+                                                     "occupancy"):
+                self.counters.slot_occupancy.record(self.server.occupancy)
+        for rid, work in want.items():
+            work.output = self.server.done[rid].output
+        if self.counters is not None:
+            tok1, dec1, def1 = self._stats()
+            self.counters.tokens_generated += sum(
+                int(w.output.shape[0]) for w in want.values())
+            self.counters.decode_tokens += tok1 - tok0
+            self.counters.decode_s += dec1 - dec0
+            self.counters.deferrals += def1 - def0
+        return time.perf_counter() - t0, plan.energy_j * len(requests)

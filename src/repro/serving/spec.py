@@ -1,0 +1,288 @@
+"""Declarative fleet specs: one config path for launchers, examples,
+benchmarks, and tests.
+
+A :class:`FleetSpec` describes a serving fleet — pools (cost-model
+priced, engine-backed, or the windowed baseline), the cost-model
+workload the router's Pareto frontier is scheduled over, SLO classes,
+and scheduled faults — as plain data.  ``to_dict`` / ``from_dict``
+round-trip losslessly through JSON, so a launcher flag set, a benchmark
+scenario, and a test fixture are literally the same object.
+``FleetSpec.build()`` assembles the live system (Router + pools +
+executors + FailoverController) and returns the one front door:
+:class:`~repro.serving.client.ServingClient`.
+
+MPAI's single-submission-interface story in code: the caller writes a
+spec and submits prompts; which accelerator profile, pool, or engine
+slot serves each request is the router's business.
+"""
+from __future__ import annotations
+
+import math
+import warnings
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.router.slo import SLOClass
+
+# SLO classes every fleet understands in addition to router.slo's
+# mission classes: "offline" is the relaxed default for LM serving.
+DEFAULT_SLOS: Dict[str, SLOClass] = {
+    "offline": SLOClass("offline", max_latency_s=600.0),
+}
+
+
+@dataclass
+class PoolSpec:
+    """One accelerator pool: capability, batching window, and backend.
+
+    ``backend``:
+      * ``"costmodel"`` — batches priced by the roofline cost model on
+        the router's virtual clock (routing-fabric experiments);
+      * ``"engine"`` — a real :class:`ContinuousBatchingEngine` decode
+        pool (falls back to the windowed loop, with a warning, for
+        stacks paged decode cannot serve);
+      * ``"windowed"`` — the legacy windowed baseline, kept for
+        engine-vs-windowed benchmark comparisons.
+    """
+    name: str
+    profiles: Tuple[str, ...]
+    backend: str = "costmodel"
+    capacity: int = 1
+    max_window: int = 4
+    max_wait_s: float = 0.02
+    # engine/windowed backends only:
+    max_slots: int = 4
+    prompt_len: int = 16
+    max_new: int = 8                     # default per-request budget
+    block_size: int = 8
+    num_blocks: Optional[int] = None     # None -> slots * ceil(max_len/block)
+    plan: Optional[str] = None           # None/"bf16" | "mpai"
+    plan_split: Optional[int] = None     # mpai split point override
+
+    def __post_init__(self):
+        if self.backend not in ("costmodel", "engine", "windowed"):
+            raise ValueError(f"unknown pool backend {self.backend!r}")
+        self.profiles = tuple(self.profiles)
+
+    @property
+    def max_len(self) -> int:
+        # +2 floor keeps one decode step available for jit warm-up even
+        # for max_new=1 pools
+        return self.prompt_len + max(self.max_new, 2)
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d["profiles"] = list(self.profiles)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PoolSpec":
+        return cls(**{**d, "profiles": tuple(d["profiles"])})
+
+
+@dataclass
+class FaultSpec:
+    """A scheduled pool upset (SEU) on the fleet's clock."""
+    pool: str
+    at_s: float
+    duration_s: float = math.inf
+    lost_profiles: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        self.lost_profiles = tuple(self.lost_profiles)
+
+    def to_dict(self) -> Dict:
+        d = asdict(self)
+        d["lost_profiles"] = list(self.lost_profiles)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultSpec":
+        return cls(**{**d, "lost_profiles": tuple(d.get("lost_profiles",
+                                                        ()))})
+
+
+@dataclass
+class FleetSpec:
+    """The whole fleet as data.  ``build()`` returns a ServingClient."""
+    pools: List[PoolSpec]
+    workload: str = "ursonet"            # "ursonet" | "transformer"
+    arch: Optional[str] = None           # config-registry name (LM fleets)
+    smoke: bool = True                   # reduced config for the arch
+    seq_len: int = 512                   # cost-model pricing length
+    accuracy_penalty: Dict[str, float] = field(default_factory=dict)
+    cut_candidates: Optional[List[int]] = None
+    slos: List[Dict] = field(default_factory=list)   # extra SLOClass kwargs
+    faults: List[FaultSpec] = field(default_factory=list)
+    dt: float = 0.002                    # clock tick for drive loops
+    latency_headroom: float = 0.6
+
+    # ------------------------------------------------------------------
+    # serialization
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "pools": [p.to_dict() for p in self.pools],
+            "workload": self.workload,
+            "arch": self.arch,
+            "smoke": self.smoke,
+            "seq_len": self.seq_len,
+            "accuracy_penalty": dict(self.accuracy_penalty),
+            "cut_candidates": (None if self.cut_candidates is None
+                               else list(self.cut_candidates)),
+            "slos": [dict(s) for s in self.slos],
+            "faults": [f.to_dict() for f in self.faults],
+            "dt": self.dt,
+            "latency_headroom": self.latency_headroom,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FleetSpec":
+        d = dict(d)
+        d["pools"] = [PoolSpec.from_dict(p) for p in d["pools"]]
+        d["faults"] = [FaultSpec.from_dict(f) for f in d.get("faults", [])]
+        return cls(**d)
+
+    # ------------------------------------------------------------------
+    # assembly
+    # ------------------------------------------------------------------
+    def slo_classes(self) -> Dict[str, SLOClass]:
+        out = dict(DEFAULT_SLOS)
+        for kw in self.slos:
+            slo = SLOClass(**kw)
+            out[slo.name] = slo
+        return out
+
+    def _layer_costs(self, cfg=None):
+        if self.workload == "ursonet":
+            from repro.core.cost_model import layer_costs_from_convspecs
+            from repro.models.cnn import ursonet_table1_layers
+            return layer_costs_from_convspecs(ursonet_table1_layers())
+        if self.workload == "transformer":
+            from repro.core.cost_model import transformer_layer_costs
+            if cfg is None:
+                cfg = self._config()
+            return transformer_layer_costs(cfg, seq_len=self.seq_len)
+        raise ValueError(f"unknown workload {self.workload!r}")
+
+    def _config(self):
+        if self.arch is None:
+            raise ValueError("transformer workload needs arch= (or pass "
+                             "model=(cfg, params) to build())")
+        from repro.configs import get_config
+        return get_config(self.arch, smoke=self.smoke)
+
+    def build(self, model=None, warm: bool = True):
+        """Assemble the live fleet; returns a ServingClient.
+
+        ``model`` — optional ``(cfg, params)`` shared by every engine/
+        windowed pool (tests and benchmarks pass tiny hand-built
+        configs); otherwise the arch registry + a seed-0 init provide
+        it.  ``warm`` pre-compiles each LM server's jitted programs with
+        a throwaway request so compile time never lands in the first
+        routed batch's latency telemetry.
+        """
+        from repro.router import (AcceleratorPool, CostModelExecutor,
+                                  FailoverController, Router)
+        from repro.runtime.fault import PoolFault, PoolFaultInjector
+        from repro.serving.client import ServingClient
+        from repro.serving.executor import EngineExecutor
+
+        cfg = params = None
+        if any(p.backend != "costmodel" for p in self.pools):
+            if model is not None:
+                cfg, params = model
+            else:
+                import jax
+                from repro.models import transformer as T
+                cfg = self._config()
+                params = T.model_init(jax.random.PRNGKey(0), cfg)
+        layers = self._layer_costs(cfg)
+
+        pools, engines, executors = [], {}, []
+        for ps in self.pools:
+            if ps.backend == "costmodel":
+                ex = CostModelExecutor(layers)
+            else:
+                srv = make_server(cfg, params, ps, warm=warm)
+                ex = EngineExecutor(srv, max_new=ps.max_new)
+                engines[ps.name] = srv
+                executors.append(ex)
+            pool = AcceleratorPool(ps.name, ps.profiles, ex,
+                                   capacity=ps.capacity,
+                                   max_window=ps.max_window,
+                                   max_wait_s=ps.max_wait_s)
+            if isinstance(ex, EngineExecutor):
+                ex.counters = pool.counters
+            pools.append(pool)
+
+        router = Router(layers, pools,
+                        accuracy_penalty=self.accuracy_penalty or None,
+                        cut_candidates=self.cut_candidates,
+                        latency_headroom=self.latency_headroom)
+        injector = PoolFaultInjector([
+            PoolFault(f.pool, at_s=f.at_s, duration_s=f.duration_s,
+                      lost_profiles=f.lost_profiles) for f in self.faults])
+        failover = FailoverController(router, injector)
+        client = ServingClient(router, failover, engines=engines, spec=self,
+                               dt=self.dt, slo_map=self.slo_classes())
+        for ex in executors:
+            ex.on_token = client._on_token
+        return client
+
+
+def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
+    """Construct the LM server a PoolSpec describes.
+
+    The facade-sanctioned constructor for decode servers —
+    ``spec.build()`` and the decode benchmark both come through here, so
+    no call site outside ``repro.serving`` touches the engine classes
+    directly.  ``backend="engine"`` falls back to the windowed loop
+    (with a warning) for stacks paged decode cannot serve, mirroring the
+    old launcher behavior.
+    """
+    import numpy as np
+
+    from repro.runtime.sampling import SamplingParams
+    from repro.runtime.serve import (ContinuousBatchingEngine, Request,
+                                     WindowedBaselineServer,
+                                     engine_or_windowed)
+    plan = _resolve_plan(spec, cfg)
+    if spec.backend == "engine":
+        srv = engine_or_windowed(
+            params, cfg, plan=plan, max_slots=spec.max_slots,
+            prompt_len=spec.prompt_len, max_len=spec.max_len,
+            block_size=spec.block_size, num_blocks=spec.num_blocks,
+            on_fallback=lambda e: warnings.warn(
+                f"pool {spec.name!r}: paged decode unavailable ({e}); "
+                f"falling back to the windowed baseline"))
+    else:
+        srv = WindowedBaselineServer(params, cfg, plan=plan,
+                                     max_batch=spec.max_slots,
+                                     prompt_len=spec.prompt_len,
+                                     max_len=spec.max_len)
+    if warm:
+        # throwaway requests compile every serving program before
+        # traffic: greedy prefill+decode, and (engine only) the sampled
+        # admit/decode variants, so no routed batch ever pays XLA
+        # compile time into the latency telemetry
+        srv.submit(Request(-1, np.array([1, 2], np.int32), max_new=2))
+        srv.flush()
+        if isinstance(srv, ContinuousBatchingEngine):
+            srv.submit(Request(-2, np.array([1, 2], np.int32), max_new=2,
+                               sampling=SamplingParams(temperature=1.0,
+                                                       seed=0)))
+            srv.flush()
+        srv.reset_stats()
+    return srv
+
+
+def _resolve_plan(spec: PoolSpec, cfg):
+    if spec.plan in (None, "bf16"):
+        return None
+    if spec.plan == "mpai":
+        from repro.core import qat
+        from repro.core.partition import PartitionPlan
+        kw = {} if spec.plan_split is None else {"split": spec.plan_split}
+        return qat.serve_plan(PartitionPlan.mpai(cfg.num_layers, **kw))
+    raise ValueError(f"unknown pool plan {spec.plan!r}")

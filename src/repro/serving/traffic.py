@@ -1,0 +1,60 @@
+"""Open-loop traffic generation against a ServingClient.
+
+The Poisson driver every surface shares — ``launch/route.py``,
+``benchmarks/router_bench.py``, examples, and tests all used to carry
+their own copy of this loop; it now lives here once.  Arrival times,
+class draws, and payload draws consume the seeded RNG in the same order
+as the original ``launch/route.py`` implementation, so seeded runs
+reproduce the pre-facade traces exactly.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.client import ResponseHandle, ServingClient
+
+
+def poisson_arrivals(classes: Sequence, weights: Sequence[float],
+                     rate_hz: float, n_requests: int, seed: int = 0,
+                     payload_fn: Optional[Callable] = None
+                     ) -> List[Tuple[float, object, object]]:
+    """Draw an open-loop arrival trace: [(arrival_s, slo, payload)]."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / rate_hz)
+        slo = classes[rng.choice(len(classes), p=weights)]
+        out.append((t, slo, payload_fn(rng) if payload_fn else None))
+    return out
+
+
+def open_loop(client: ServingClient, classes: Sequence,
+              weights: Sequence[float], rate_hz: float, n_requests: int,
+              seed: int = 0, dt: Optional[float] = None,
+              payload_fn: Optional[Callable] = None,
+              max_s: float = 600.0) -> List[ResponseHandle]:
+    """Drive Poisson open-loop traffic through the fleet until drained.
+
+    ``payload_fn(rng)`` (optional) draws each request's payload: a token
+    prompt array or a prebuilt :class:`~repro.serving.executor.LMWork`
+    for LM pools; None routes cost-model requests.  Returns every
+    request's handle (rejected submissions included — check
+    ``handle.admitted``).
+    """
+    arrivals = poisson_arrivals(classes, weights, rate_hz, n_requests,
+                                seed=seed, payload_fn=payload_fn)
+    handles: List[ResponseHandle] = []
+    i = 0
+    while i < len(arrivals) or client.outstanding or client.pending_faults:
+        client.advance(dt)
+        while i < len(arrivals) and arrivals[i][0] <= client.now:
+            at, slo, payload = arrivals[i]
+            handles.append(client.submit(payload, slo=slo, arrival=at))
+            i += 1
+        client.pump()
+        if client.now > max_s:          # safety net: never loop forever
+            break
+    return handles

@@ -305,13 +305,13 @@ def test_dispatch_never_selects_dominated_plan(rows, fault):
 
 
 # ---------------------------------------------------------------------------
-# BatchingServer non-blocking step API
+# windowed baseline non-blocking step API
 # ---------------------------------------------------------------------------
 def test_server_step_interleaves_to_same_outputs():
     import jax
 
     from repro.models import transformer as T
-    from repro.runtime.serve import BatchingServer, Request
+    from repro.runtime.serve import Request, WindowedBaselineServer
 
     cfg = tiny_dense()
     params = T.model_init(jax.random.PRNGKey(0), cfg)
@@ -319,10 +319,10 @@ def test_server_step_interleaves_to_same_outputs():
     prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
                for _ in range(3)]
 
-    srv_a = BatchingServer(params, cfg, max_batch=2, prompt_len=8,
-                           max_len=16)
-    srv_b = BatchingServer(params, cfg, max_batch=2, prompt_len=8,
-                           max_len=16)
+    srv_a = WindowedBaselineServer(params, cfg, max_batch=2, prompt_len=8,
+                                   max_len=16)
+    srv_b = WindowedBaselineServer(params, cfg, max_batch=2, prompt_len=8,
+                                   max_len=16)
     for i, p in enumerate(prompts):
         srv_a.submit(Request(i, p, max_new=3))
         srv_b.submit(Request(i, p, max_new=3))

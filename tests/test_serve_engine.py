@@ -1,14 +1,16 @@
 """Continuous-batching engine: per-request outputs must be identical to
 solo windowed flush() runs regardless of admission order; exact max_new
-accounting; OutOfBlocks deferral; attention-only guard."""
+accounting; OutOfBlocks deferral; attention-only guard; per-request
+sampling determinism; the deprecated BatchingServer shim."""
 import numpy as np
 import jax
 import pytest
 
 from repro.models import transformer as T
 from repro.runtime.paging import OutOfBlocksError
+from repro.runtime.sampling import SamplingParams
 from repro.runtime.serve import (BatchingServer, ContinuousBatchingEngine,
-                                 Request)
+                                 Request, WindowedBaselineServer)
 
 from conftest import tiny_dense
 
@@ -38,8 +40,8 @@ def solo_reference(model, workload):
     cfg, params = model
     ref = {}
     for rid, prompt, max_new in workload:
-        srv = BatchingServer(params, cfg, max_batch=1,
-                             prompt_len=PROMPT_LEN, max_len=MAX_LEN)
+        srv = WindowedBaselineServer(params, cfg, max_batch=1,
+                                     prompt_len=PROMPT_LEN, max_len=MAX_LEN)
         srv.submit(Request(rid, prompt, max_new=max_new))
         srv.flush()
         ref[rid] = srv.done[rid].output
@@ -161,3 +163,98 @@ def test_out_of_blocks_is_typed_and_atomic():
         plan_blocks(table, alloc, [3, 3])
     assert alloc.available == 4            # nothing leaked
     assert (table == -1).all()             # caller's table untouched
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling
+# ---------------------------------------------------------------------------
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    while engine.pending:
+        engine.step()
+    return engine.done
+
+
+def test_sampling_deterministic_and_batch_invariant(model, workload):
+    """Same seed -> same tokens, whether the request decodes solo or
+    packed into slots with strangers (keys fold (seed, token index),
+    never batch position or composition)."""
+    cfg, params = model
+    sp = SamplingParams(temperature=1.0, top_k=8, seed=42)
+    _, prompt, _ = workload[0]
+
+    def engine():
+        return ContinuousBatchingEngine(params, cfg, max_slots=3,
+                                        prompt_len=PROMPT_LEN,
+                                        max_len=MAX_LEN, block_size=BLOCK)
+    solo = _run(engine(), [Request(0, prompt, max_new=6, sampling=sp)])
+    again = _run(engine(), [Request(0, prompt, max_new=6, sampling=sp)])
+    np.testing.assert_array_equal(solo[0].output, again[0].output)
+    mixed = _run(engine(), [
+        Request(7, workload[1][1], max_new=3),
+        Request(0, prompt, max_new=6, sampling=sp),
+        Request(8, workload[2][1], max_new=2),
+    ])
+    np.testing.assert_array_equal(mixed[0].output, solo[0].output)
+
+
+def test_sampled_requests_do_not_perturb_greedy_neighbors(
+        model, workload, solo_reference):
+    """Greedy requests sharing a batch with a sampled one still match
+    their solo-greedy goldens (sampling defaults keep goldens intact)."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=3,
+                                   prompt_len=PROMPT_LEN, max_len=MAX_LEN,
+                                   block_size=BLOCK)
+    sp = SamplingParams(temperature=0.9, seed=3)
+    reqs = [Request(workload[0][0], workload[0][1],
+                    max_new=workload[0][2]),
+            Request(99, workload[1][1], max_new=6, sampling=sp),
+            Request(workload[2][0], workload[2][1],
+                    max_new=workload[2][2])]
+    done = _run(eng, reqs)
+    for rid, _, max_new in (workload[0], workload[2]):
+        np.testing.assert_array_equal(done[rid].output,
+                                      solo_reference[rid])
+    assert done[99].output.shape == (6,)
+
+
+def test_sampling_respects_top_k_one(model, workload):
+    """top_k=1 at any temperature is argmax — must equal the greedy run."""
+    cfg, params = model
+    rid, prompt, _ = workload[3]
+
+    def engine():
+        return ContinuousBatchingEngine(params, cfg, max_slots=2,
+                                        prompt_len=PROMPT_LEN,
+                                        max_len=MAX_LEN, block_size=BLOCK)
+    greedy = _run(engine(), [Request(0, prompt, max_new=5)])
+    topk1 = _run(engine(), [Request(0, prompt, max_new=5,
+                                    sampling=SamplingParams(
+                                        temperature=2.0, top_k=1,
+                                        seed=11))])
+    np.testing.assert_array_equal(topk1[0].output, greedy[0].output)
+
+
+# ---------------------------------------------------------------------------
+# deprecated windowed entry point
+# ---------------------------------------------------------------------------
+def test_batching_server_shim_warns_and_forwards_to_engine(model):
+    cfg, params = model
+    with pytest.warns(DeprecationWarning, match="repro.serving"):
+        srv = BatchingServer(params, cfg, max_batch=2,
+                             prompt_len=PROMPT_LEN, max_len=MAX_LEN)
+    assert isinstance(srv, ContinuousBatchingEngine)
+    srv.submit(Request(0, np.array([1, 2, 3], np.int32), max_new=3))
+    srv.flush()
+    assert srv.done[0].output.shape == (3,)
+
+
+def test_batching_server_shim_falls_back_for_non_pageable_stacks():
+    hybrid = tiny_dense(mixer="mamba")
+    params = T.model_init(jax.random.PRNGKey(0), hybrid)
+    with pytest.warns(DeprecationWarning):
+        srv = BatchingServer(params, hybrid, max_batch=2,
+                             prompt_len=PROMPT_LEN, max_len=MAX_LEN)
+    assert isinstance(srv, WindowedBaselineServer)

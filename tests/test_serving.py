@@ -1,0 +1,276 @@
+"""Serving facade: FleetSpec round-trip, streaming order/completeness/
+incrementality, SLO violation + rejection surfacing, OutOfBlocks
+deferral-then-completion through the facade, and backend-invariant
+greedy outputs."""
+import json
+
+import numpy as np
+import jax
+import pytest
+
+from repro.models import transformer as T
+from repro.serving import (FaultSpec, FleetSpec, LMWork, PoolSpec,
+                           SamplingParams, SLOClass, open_loop)
+
+from conftest import tiny_dense
+
+PROMPT_LEN, MAX_NEW = 8, 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_dense()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def lm_spec(backend="engine", **pool_kw):
+    kw = dict(capacity=1, max_window=4, max_wait_s=0.0, max_slots=3,
+              prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+    kw.update(pool_kw)
+    return FleetSpec(pools=[PoolSpec("lm", ("tpu_v5e_bf16",),
+                                     backend=backend, **kw)],
+                     workload="transformer", seq_len=PROMPT_LEN)
+
+
+def prompts(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 256, int(rng.integers(2, PROMPT_LEN))
+                         ).astype(np.int32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec round-trip
+# ---------------------------------------------------------------------------
+def test_fleet_spec_dict_round_trip():
+    spec = FleetSpec(
+        pools=[PoolSpec("board-a", ("mpsoc_dpu", "myriadx_vpu"),
+                        capacity=2, max_window=4),
+               PoolSpec("lm", ("tpu_v5e_bf16",), backend="engine",
+                        max_slots=2, prompt_len=8, max_new=6,
+                        num_blocks=12, plan="mpai", plan_split=1)],
+        workload="ursonet",
+        accuracy_penalty={"mpsoc_dpu": 0.05},
+        cut_candidates=[1, 2],
+        slos=[dict(name="custom", max_latency_s=0.5, priority=1)],
+        faults=[FaultSpec("board-a", at_s=1.0, duration_s=2.0,
+                          lost_profiles=("mpsoc_dpu",))])
+    d = spec.to_dict()
+    restored = FleetSpec.from_dict(json.loads(json.dumps(d)))
+    assert restored.to_dict() == d          # dict -> spec -> dict
+    assert restored.pools[1].profiles == ("tpu_v5e_bf16",)
+    assert restored.faults[0].lost_profiles == ("mpsoc_dpu",)
+
+
+def test_pool_spec_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        PoolSpec("x", ("tpu_v5e_bf16",), backend="gpu")
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+def test_streaming_order_and_completeness(model):
+    """stream() yields exactly the request's final output, in order,
+    for every request in a shared batch."""
+    client = lm_spec().build(model=model)
+    handles = [client.submit(p, slo="offline", max_new=1 + i)
+               for i, p in enumerate(prompts(3))]
+    streamed = {h.rid: list(h.stream()) for h in handles}
+    client.drain()
+    engine = client.engines["lm"]
+    for h in handles:
+        out = engine.done[h.rid].output
+        assert streamed[h.rid] == out.tolist()
+        np.testing.assert_array_equal(h.result().tokens, out)
+        assert h.telemetry["tokens"] == out.shape[0]
+
+
+def test_streaming_is_incremental_across_decode_steps(model):
+    """Tokens carry strictly increasing engine decode-step stamps, and a
+    short request's tokens land *between* a long neighbor's — per-step
+    delivery from live slots, not an at-completion dump."""
+    client = lm_spec(max_slots=2).build(model=model)
+    p = prompts(2, seed=1)
+    long = client.submit(p[0], slo="offline", max_new=MAX_NEW)
+    short = client.submit(p[1], slo="offline", max_new=2)
+    client.drain()
+    ls, ss = long.token_steps, short.token_steps
+    assert None not in ls and None not in ss     # engine-stamped
+    assert len(ls) == MAX_NEW and len(ss) == 2
+    assert all(a < b for a, b in zip(ls[1:], ls[2:]))  # one per step
+    # the short request finished while the long one was mid-decode
+    assert ss[-1] < ls[-1]
+
+
+def test_windowed_backend_streams_at_completion(model):
+    """Hook-less backends still satisfy stream(): same tokens, delivered
+    with completion-time (None) stamps."""
+    client = lm_spec(backend="windowed").build(model=model)
+    h = client.submit(prompts(1)[0], slo="offline", max_new=4)
+    toks = list(h.stream())
+    assert toks == client.engines["lm"].done[h.rid].output.tolist()
+    assert h.token_steps == [None] * 4
+
+
+def test_greedy_outputs_backend_invariant(model):
+    """The same greedy workload routed through an engine pool and a
+    windowed pool produces identical tokens (only scheduling differs)."""
+    outs = {}
+    for backend in ("engine", "windowed"):
+        client = lm_spec(backend=backend).build(model=model)
+        handles = [client.submit(p, slo="offline", max_new=3 + i)
+                   for i, p in enumerate(prompts(3, seed=2))]
+        client.drain()
+        outs[backend] = [h.result().tokens.tolist() for h in handles]
+    assert outs["engine"] == outs["windowed"]
+
+
+def test_sampling_params_thread_through_facade(model):
+    sp = SamplingParams(temperature=1.0, top_k=8, seed=7)
+    runs = []
+    for _ in range(2):
+        client = lm_spec().build(model=model)
+        h = client.submit(prompts(1, seed=3)[0], slo="offline",
+                          max_new=MAX_NEW, sampling=sp)
+        runs.append(h.result().tokens.tolist())
+    assert runs[0] == runs[1]              # seeded -> reproducible
+
+
+# ---------------------------------------------------------------------------
+# SLO violations / rejections surfaced on the handle
+# ---------------------------------------------------------------------------
+def _vision_spec(**kw):
+    return FleetSpec(
+        pools=[PoolSpec("board", ("mpsoc_dpu",), capacity=1,
+                        max_window=4, max_wait_s=0.0)],
+        workload="ursonet", **kw)
+
+
+def test_slo_violation_surfaced_on_handle():
+    """Batch-size pricing pushes a full window past a deadline sized for
+    a lone request: admission passes, completion records the miss."""
+    client = _vision_spec().build()
+    nominal = client.router.frontier[0].latency_s
+    tight = SLOClass("tight", max_latency_s=1.5 * nominal)
+    handles = [client.submit(slo=tight) for _ in range(4)]
+    client.drain()
+    results = [h.result() for h in handles]
+    assert all(r.latency_s is not None for r in results)
+    assert any(r.violated for r in results)
+    tel = client.telemetry
+    assert tel["violations"] == sum(r.violated for r in results)
+    assert all(h.telemetry["violated"] == r.violated
+               for h, r in zip(handles, results))
+
+
+def test_rejection_surfaced_on_handle():
+    client = _vision_spec().build()
+    h = client.submit(slo=SLOClass("impossible", max_latency_s=1e-9))
+    assert not h.admitted and h.done
+    r = h.result()
+    assert not r.admitted and r.latency_s is None
+    assert client.telemetry["rejected"] == 1
+
+
+def test_fault_drop_surfaced_as_violation():
+    """Sole pool dies permanently mid-flight: the displaced request is
+    dropped, counted as a violation, and the handle reports it."""
+    import math
+    client = _vision_spec(
+        faults=[FaultSpec("board", at_s=0.001,
+                          duration_s=math.inf)]).build()
+    h = client.submit(slo="bulk-reprocess")
+    client.drain()
+    r = h.result()
+    assert r.dropped and r.violated
+    snap = client.telemetry
+    assert snap["dropped"] == 1 and snap["violations"] == 1
+
+
+def test_oversized_max_new_fails_fast_with_actionable_error(model):
+    client = lm_spec().build(model=model)
+    with pytest.raises(ValueError, match="max_new"):
+        client.submit(prompts(1)[0], slo="offline", max_new=100)
+    assert client.telemetry["admitted"] == 0     # rejected before admission
+
+
+def test_failover_restream_does_not_duplicate_tokens(model):
+    """An SEU mid-decode evicts the virtually-in-flight batch; the
+    re-dispatched request must end with exactly max_new tokens, whether
+    it re-lands on the same engine (finished output handed back) or a
+    survivor pool (stream restarts)."""
+    import math
+    spec = lm_spec()
+    spec.pools.append(PoolSpec("lm-b", ("tpu_v5e_bf16",),
+                               backend="engine", capacity=1, max_window=4,
+                               max_wait_s=0.0, max_slots=3,
+                               prompt_len=PROMPT_LEN, max_new=MAX_NEW))
+    # the batch executes (and streams) on the first tick but stays
+    # virtually in-flight until its measured latency elapses; the fault
+    # lands inside that window and evicts it
+    spec.faults = [FaultSpec("lm", at_s=0.003, duration_s=math.inf)]
+    client = spec.build(model=model)
+    h = client.submit(prompts(1, seed=6)[0], slo="offline",
+                      max_new=MAX_NEW)
+    client.drain()
+    r = h.result()
+    assert h.telemetry["rerouted"] >= 1          # failover happened
+    assert not r.dropped
+    assert r.tokens.shape == (MAX_NEW,)          # no duplicated stream
+def test_out_of_blocks_deferral_then_completion(model):
+    """KV pool sized for one max-length request: the engine admits
+    one-at-a-time, deferrals show up as pool backpressure telemetry,
+    and every request still completes with its exact max_new."""
+    spec = lm_spec(max_slots=3, block_size=4,
+                   num_blocks=-(-(PROMPT_LEN + max(MAX_NEW, 2)) // 4))
+    client = spec.build(model=model)
+    handles = [client.submit(p, slo="offline", max_new=4)
+               for p in prompts(3, seed=4)]
+    client.drain()
+    for h in handles:
+        assert h.result().tokens.shape == (4,)
+    pool = client.telemetry["pools"]["lm"]
+    assert pool["deferrals"] >= 1          # backpressure was exercised
+    engine = client.engines["lm"]
+    assert engine.alloc.available == engine.alloc.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# decode-only tokens/s telemetry
+# ---------------------------------------------------------------------------
+def test_decode_only_tokens_per_s_excludes_prefill(model):
+    client = lm_spec().build(model=model)
+    handles = [client.submit(p, slo="offline", max_new=4)
+               for p in prompts(3, seed=5)]
+    client.drain()
+    pool = client.telemetry["pools"]["lm"]
+    total = sum(len(h.tokens) for h in handles)
+    assert pool["tokens_generated"] == total == 12
+    # one token per request comes from the admission prefill, not decode
+    assert pool["decode_tokens"] == total - 3
+    assert 0 < pool["decode_s"] <= pool["busy_s"]
+    assert pool["decode_tokens_per_s"] > pool["tokens_per_s"]
+
+
+# ---------------------------------------------------------------------------
+# open-loop driver (moved here from launch/route.py)
+# ---------------------------------------------------------------------------
+def test_open_loop_drains_and_returns_handles(model):
+    client = lm_spec().build(model=model)
+    relaxed = SLOClass("lm-offline", max_latency_s=600.0)
+
+    def payload(rng):
+        return LMWork(rng.integers(0, 256, 4).astype(np.int32),
+                      max_new=int(rng.integers(1, MAX_NEW + 1)))
+
+    handles = open_loop(client, [relaxed], [1.0], rate_hz=200.0,
+                        n_requests=8, seed=0, dt=0.01,
+                        payload_fn=payload)
+    assert len(handles) == 8
+    assert client.outstanding == 0
+    assert all(h.done for h in handles)
+    snap = client.telemetry
+    assert snap["completed"] == snap["admitted"] == 8
+    assert snap["pools"]["lm"]["tokens_generated"] == sum(
+        len(h.tokens) for h in handles) > 0
