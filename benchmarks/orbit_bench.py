@@ -1,0 +1,197 @@
+"""Orbit-controller benchmark: eclipse transition + live LM autoscaling.
+
+    PYTHONPATH=src python -m benchmarks.orbit_bench [--smoke] [--check] \
+        [--out BENCH_orbit.json]
+
+Two scenarios through the ``repro.serving`` facade + ``repro.orbit``
+control plane:
+
+* ``orbit_eclipse_{on,off}`` — the launcher's eclipse-transition
+  scenario (``repro.launch.orbit``, cost-model vision fleet, fully
+  deterministic virtual clock) with the controller attached vs the
+  uncapped baseline.  The capped fleet must keep cumulative ``energy_j``
+  within the orbit-average budget (ratio <= 1.05); the baseline is
+  expected to overshoot it (ratio > 1.05) — that gap is the whole point
+  of the controller.
+* ``orbit_lm_autoscale`` — burst traffic into a single tiny engine-
+  backed LM pool with a pool-cloning :class:`ScalingPolicy`: queue
+  depth grows the family live (``ServingClient.add_pool``), the
+  post-burst idle retires the clones gracefully (``retire_pool``), and
+  every request's token stream must arrive complete — an autoscaler
+  retirement never drops in-flight work.  Reports tokens/s with the
+  autoscaler on vs. off.
+
+``--check`` turns the invariants above into hard gates (CI smoke);
+``--out`` writes the full reports next to ``BENCH_decode.json`` /
+``BENCH_router.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.launch.orbit import run_eclipse_scenario
+from repro.orbit import OrbitSpec, PhaseSpec, ScalingPolicy
+from repro.serving import FleetSpec, LMWork, PoolSpec, SLOClass
+from repro.serving.traffic import open_loop
+
+
+def _tiny_lm():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="tiny-mha", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=256, remat=False)
+
+
+def run_lm_autoscale(n_requests: int = 32, max_new_hi: int = 12,
+                     seed: int = 0) -> dict:
+    """Burst-routed decode with and without the autoscaler.
+
+    One engine pool ("lm", 2 slots) takes the whole burst; with the
+    controller attached, queue depth spawns up to two clones that share
+    the backlog, and the idle tail retires them.  This is a
+    *correctness* scenario — its gate is that every stream survives the
+    add/retire churn intact — not a perf one: all pools decode on one
+    host CPU, so cloning splits wall time rather than adding it, and the
+    reported latency/throughput deltas mostly measure occupancy dilution
+    (on real multi-device fleets the same policy adds actual capacity).
+    """
+    import jax
+
+    from repro.models import transformer as T
+
+    cfg = _tiny_lm()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    relaxed = SLOClass("lm-offline", max_latency_s=600.0)
+    prompt_len = 8
+
+    def payload(rng):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(2, prompt_len))
+                              ).astype("int32")
+        return LMWork(prompt, max_new=int(rng.integers(1, max_new_hi + 1)))
+
+    out = {"scenario": "orbit_lm_autoscale", "requests": n_requests,
+           "max_new_mix": [1, max_new_hi]}
+    for scaled in (False, True):
+        spec = FleetSpec(
+            pools=[PoolSpec("lm", ("tpu_v5e_bf16",), backend="engine",
+                            capacity=1, max_window=4, max_wait_s=0.0,
+                            max_slots=2, prompt_len=prompt_len,
+                            max_new=max_new_hi)],
+            workload="transformer", seq_len=prompt_len)
+        client = spec.build(model=(cfg, params))
+        if scaled:
+            # power is a non-issue here (huge sunlit bucket): this
+            # scenario isolates the autoscaler
+            OrbitSpec(
+                phases=[PhaseSpec("sunlit", 60.0, 1e9)], bucket_j=1e9,
+                scaling=ScalingPolicy(template="lm", min_pools=1,
+                                      max_pools=3, queue_high=4,
+                                      queue_low=0, cooldown_s=0.2),
+            ).attach(client)
+        c0 = time.process_time()
+        handles = open_loop(client, [relaxed], [1.0], rate_hz=2000.0,
+                            n_requests=n_requests, seed=seed, dt=0.05,
+                            payload_fn=payload)
+        cpu = time.process_time() - c0
+        for _ in range(60):                 # idle tail: clones retire
+            client.step(0.05)
+        snap = client.telemetry
+        tokens = sum(len(h.tokens) for h in handles)
+        complete = all(
+            h.done and not h.result().dropped
+            and len(h.tokens) == h._work.max_new for h in handles)
+        # decode-only tokens/s over the whole family (clone jit compiles
+        # land in cpu_s, never in decode_s); the scale-up win itself is
+        # queue latency on the fleet clock
+        dec_tok = sum(p["decode_tokens"] for p in snap["pools"].values())
+        dec_s = sum(p["decode_s"] for p in snap["pools"].values())
+        lat = snap["latency_by_class"]["lm-offline"]
+        key = "scaled" if scaled else "fixed"
+        out[key] = {
+            "tokens": tokens,
+            "cpu_s": round(cpu, 4),
+            "decode_tokens_per_s": round(dec_tok / max(dec_s, 1e-9), 2),
+            "latency_p50_s": lat["p50"],
+            "latency_p99_s": lat["p99"],
+            "pools_added": snap["pools_added"],
+            "pools_retired": snap["pools_retired"],
+            "dropped": snap["dropped"],
+            "live_pools": sorted(client.router.pools),
+            "streams_complete": complete,
+        }
+    out["latency_p50_speedup"] = round(
+        out["fixed"]["latency_p50_s"]
+        / max(out["scaled"]["latency_p50_s"], 1e-9), 3)
+    return out
+
+
+def main(csv: bool = True, out: str | None = None, smoke: bool = False,
+         check: bool = False):
+    # the eclipse scenario keeps its full size even in smoke: it is
+    # cost-model-only (cheap), and a shorter trace no longer out-demands
+    # the battery's initial charge, so the baseline would not overshoot
+    n = 300
+    on = run_eclipse_scenario(n_requests=n, controlled=True)
+    off = run_eclipse_scenario(n_requests=n, controlled=False)
+    lm = run_lm_autoscale(n_requests=24 if smoke else 48)
+    results = [on, off, lm]
+    if csv:
+        for r in (on, off):
+            us = r["t_end_s"] * 1e6 / max(r["admitted"], 1)
+            print(f"{r['scenario']},{us:.1f},"
+                  f"energy_ratio={r['energy_ratio']};"
+                  f"deferred={r['deferred']};"
+                  f"viol={r['violation_rate']};"
+                  f"dropped={r['dropped']};t_end={r['t_end_s']}")
+        us = 1e6 / max(lm["scaled"]["decode_tokens_per_s"], 1e-9)
+        print(f"{lm['scenario']},{us:.1f},"
+              f"scaled_decode_tps={lm['scaled']['decode_tokens_per_s']};"
+              f"fixed_decode_tps={lm['fixed']['decode_tokens_per_s']};"
+              f"p50_speedup={lm['latency_p50_speedup']};"
+              f"added={lm['scaled']['pools_added']};"
+              f"retired={lm['scaled']['pools_retired']};"
+              f"streams_complete={lm['scaled']['streams_complete']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    if check:
+        problems = []
+        if on["energy_ratio"] > 1.05:
+            problems.append(
+                f"capped fleet overshot the orbit budget: "
+                f"{on['energy_ratio']} > 1.05")
+        if off["energy_ratio"] <= 1.05:
+            problems.append(
+                f"uncapped baseline stayed inside the budget "
+                f"({off['energy_ratio']}) — the scenario no longer "
+                f"stresses the cap")
+        if on["dropped"] or on["unresolved_handles"]:
+            problems.append("capped eclipse run dropped/stranded requests")
+        for key in ("fixed", "scaled"):
+            if not lm[key]["streams_complete"] or lm[key]["dropped"]:
+                problems.append(f"lm {key}: incomplete or dropped streams")
+        if not (lm["scaled"]["pools_added"] >= 1
+                and lm["scaled"]["pools_retired"]
+                == lm["scaled"]["pools_added"]):
+            problems.append(
+                f"autoscaler did not grow and fully retire: "
+                f"added={lm['scaled']['pools_added']} "
+                f"retired={lm['scaled']['pools_retired']}")
+        if problems:
+            raise SystemExit("orbit bench check failed: "
+                             + "; ".join(problems))
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write full JSON here")
+    ap.add_argument("--smoke", action="store_true", help="small CI run")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the energy-cap and stream-safety "
+                         "invariants (CI)")
+    args = ap.parse_args()
+    main(out=args.out, smoke=args.smoke, check=args.check)

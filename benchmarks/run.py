@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                    engine-backed routed decode vs the windowed baseline
   * decode_*     — continuous-batching engine vs windowed baseline
                    (tokens/s, inter-token p50/p99, slot occupancy)
+  * orbit_*      — orbit-aware fleet controller: eclipse-transition
+                   energy cap (capped vs uncapped budget ratio) and live
+                   LM pool autoscaling with graceful retirement
 """
 from __future__ import annotations
 
@@ -30,9 +33,9 @@ def main() -> None:
                     help="cost-model rows only (fast CI mode)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (decode_bench, fig2_throughput, partition_sweep,
-                            precision_micro, roofline_bench, router_bench,
-                            table1_ursonet)
+    from benchmarks import (decode_bench, fig2_throughput, orbit_bench,
+                            partition_sweep, precision_micro,
+                            roofline_bench, router_bench, table1_ursonet)
 
     fig2_throughput.main()
     partition_sweep.main()
@@ -46,6 +49,7 @@ def main() -> None:
     roofline_bench.main()
     router_bench.main(n=200 if not args.full else 400)
     decode_bench.main(smoke=not args.full)
+    orbit_bench.main(smoke=not args.full)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,169 @@
+"""The closed control loop over the serving fleet: energy cap + scaling.
+
+:class:`FleetController` runs beside the router on the fleet's virtual
+clock (the :class:`~repro.serving.client.ServingClient` steps it from
+``advance()``, so ``result()``/``stream()``/``drain()``/``open_loop``
+all drive it for free).  Each tick it:
+
+1. **banks and drains the energy bucket** — harvest from the orbit
+   power profile since the last tick in, the fleet's telemetry
+   ``energy_j`` delta out;
+2. **derives the dispatch mode** from the bucket level::
+
+       frac > conserve_frac                ->  "nominal"
+       critical_frac < frac <= conserve    ->  "conserve"
+       frac <= critical_frac               ->  "critical"
+
+   and mirrors it onto ``Router.energy_mode`` so plan selection flips
+   from latency-slack-first to energy-first;
+3. **applies the admission policy** (consulted by ``ServingClient.submit``
+   *before* the router sees a request): in nominal mode everything
+   dispatches; below it, deferrable work (SLO priority at or below
+   ``defer_max_priority`` — the offline/background classes) parks in the
+   deferral queue instead of draining the battery; non-deferrable work
+   still dispatches on the energy-first frontier, and is rejected only
+   as a last resort — critical mode with a bone-dry bucket;
+4. **releases the deferral queue** when the mode recovers to nominal
+   (requests keep their original arrival time, so the latency-for-energy
+   trade is recorded honestly as end-to-end latency / violations);
+5. **steps the autoscaler**, if the spec declared one.
+
+Degradation order under a shrinking bucket is therefore: cheaper plans
+-> deferred offline work -> rejection, matching MPAI's premise that an
+onboard fleet rides the speed-accuracy-energy frontier under a hard
+power envelope rather than dropping work at the first brown-out.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.orbit.autoscale import Autoscaler
+from repro.orbit.power import EnergyBucket
+
+MODES = ("nominal", "conserve", "critical")
+
+
+class FleetController:
+    """One instance per ServingClient; built by ``OrbitSpec.attach``."""
+
+    def __init__(self, client, bucket: EnergyBucket, spec,
+                 autoscaler: Optional[Autoscaler] = None):
+        self.client = client
+        self.bucket = bucket
+        self.spec = spec                       # OrbitSpec (thresholds)
+        self.autoscaler = autoscaler
+        self.mode = "nominal"
+        self.deferred: List = []               # parked RouterRequests
+        self.transitions: List[Tuple[float, str]] = []
+        self._seen_j = self._fleet_energy_j()
+        self.initial_level_j = bucket.level_j
+        bucket.rebase(client.now)              # no phantom pre-attach harvest
+        client.attach_controller(self)
+        self._set_mode(client.now)             # honor the initial level
+
+    # ------------------------------------------------------------------
+    # signals
+    # ------------------------------------------------------------------
+    def _fleet_energy_j(self) -> float:
+        """Cumulative fleet spend: retired pools keep their counters in
+        telemetry, so this is monotone across scale-downs."""
+        return sum(c.energy_j
+                   for c in self.client.router.telemetry.pools.values())
+
+    @property
+    def deferred_count(self) -> int:
+        return len(self.deferred)
+
+    # ------------------------------------------------------------------
+    # admission policy (consulted by ServingClient.submit)
+    # ------------------------------------------------------------------
+    def deferrable(self, slo) -> bool:
+        return slo.priority <= self.spec.defer_max_priority
+
+    def admission(self, req) -> str:
+        """One of "dispatch" | "defer" | "reject" for a fresh request."""
+        if self.mode == "nominal":
+            return "dispatch"
+        if self.deferrable(req.slo):
+            return "defer"
+        if self.mode == "critical" and self.bucket.level_j <= 0.0:
+            return "reject"                    # last resort: battery dry
+        return "dispatch"
+
+    def defer(self, req) -> None:
+        req.deferred = True
+        self.deferred.append(req)
+        self.client.router.telemetry.energy_deferred += 1
+
+    # ------------------------------------------------------------------
+    # control step (called from ServingClient.advance every tick)
+    # ------------------------------------------------------------------
+    def step(self, now: float) -> None:
+        self.bucket.advance(now)
+        spent = self._fleet_energy_j()
+        if spent > self._seen_j:               # drain against real work
+            self.bucket.drain(spent - self._seen_j)
+            self._seen_j = spent
+        self._set_mode(now)
+        if self.mode == "nominal" and self.deferred:
+            self._release(now)
+        if self.autoscaler is not None:
+            self.autoscaler.step(self.client, now, mode=self.mode)
+
+    def _set_mode(self, now: float) -> None:
+        """Threshold the bucket level with hysteresis: dropping a mode
+        happens at the threshold, climbing back requires an extra
+        ``hysteresis_frac`` of charge — so the mode doesn't chatter while
+        the level rides a boundary."""
+        f = self.bucket.frac
+        crit, cons = self.spec.critical_frac, self.spec.conserve_frac
+        h = self.spec.hysteresis_frac
+        if f <= crit or (self.mode == "critical" and f <= crit + h):
+            mode = "critical"
+        elif f <= cons or (self.mode != "nominal" and f <= cons + h):
+            mode = "conserve"
+        else:
+            mode = "nominal"
+        if mode != self.mode or not self.transitions:
+            self.mode = mode
+            self.transitions.append((round(now, 4), mode))
+        self.client.router.energy_mode = ("nominal" if mode == "nominal"
+                                          else "conserve")
+
+    def _release(self, now: float) -> None:
+        """Sunlight is back: dispatch parked work, oldest first — but
+        *metered* against the bucket's headroom above the conserve
+        threshold.  Releasing the whole eclipse backlog in one burst
+        would drain the battery straight back below the threshold and
+        overshoot the orbit budget; instead each released request is
+        charged its optimistic energy floor (the frontier's cheapest
+        plan) against the headroom, so the backlog drains at the rate
+        sunlight actually funds.  A release the router now rejects (load
+        estimate) is surfaced on the handle like any admission-time
+        rejection."""
+        router = self.client.router
+        floor = min((p.energy_j for p in router.frontier), default=0.0)
+        headroom = (self.bucket.level_j
+                    - self.spec.conserve_frac * self.bucket.capacity_j)
+        while self.deferred and headroom > 0.0:
+            req = self.deferred.pop(0)
+            req.deferred = False
+            ok = router.submit(req, now)
+            handle = self.client._handles.get(req.rid)
+            if handle is not None:
+                handle.admitted = ok
+            headroom -= max(floor, 1e-12)  # floor=0 still makes progress
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def report(self) -> Dict:
+        return {
+            "mode": self.mode,
+            "deferred_waiting": self.deferred_count,
+            "bucket": self.bucket.summary(),
+            "transitions": [{"t": t, "mode": m}
+                            for t, m in self.transitions],
+            "scale_actions": ([] if self.autoscaler is None
+                              else list(self.autoscaler.actions)),
+        }

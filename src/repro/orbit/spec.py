@@ -1,0 +1,121 @@
+"""OrbitSpec — the orbit control plane as data, like FleetSpec.
+
+An :class:`OrbitSpec` declares everything the fleet controller needs —
+the cyclic power profile (:class:`PhaseSpec` per sunlit/eclipse leg),
+the battery/bucket size and initial charge, the mode thresholds, which
+SLO priorities may be deferred, and (optionally) a
+:class:`~repro.orbit.autoscale.ScalingPolicy`.  ``to_dict`` /
+``from_dict`` round-trip losslessly through JSON, mirroring
+``FleetSpec``, so a launcher flag set, a benchmark scenario, and a test
+fixture share one config path for the control plane too.
+
+``attach(client)`` builds the live controller onto an existing
+:class:`~repro.serving.client.ServingClient`::
+
+    client = fleet_spec.build()
+    ctrl = OrbitSpec(phases=[PhaseSpec("sunlit", 60.0, 8.0),
+                             PhaseSpec("eclipse", 35.0, 1.0)],
+                     bucket_j=120.0).attach(client)
+    ...                                  # submit / open_loop as usual
+    print(ctrl.report())
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional
+
+from repro.orbit.autoscale import Autoscaler, ScalingPolicy
+from repro.orbit.controller import FleetController
+from repro.orbit.power import EnergyBucket, OrbitPhase, PowerProfile
+
+
+@dataclass
+class PhaseSpec:
+    """One orbit phase as data (sunlit/eclipse leg of the power cycle)."""
+    name: str
+    duration_s: float
+    power_w: float
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "PhaseSpec":
+        return cls(**d)
+
+
+@dataclass
+class OrbitSpec:
+    """The orbit control plane as data; ``attach()`` makes it live."""
+    phases: List[PhaseSpec]
+    bucket_j: float                       # battery capacity
+    initial_frac: float = 1.0             # charge at t=0
+    conserve_frac: float = 0.5            # below -> prefer cheap plans, defer
+    critical_frac: float = 0.15           # below -> reject as a last resort
+    hysteresis_frac: float = 0.05         # extra charge needed to mode-up
+    defer_max_priority: int = 0           # SLO priority <= this is deferrable
+    scaling: Optional[ScalingPolicy] = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.critical_frac <= self.conserve_frac <= 1.0:
+            raise ValueError(
+                "need 0 <= critical_frac <= conserve_frac <= 1, got "
+                f"{self.critical_frac} / {self.conserve_frac}")
+        if self.hysteresis_frac < 0.0:
+            raise ValueError("hysteresis_frac must be >= 0")
+
+    # ------------------------------------------------------------------
+    # serialization (JSON round-trip, like FleetSpec)
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return {
+            "phases": [p.to_dict() for p in self.phases],
+            "bucket_j": self.bucket_j,
+            "initial_frac": self.initial_frac,
+            "conserve_frac": self.conserve_frac,
+            "critical_frac": self.critical_frac,
+            "hysteresis_frac": self.hysteresis_frac,
+            "defer_max_priority": self.defer_max_priority,
+            "scaling": (None if self.scaling is None
+                        else self.scaling.to_dict()),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "OrbitSpec":
+        d = dict(d)
+        d["phases"] = [PhaseSpec.from_dict(p) for p in d["phases"]]
+        sc = d.get("scaling")
+        d["scaling"] = None if sc is None else ScalingPolicy.from_dict(sc)
+        return cls(**d)
+
+    # ------------------------------------------------------------------
+    # assembly
+    # ------------------------------------------------------------------
+    def profile(self) -> PowerProfile:
+        return PowerProfile([OrbitPhase(p.name, p.duration_s, p.power_w)
+                             for p in self.phases])
+
+    def bucket(self) -> EnergyBucket:
+        return EnergyBucket(self.bucket_j, self.profile(),
+                            level_j=self.initial_frac * self.bucket_j)
+
+    def attach(self, client, template=None) -> FleetController:
+        """Build the live controller onto a ServingClient.
+
+        ``template`` — the :class:`~repro.serving.spec.PoolSpec` the
+        autoscaler clones; defaults to the entry in the client's
+        ``FleetSpec`` whose name matches ``scaling.template``.
+        """
+        scaler = None
+        if self.scaling is not None:
+            if template is None:
+                pools = [] if client.spec is None else client.spec.pools
+                match = [p for p in pools if p.name == self.scaling.template]
+                if not match:
+                    raise ValueError(
+                        f"scaling template {self.scaling.template!r} not "
+                        f"found in the client's FleetSpec; pass template=")
+                template = match[0]
+            scaler = Autoscaler(self.scaling, template)
+        return FleetController(client, self.bucket(), self,
+                               autoscaler=scaler)

@@ -48,6 +48,10 @@ class Router:
             raise ValueError("router needs at least one pool")
         self.layers = list(layers)
         self.latency_headroom = latency_headroom
+        # "nominal" | "conserve" — set by the orbit FleetController when
+        # the global energy bucket runs low; flips plan selection from
+        # latency-slack-first to energy-first (see _choose)
+        self.energy_mode = "nominal"
         self.pools: Dict[str, AcceleratorPool] = {p.name: p for p in pools}
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         for p in pools:                    # pool counters live in telemetry
@@ -78,6 +82,41 @@ class Router:
             self.layers, self.all_profiles, lost=lost, **self._sched_kw)
         if count:
             self.telemetry.reschedules += 1
+
+    # ------------------------------------------------------------------
+    # live fleet mutation (the orbit autoscaler's seam)
+    # ------------------------------------------------------------------
+    def add_pool(self, pool: AcceleratorPool) -> None:
+        """Join a pool to the live fleet and refresh the frontier over the
+        widened profile set.  Names must be fresh — a name that collides
+        with a live pool is an error, and reusing a *retired* name would
+        splice two pools' telemetry histories (the autoscaler's monotonic
+        clone suffixes guarantee freshness)."""
+        if pool.name in self.pools:
+            raise ValueError(f"pool {pool.name!r} is already routed")
+        self.pools[pool.name] = pool
+        self.telemetry.pools[pool.name] = pool.counters
+        merged = sorted(set(self.all_profiles) | set(pool.profiles))
+        self.all_profiles = merged
+        self.refresh_plans()
+
+    def remove_pool(self, name: str) -> AcceleratorPool:
+        """Detach a drained pool (graceful retirement's final step).  The
+        pool must be empty — callers mark it ``draining`` and wait for its
+        load to reach zero, so no queued or in-flight request is ever
+        dropped.  Its counters stay in telemetry as history (and keep the
+        fleet's cumulative ``energy_j`` monotone for the energy bucket)."""
+        pool = self.pools.get(name)
+        if pool is None:
+            raise KeyError(f"no pool named {name!r}")
+        if pool.load:
+            raise ValueError(f"pool {name!r} still holds {pool.load} "
+                             f"requests; drain before removing")
+        if len(self.pools) == 1:
+            raise ValueError("cannot remove the last pool in the fleet")
+        del self.pools[name]
+        self.refresh_plans()
+        return pool
 
     def routable_plans(self) -> List[ScheduledPlan]:
         """Frontier plans some live pool can actually host.  (A frontier
@@ -114,8 +153,13 @@ class Router:
     def _choose(self, slo: SLOClass
                 ) -> Optional[Tuple[ScheduledPlan, AcceleratorPool]]:
         """Best (plan, pool): cheapest energy whose completion estimate
-        fits the deadline, preferring candidates with latency slack."""
+        fits the deadline, preferring candidates with latency slack.  In
+        ``energy_mode == "conserve"`` (orbit bucket running low) the
+        preference order inverts: joules dominate outright, and a slower
+        in-budget plan beats a faster dearer one — the fleet trades
+        latency slack for battery."""
         best = best_key = None
+        conserve = self.energy_mode == "conserve"
         for plan in self.frontier:
             if not slo.admits(plan):
                 continue
@@ -126,7 +170,10 @@ class Router:
             if est > slo.max_latency_s:
                 continue
             slack = est <= self.latency_headroom * slo.max_latency_s
-            key = (not slack, plan.energy_j, est, plan.accuracy_penalty)
+            key = ((plan.energy_j, not slack, est, plan.accuracy_penalty)
+                   if conserve
+                   else (not slack, plan.energy_j, est,
+                         plan.accuracy_penalty))
             if best_key is None or key < best_key:
                 best_key, best = key, (plan, pool)
         return best

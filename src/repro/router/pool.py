@@ -51,6 +51,7 @@ class RouterRequest:
     violated: bool = False
     dropped: bool = False
     rerouted: int = 0                    # failover re-dispatch count
+    deferred: bool = False               # parked by the orbit energy cap
 
     @property
     def deadline_s(self) -> float:
@@ -96,6 +97,7 @@ class AcceleratorPool:
         self.max_wait_s = max_wait_s
         self.urgent_priority = urgent_priority
         self.state = PoolState.HEALTHY
+        self.draining = False            # graceful retirement: no new work
         self.counters = counters if counters is not None else PoolCounters()
         self._lost: Counter = Counter()        # profile -> overlapping faults
         self._queues: Dict[ScheduledPlan, List[RouterRequest]] = {}
@@ -108,9 +110,18 @@ class AcceleratorPool:
     def effective_profiles(self) -> frozenset:
         return frozenset(p for p in self.profiles if not self._lost[p])
 
-    def compatible(self, plan: ScheduledPlan) -> bool:
+    def hosts(self, plan: ScheduledPlan) -> bool:
+        """Do this pool's surviving profiles cover ``plan``?  The pure
+        capability check — what decides whether *already-held* work can
+        keep running here (``degrade`` eviction)."""
         return (self.state is not PoolState.DEAD
                 and plan_profiles(plan) <= self.effective_profiles)
+
+    def compatible(self, plan: ScheduledPlan) -> bool:
+        """Can this pool take NEW work for ``plan``?  A draining pool
+        (graceful retirement) refuses new dispatches but keeps executing
+        what it already holds — so this is ``hosts`` minus draining."""
+        return not self.draining and self.hosts(plan)
 
     @property
     def queue_depth(self) -> int:
@@ -135,6 +146,8 @@ class AcceleratorPool:
         req.enqueue_s = now
         self._queues.setdefault(req.plan, []).append(req)
         self.counters.dispatched += 1
+        self.counters.queue_depth_now = self.queue_depth
+        self.counters.load_now = self.load
 
     def step(self, now: float) -> List[RouterRequest]:
         """Complete due batches, then launch ready windows.  Non-blocking:
@@ -156,6 +169,8 @@ class AcceleratorPool:
             if not launched:
                 break
         self.counters.queue_depth.record(self.queue_depth)
+        self.counters.queue_depth_now = self.queue_depth
+        self.counters.load_now = self.load
         return completed
 
     def _launch_ready(self, now: float) -> bool:
@@ -198,11 +213,11 @@ class AcceleratorPool:
                       else PoolState.DEGRADED)
         displaced: List[RouterRequest] = []
         for plan in list(self._queues):
-            if not self.compatible(plan):
-                displaced.extend(self._queues.pop(plan))
-        still = []
+            if not self.hosts(plan):     # NOT compatible(): a draining
+                displaced.extend(self._queues.pop(plan))  # pool keeps the
+        still = []                       # work the fault didn't touch
         for b in self._inflight:
-            if self.compatible(b.plan):
+            if self.hosts(b.plan):
                 still.append(b)
             else:
                 displaced.extend(b.requests)
@@ -210,6 +225,8 @@ class AcceleratorPool:
         for r in displaced:
             r.pool = None
         self.counters.evicted += len(displaced)
+        self.counters.queue_depth_now = self.queue_depth
+        self.counters.load_now = self.load
         return displaced
 
     def recover(self, restored_profiles: Iterable[str]) -> None:

@@ -55,6 +55,8 @@ class PoolCounters:
     decode_tokens: int = 0                # tokens from decode steps only
     decode_s: float = 0.0                 # wall time inside decode steps
     deferrals: int = 0                    # OutOfBlocks admission deferrals
+    queue_depth_now: int = 0              # live queue depth (this instant)
+    load_now: int = 0                     # live queued + in-flight
     queue_depth: Histogram = field(default_factory=Histogram)
     batch_size: Histogram = field(default_factory=Histogram)
     slot_occupancy: Histogram = field(default_factory=Histogram)
@@ -83,6 +85,8 @@ class PoolCounters:
                 "decode_s": round(self.decode_s, 4),
                 "decode_tokens_per_s": round(self.decode_tokens_per_s, 2),
                 "deferrals": self.deferrals,
+                "queue_depth_now": self.queue_depth_now,
+                "load_now": self.load_now,
                 "queue_depth": self.queue_depth.summary(),
                 "batch_size": self.batch_size.summary(),
                 "slot_occupancy": self.slot_occupancy.summary()}
@@ -100,6 +104,10 @@ class Telemetry:
         self.dropped = 0                  # admitted but unservable (no pool)
         self.failovers = 0
         self.reschedules = 0
+        self.energy_deferred = 0          # parked by the orbit energy cap
+        self.energy_rejected = 0          # rejected with the battery dry
+        self.pools_added = 0              # autoscaler / live growth events
+        self.pools_retired = 0            # graceful retirements completed
         self.pools: Dict[str, PoolCounters] = defaultdict(PoolCounters)
         self.latency_by_class: Dict[str, Histogram] = defaultdict(Histogram)
         self.violations_by_class: Dict[str, int] = defaultdict(int)
@@ -129,6 +137,17 @@ class Telemetry:
             "dropped": self.dropped,
             "failovers": self.failovers,
             "reschedules": self.reschedules,
+            "energy_deferred": self.energy_deferred,
+            "energy_rejected": self.energy_rejected,
+            "pools_added": self.pools_added,
+            "pools_retired": self.pools_retired,
+            # fleet-wide aggregates: the one schema the orbit controller
+            # and external monitors read (retired pools included, so
+            # energy_j is the cumulative orbit spend)
+            "energy_j": round(sum(p.energy_j for p in self.pools.values()),
+                              4),
+            "queue_depth": sum(p.queue_depth_now
+                               for p in self.pools.values()),
             "pools": {k: v.summary() for k, v in sorted(self.pools.items())},
             "latency_by_class": {k: v.summary() for k, v in
                                  sorted(self.latency_by_class.items())},

@@ -23,9 +23,12 @@ Layers (one module per concern)::
     spec.py     FleetSpec / PoolSpec / FaultSpec — fleets as data; dict/
                 JSON round-trip; build() assembles Router + pools +
                 engines; make_server() is the only sanctioned decode-
-                server constructor
-    client.py   ServingClient (submit/step/drain + fleet clock) and
-                ResponseHandle (.result / .stream / .telemetry)
+                server constructor; build_pool() the shared per-pool
+                assembly path (spec build and live growth)
+    client.py   ServingClient (submit/step/drain + fleet clock), live
+                fleet mutation (add_pool / retire_pool / set_capacity —
+                retirements drain gracefully), and ResponseHandle
+                (.result / .stream / .telemetry)
     executor.py EngineExecutor — adapts the continuous-batching engine
                 to the router's executor protocol: LMWork payloads,
                 per-token relay, decode-only tokens/s, OutOfBlocks
@@ -34,21 +37,24 @@ Layers (one module per concern)::
                 benchmarks, and tests
 
 Everything else — ``launch/serve.py``, ``launch/route.py``, the
-examples, and both serving benchmarks — goes through this package; no
+examples, and the serving benchmarks — goes through this package; no
 other call site constructs ``Router``, ``ContinuousBatchingEngine``, or
-the windowed baseline directly.
+the windowed baseline directly.  The orbit control plane
+(``repro.orbit``: global energy cap + telemetry-driven autoscaler)
+attaches on top of a built client via ``OrbitSpec.attach`` and drives
+the live-mutation operations above.
 """
 from repro.router.slo import SLO_CLASSES, SLOClass
 from repro.runtime.sampling import GREEDY, SamplingParams
 from repro.serving.client import Response, ResponseHandle, ServingClient
 from repro.serving.executor import EngineExecutor, LMWork
 from repro.serving.spec import (DEFAULT_SLOS, FaultSpec, FleetSpec,
-                                PoolSpec, make_server)
+                                PoolSpec, build_pool, make_server)
 from repro.serving.traffic import open_loop, poisson_arrivals
 
 __all__ = [
     "DEFAULT_SLOS", "EngineExecutor", "FaultSpec", "FleetSpec", "GREEDY",
     "LMWork", "PoolSpec", "Response", "ResponseHandle", "SLOClass",
-    "SLO_CLASSES", "SamplingParams", "ServingClient", "make_server",
-    "open_loop", "poisson_arrivals",
+    "SLO_CLASSES", "SamplingParams", "ServingClient", "build_pool",
+    "make_server", "open_loop", "poisson_arrivals",
 ]

@@ -143,6 +143,7 @@ class ResponseHandle:
             "dropped": r.dropped,
             "violated": r.violated,
             "rerouted": r.rerouted,
+            "deferred": r.deferred,
             "arrival_s": r.arrival_s,
             "done_s": r.done_s,
             "latency_s": (None if r.done_s is None
@@ -158,7 +159,8 @@ class ServingClient:
                  failover: Optional[FailoverController] = None,
                  engines: Optional[Dict[str, object]] = None,
                  spec=None, dt: float = 0.002,
-                 slo_map: Optional[Dict[str, SLOClass]] = None):
+                 slo_map: Optional[Dict[str, SLOClass]] = None,
+                 model=None, layers=None):
         self.router = router
         self.failover = failover
         self.engines = dict(engines or {})   # pool name -> LM server
@@ -168,6 +170,13 @@ class ServingClient:
         self._next_rid = 0
         self._handles: Dict[int, ResponseHandle] = {}
         self._slos = dict(slo_map or {})
+        # live-mutation state: the model/layers new pools are built from,
+        # and pools draining toward graceful retirement
+        self._model = model                  # (cfg, params) or None
+        self._layers = layers if layers is not None else list(router.layers)
+        self._retiring: set = set()
+        # orbit control plane (repro.orbit.FleetController), if attached
+        self.controller = None
 
     # ------------------------------------------------------------------
     # submission
@@ -220,7 +229,20 @@ class ServingClient:
         rreq = RouterRequest(rid, self.resolve_slo(slo),
                              self.now if arrival is None else arrival,
                              payload=work)
-        admitted = self.router.submit(rreq, self.now)
+        # the orbit controller (if attached) gates admission on the
+        # global energy bucket: deferrable work parks until sunlight
+        # returns; rejection is the dry-battery last resort
+        verdict = ("dispatch" if self.controller is None
+                   else self.controller.admission(rreq))
+        if verdict == "dispatch":
+            admitted = self.router.submit(rreq, self.now)
+        elif verdict == "defer":
+            self.controller.defer(rreq)
+            admitted = True                  # accepted; dispatches later
+        else:                                # "reject"
+            self.router.telemetry.rejected += 1
+            self.router.telemetry.energy_rejected += 1
+            admitted = False
         handle = ResponseHandle(self, rreq, work, admitted)
         self._handles[rid] = handle
         return handle
@@ -234,14 +256,21 @@ class ServingClient:
     # clock
     # ------------------------------------------------------------------
     def advance(self, dt: Optional[float] = None) -> None:
-        """Move the fleet clock one tick and apply due fault events."""
+        """Move the fleet clock one tick and apply due fault events,
+        then run the orbit control loop (bucket, mode, deferral release,
+        autoscaling) at the new time."""
         self.now += self.dt if dt is None else dt
         if self.failover is not None:
             self.failover.poll(self.now)
+        if self.controller is not None:
+            self.controller.step(self.now)
 
     def pump(self) -> List[RouterRequest]:
         """Advance every pool at the current time (non-blocking)."""
-        return self.router.step(self.now)
+        completed = self.router.step(self.now)
+        if self._retiring:
+            self._finish_retirements()
+        return completed
 
     def step(self, dt: Optional[float] = None) -> List[RouterRequest]:
         self.advance(dt)
@@ -256,11 +285,73 @@ class ServingClient:
                 raise RuntimeError(f"fleet failed to drain by t={max_s}s")
 
     # ------------------------------------------------------------------
+    # live fleet mutation (the orbit autoscaler's operations; callers
+    # can also drive them directly)
+    # ------------------------------------------------------------------
+    def attach_controller(self, controller) -> None:
+        """Wire an orbit FleetController into the clock and admission
+        path (one per client; built by ``OrbitSpec.attach``)."""
+        if self.controller is not None:
+            raise ValueError("a controller is already attached")
+        self.controller = controller
+
+    def add_pool(self, pool_spec, warm: bool = True) -> None:
+        """Grow the fleet live: build the pool a PoolSpec describes and
+        join it to the router (frontier refreshes over the widened
+        profile set).  Engine pools reuse the model the fleet was built
+        with."""
+        from repro.serving.spec import build_pool
+        pool, engine, ex = build_pool(pool_spec, self._layers,
+                                      model=self._model, warm=warm)
+        if ex is not None:
+            ex.on_token = self._on_token
+        self.router.add_pool(pool)
+        if engine is not None:
+            self.engines[pool_spec.name] = engine
+        self.router.telemetry.pools_added += 1
+
+    def retire_pool(self, name: str) -> None:
+        """Shrink the fleet gracefully: the pool stops taking new
+        dispatches immediately, finishes everything it holds (no
+        in-flight stream is dropped), and is removed once drained — on
+        a later ``step()``/``pump()``, not synchronously."""
+        from repro.router.pool import PoolState
+        pool = self.router.pools[name]       # KeyError -> unknown pool
+        live = [p for p in self.router.pools.values()
+                if not p.draining and p.state is not PoolState.DEAD]
+        if live == [pool]:
+            raise ValueError(f"pool {name!r} is the last live pool; a "
+                             f"fleet cannot retire itself empty")
+        if not pool.draining:
+            pool.draining = True
+            self._retiring.add(name)
+
+    def set_capacity(self, name: str, capacity: int) -> None:
+        """Resize a pool's concurrent-batch capacity in place."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.router.pools[name].capacity = capacity
+
+    def _finish_retirements(self) -> None:
+        for name in list(self._retiring):
+            pool = self.router.pools.get(name)
+            if pool is None:                 # removed out from under us
+                self._retiring.discard(name)
+                continue
+            if pool.load == 0:
+                self.router.remove_pool(name)
+                self.engines.pop(name, None)
+                self._retiring.discard(name)
+                self.router.telemetry.pools_retired += 1
+
+    # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------
     @property
     def outstanding(self) -> int:
-        return self.router.outstanding
+        deferred = (0 if self.controller is None
+                    else self.controller.deferred_count)
+        return self.router.outstanding + deferred
 
     @property
     def pending_faults(self) -> int:

@@ -49,8 +49,9 @@ class EngineExecutor:
 
     Request payloads are :class:`LMWork` (or bare token prompts); the
     batch is submitted and driven to completion with the server's
-    non-blocking ``step()``.  Latency is measured wall time; energy
-    falls back to the plan's nominal estimate scaled by batch size.
+    non-blocking ``step()``.  Latency is measured wall time; energy is
+    the plan's nominal per-inference estimate scaled by the tokens the
+    batch actually decoded (decode-only, matching decode_tokens_per_s).
     Given ``counters`` (the pool's PoolCounters — the same object
     Telemetry reads) it records decode telemetry: tokens generated,
     slot occupancy after every step, and decode-only token/time deltas.
@@ -115,11 +116,18 @@ class EngineExecutor:
                 self.counters.slot_occupancy.record(self.server.occupancy)
         for rid, work in want.items():
             work.output = self.server.done[rid].output
+        tok1, dec1, def1 = self._stats()
         if self.counters is not None:
-            tok1, dec1, def1 = self._stats()
             self.counters.tokens_generated += sum(
                 int(w.output.shape[0]) for w in want.values())
             self.counters.decode_tokens += tok1 - tok0
             self.counters.decode_s += dec1 - dec0
             self.counters.deferrals += def1 - def0
-        return time.perf_counter() - t0, plan.energy_j * len(requests)
+        # Energy scales with tokens actually decoded this batch (every
+        # decode step is one forward pass priced at the plan's nominal
+        # per-inference energy_j) — not with request count, which would
+        # charge a max_new=16 request the same as a max_new=1 one and
+        # charge failover re-serves (zero decode) all over again.  The
+        # decode-only basis matches the pool's decode_tokens_per_s
+        # telemetry, so the orbit energy bucket drains against real work.
+        return time.perf_counter() - t0, plan.energy_j * (tok1 - tok0)

@@ -182,11 +182,9 @@ class FleetSpec:
         a throwaway request so compile time never lands in the first
         routed batch's latency telemetry.
         """
-        from repro.router import (AcceleratorPool, CostModelExecutor,
-                                  FailoverController, Router)
+        from repro.router import FailoverController, Router
         from repro.runtime.fault import PoolFault, PoolFaultInjector
         from repro.serving.client import ServingClient
-        from repro.serving.executor import EngineExecutor
 
         cfg = params = None
         if any(p.backend != "costmodel" for p in self.pools):
@@ -198,23 +196,15 @@ class FleetSpec:
                 cfg = self._config()
                 params = T.model_init(jax.random.PRNGKey(0), cfg)
         layers = self._layer_costs(cfg)
+        model = None if cfg is None else (cfg, params)
 
         pools, engines, executors = [], {}, []
         for ps in self.pools:
-            if ps.backend == "costmodel":
-                ex = CostModelExecutor(layers)
-            else:
-                srv = make_server(cfg, params, ps, warm=warm)
-                ex = EngineExecutor(srv, max_new=ps.max_new)
-                engines[ps.name] = srv
-                executors.append(ex)
-            pool = AcceleratorPool(ps.name, ps.profiles, ex,
-                                   capacity=ps.capacity,
-                                   max_window=ps.max_window,
-                                   max_wait_s=ps.max_wait_s)
-            if isinstance(ex, EngineExecutor):
-                ex.counters = pool.counters
+            pool, engine, ex = build_pool(ps, layers, model=model, warm=warm)
             pools.append(pool)
+            if engine is not None:
+                engines[ps.name] = engine
+                executors.append(ex)
 
         router = Router(layers, pools,
                         accuracy_penalty=self.accuracy_penalty or None,
@@ -225,10 +215,46 @@ class FleetSpec:
                       lost_profiles=f.lost_profiles) for f in self.faults])
         failover = FailoverController(router, injector)
         client = ServingClient(router, failover, engines=engines, spec=self,
-                               dt=self.dt, slo_map=self.slo_classes())
+                               dt=self.dt, slo_map=self.slo_classes(),
+                               model=model, layers=layers)
         for ex in executors:
             ex.on_token = client._on_token
         return client
+
+
+def build_pool(ps: PoolSpec, layers, model=None, warm: bool = True):
+    """Assemble one live pool from its spec.
+
+    Returns ``(pool, engine, executor)``; ``engine``/``executor`` are
+    None for cost-model pools.  ``FleetSpec.build()`` and live fleet
+    growth (:meth:`~repro.serving.client.ServingClient.add_pool`, the
+    orbit autoscaler's seam) share this single construction path, so a
+    pool added mid-flight is indistinguishable from one built at spec
+    time.  ``model`` is the ``(cfg, params)`` pair engine/windowed
+    backends decode with.
+    """
+    from repro.router import AcceleratorPool, CostModelExecutor
+    from repro.serving.executor import EngineExecutor
+
+    engine = engine_ex = None
+    if ps.backend == "costmodel":
+        ex = CostModelExecutor(layers)
+    else:
+        if model is None:
+            raise ValueError(
+                f"pool {ps.name!r} needs a model: the fleet was built "
+                f"without one (no LM pools at build time); pass model= "
+                f"or include an engine pool in the original FleetSpec")
+        cfg, params = model
+        engine = make_server(cfg, params, ps, warm=warm)
+        ex = engine_ex = EngineExecutor(engine, max_new=ps.max_new)
+    pool = AcceleratorPool(ps.name, ps.profiles, ex,
+                           capacity=ps.capacity,
+                           max_window=ps.max_window,
+                           max_wait_s=ps.max_wait_s)
+    if engine_ex is not None:
+        engine_ex.counters = pool.counters
+    return pool, engine, engine_ex
 
 
 def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
