@@ -1,0 +1,313 @@
+"""Co-processing benchmark: chunked paged prefill + prefill/decode
+disaggregation (the MPAI DPU->VPU split) through the serving facade.
+
+    PYTHONPATH=src python -m benchmarks.coproc_bench [--smoke] [--check] \
+        [--out BENCH_coproc.json] [--min-ratio 1.0]
+
+Two scenarios, both on prompts *longer than the engine's prompt_len
+bucket* — the workload the dense-scratch prefill could not admit at all:
+
+  * ``coproc_chunked_prefill`` — the unified engine (chunked paged
+    prefill + content-hashed prefix sharing) vs the windowed baseline
+    sized at the full prompt length, on a mix that shares a common
+    system prefix.  The ``--check`` gate here is *correctness*: every
+    output must be bit-identical to the windowed baseline's, and the
+    shared prefix must actually be served from the block index
+    (``prefill_tokens_computed`` << tokens offered).  Raw tokens/s is
+    reported, not gated — at smoke scale the windowed loop's one wide
+    fused batch prefill beats the engine's serial per-request chunk
+    calls on CPU, but it hard-buckets every prompt at one compiled
+    length and burns ``max(max_new)`` padded decode steps per window;
+    the engine trades per-call overhead for unbounded prompts, exact
+    per-request decode, and prefix reuse.
+
+  * ``coproc_disagg_serving`` — a disaggregated two-pool fleet
+    (``PoolSpec(prefill_backend="engine")``: a single-slot wide-chunk
+    prefill engine — the DPU-analogue wide array — feeding the decode
+    pool over mirrored paged pools) vs the unified engine pool, on an
+    open-loop long-prompt mix.  Reports tokens/s for both (best-of-N
+    process-CPU, same noise policy as ``decode_bench``), the handoff
+    count, and the per-stage energy split (``lm.prefill`` vs ``lm``).
+    Under ``--check`` the run fails unless every stream completes
+    exactly (``len(tokens) == max_new``, result == stream — no token
+    lost or duplicated at the handoff), the prefill stage is charged
+    energy on its own pool, and disaggregated tokens/s >= ``--min-ratio``
+    x unified.
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks
+and writes the full metrics as JSON (CI keeps ``BENCH_coproc.json`` as
+the perf-trajectory point).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+PROMPT_LEN = 8          # the engine's admission bucket (chunk grid)
+MAX_PROMPT = 64         # chunked prefill lifts the limit to here
+MAX_NEW = 8
+BLOCK = 8
+
+
+def _tiny_lm():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="tiny-mha", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=256, remat=False)
+
+
+def _model():
+    import jax
+
+    from repro.models import transformer as T
+    cfg = _tiny_lm()
+    return cfg, T.model_init(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: chunked paged prefill vs the windowed baseline
+# ---------------------------------------------------------------------------
+def _shared_prefix_workload(n: int, total_len: int, shared_len: int,
+                            seed: int = 0):
+    """Fixed-length long prompts sharing a common system prefix (the
+    prefix-sharing sweet spot: the block index serves it after the
+    first request prefills it)."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, 256, shared_len).astype(np.int32)
+    return [(i, np.concatenate([
+                prefix, rng.integers(0, 256,
+                                     total_len - shared_len)
+                .astype(np.int32)]),
+             int(rng.integers(1, MAX_NEW + 1)))
+            for i in range(n)]
+
+
+def run_chunked_prefill(n_requests: int = 12, total_len: int = 64,
+                        shared_len: int = 48, repeats: int = 3,
+                        check: bool = False) -> dict:
+    from repro.runtime.serve import Request
+    from repro.serving import PoolSpec, make_server
+
+    cfg, params = _model()
+    workload = _shared_prefix_workload(n_requests, total_len, shared_len)
+
+    def serve(srv, shift):
+        for rid, prompt, max_new in workload:
+            srv.submit(Request(rid + shift, prompt, max_new=max_new))
+        c0 = time.process_time()
+        while srv.pending:
+            srv.step()
+        cpu = time.process_time() - c0
+        toks = sum(len(srv.done[rid + shift].output)
+                   for rid, _, _ in workload)
+        return toks / max(cpu, 1e-9), cpu
+
+    engine = make_server(cfg, params, PoolSpec(
+        "bench-chunked", ("tpu_v5e_bf16",), backend="engine",
+        max_slots=4, prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+        block_size=BLOCK, max_prompt_len=MAX_PROMPT,
+        prefill_chunk=2 * PROMPT_LEN))
+    # the windowed baseline cannot bucket below the full prompt length
+    windowed = make_server(cfg, params, PoolSpec(
+        "bench-windowed", ("tpu_v5e_bf16",), backend="windowed",
+        max_slots=4, prompt_len=total_len, max_new=MAX_NEW))
+    # compile the long-prompt programs outside the timed region
+    warm = _shared_prefix_workload(2, total_len, shared_len, seed=99)
+    for srv in (engine, windowed):
+        for rid, p, mn in warm:
+            srv.submit(Request(-rid - 1, p, max_new=mn))
+        while srv.pending:
+            srv.step()
+        srv.reset_stats()
+
+    best = {}
+    for rep in range(repeats):
+        for kind, srv in (("engine", engine), ("windowed", windowed)):
+            tps, cpu = serve(srv, (rep + 1) * 1000)
+            if kind not in best or tps > best[kind][0]:
+                best[kind] = (tps, cpu)
+    st = engine.stats()
+    mismatched = sum(
+        1 for rid, _, _ in workload
+        if not np.array_equal(engine.done[rid + 1000].output,
+                              windowed.done[rid + 1000].output))
+    out = {
+        "scenario": "coproc_chunked_prefill",
+        "requests": n_requests, "prompt_len": total_len,
+        "shared_prefix": shared_len, "bucket": PROMPT_LEN,
+        "engine_tokens_per_cpu_s": round(best["engine"][0], 1),
+        "windowed_tokens_per_cpu_s": round(best["windowed"][0], 1),
+        "speedup": round(best["engine"][0]
+                         / max(best["windowed"][0], 1e-9), 3),
+        "shared_block_hits": st["shared_block_hits"],
+        "prefill_tokens_computed": st["prefill_tokens"],
+        "prefill_tokens_offered": repeats * n_requests * total_len,
+        "output_mismatches": mismatched,
+    }
+    if check:
+        assert mismatched == 0, (
+            f"chunked paged prefill diverged from the windowed baseline "
+            f"on {mismatched}/{n_requests} outputs")
+        assert st["shared_block_hits"] > 0, \
+            "prefix sharing never hit on a shared-prefix workload"
+        assert (out["prefill_tokens_computed"]
+                < out["prefill_tokens_offered"]), \
+            "prefix sharing saved no prefill compute"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: disaggregated two-pool fleet vs the unified engine pool
+# ---------------------------------------------------------------------------
+def _pool_spec(disagg: bool, slots: int):
+    from repro.serving import PoolSpec
+    kw = {}
+    if disagg:
+        # the prefill-class engine is the wide DPU analogue: one fused
+        # chunk spans the whole padded prompt, vs the unified engine's
+        # per-bucket chunk dispatches
+        kw = dict(prefill_backend="engine", prefill_chunk=MAX_PROMPT)
+    return PoolSpec("lm", ("tpu_v5e_bf16",), backend="engine", capacity=1,
+                    max_window=4 * slots, max_wait_s=0.0, max_slots=slots,
+                    prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+                    block_size=BLOCK, max_prompt_len=MAX_PROMPT, **kw)
+
+
+def run_disagg_serving(n_requests: int = 24, repeats: int = 3,
+                       slots: int = 4, seed: int = 0,
+                       check: bool = False, min_ratio: float = 0.0) -> dict:
+    from repro.router.slo import SLOClass
+    from repro.serving import FleetSpec, LMWork
+    from repro.serving.traffic import open_loop
+
+    cfg, params = _model()
+    relaxed = SLOClass("lm-offline", max_latency_s=600.0)
+
+    def payload(rng):
+        n = int(rng.integers(3 * PROMPT_LEN, MAX_PROMPT - MAX_NEW + 1))
+        return LMWork(rng.integers(0, 256, n).astype("int32"),
+                      max_new=int(rng.integers(1, MAX_NEW + 1)))
+
+    out = {"scenario": "coproc_disagg_serving", "requests": n_requests,
+           "repeats": repeats, "slots": slots,
+           "prompt_mix": [3 * PROMPT_LEN, MAX_PROMPT - MAX_NEW]}
+    clients = {}
+    for kind in ("unified", "disagg"):
+        spec = FleetSpec(pools=[_pool_spec(kind == "disagg", slots)],
+                         workload="transformer", seq_len=PROMPT_LEN)
+        clients[kind] = spec.build(model=(cfg, params))
+    best_tps = {"unified": 0.0, "disagg": 0.0}
+    handles_by = {"unified": [], "disagg": []}
+    # interleave the repeats so co-tenant drift on a shared box hits
+    # both architectures alike (best-of-N per arch, process-CPU basis)
+    for rep in range(repeats):
+        for kind, client in clients.items():
+            c0 = time.process_time()
+            hs = open_loop(client, [relaxed], [1.0], rate_hz=2000.0,
+                           n_requests=n_requests, seed=seed + rep,
+                           dt=0.05, payload_fn=payload)
+            cpu = time.process_time() - c0
+            toks = sum(len(h.tokens) for h in hs)
+            best_tps[kind] = max(best_tps[kind], toks / max(cpu, 1e-9))
+            handles_by[kind].extend(hs)
+            if check:
+                assert not hs.truncated, \
+                    f"{kind}: open_loop trace truncated — metrics invalid"
+    for kind, client in clients.items():
+        pools = client.telemetry["pools"]
+        row = {"tokens_per_cpu_s": round(best_tps[kind], 1),
+               "pools": {name: {"energy_j": p["energy_j"],
+                                "prefill_tokens": p["prefill_tokens"],
+                                "decode_tokens": p["decode_tokens"],
+                                "tokens_generated": p["tokens_generated"]}
+                         for name, p in pools.items()}}
+        if kind == "disagg":
+            srv = client.engines["lm"]
+            row["handoffs"] = srv.stats()["handoffs"]
+        out[kind] = row
+    out["ratio_disagg_vs_unified"] = round(
+        out["disagg"]["tokens_per_cpu_s"]
+        / max(out["unified"]["tokens_per_cpu_s"], 1e-9), 3)
+
+    if check:
+        # exact stream completeness, both architectures: every admitted
+        # stream finishes with exactly its max_new tokens, and the
+        # streamed view equals the terminal result — for the disagg
+        # fleet that means no token lost or duplicated crossing the
+        # prefill->decode seam
+        for kind, handles in handles_by.items():
+            for h in handles:
+                assert h.done and h.admitted, \
+                    f"{kind} rid {h.rid} incomplete"
+                r = h.result()
+                assert list(r.tokens) == h.tokens, \
+                    f"{kind} rid {h.rid}: stream/result mismatch"
+                assert len(h.tokens) == h._work.max_new, \
+                    (kind, h.rid, len(h.tokens), h._work.max_new)
+        for h in handles_by["disagg"]:
+            assert h.telemetry["prefill_pool"] == "lm.prefill"
+        pools = out["disagg"]["pools"]
+        assert pools["lm.prefill"]["energy_j"] > 0, \
+            "prefill stage spent no energy on its own pool"
+        assert pools["lm.prefill"]["prefill_tokens"] > 0
+        assert pools["lm"]["prefill_tokens"] == 0, \
+            "prompt tokens leaked onto the decode pool's counters"
+        assert out["disagg"]["handoffs"] >= n_requests * repeats
+        if min_ratio:
+            assert out["ratio_disagg_vs_unified"] >= min_ratio, (
+                f"disaggregated fleet fell behind unified: "
+                f"{out['ratio_disagg_vs_unified']} < {min_ratio}")
+    return out
+
+
+def main(csv: bool = True, out: str | None = None, smoke: bool = False,
+         check: bool = False, min_ratio: float = 0.0):
+    results = [
+        run_chunked_prefill(n_requests=8 if smoke else 16,
+                            repeats=2 if smoke else 3, check=check),
+        # keep 3 repeats even in smoke: the disagg-vs-unified ratio is
+        # a best-of-N CPU-time gate and needs the extra sample against
+        # co-tenant noise
+        run_disagg_serving(n_requests=16 if smoke else 32,
+                           repeats=3, check=check, min_ratio=min_ratio),
+    ]
+    if csv:
+        r = results[0]
+        us = 1e6 / max(r["engine_tokens_per_cpu_s"], 1e-9)
+        print(f"{r['scenario']},{us:.1f},"
+              f"eng_tps={r['engine_tokens_per_cpu_s']};"
+              f"win_tps={r['windowed_tokens_per_cpu_s']};"
+              f"speedup={r['speedup']};"
+              f"shared_hits={r['shared_block_hits']};"
+              f"mismatches={r['output_mismatches']}")
+        r = results[1]
+        us = 1e6 / max(r["disagg"]["tokens_per_cpu_s"], 1e-9)
+        print(f"{r['scenario']},{us:.1f},"
+              f"disagg_tps={r['disagg']['tokens_per_cpu_s']};"
+              f"unified_tps={r['unified']['tokens_per_cpu_s']};"
+              f"ratio={r['ratio_disagg_vs_unified']};"
+              f"handoffs={r['disagg']['handoffs']};"
+              f"prefill_energy_j="
+              f"{r['disagg']['pools']['lm.prefill']['energy_j']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write full JSON here")
+    ap.add_argument("--smoke", action="store_true", help="small CI run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on completeness/equality/energy-split "
+                         "violations (and --min-ratio, if set)")
+    ap.add_argument("--min-ratio", type=float, default=0.0,
+                    help="with --check: fail unless disaggregated "
+                         "tokens/s >= ratio x unified")
+    args = ap.parse_args()
+    main(out=args.out, smoke=args.smoke, check=args.check,
+         min_ratio=args.min_ratio)

@@ -19,10 +19,21 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * orbit_*      — orbit-aware fleet controller: eclipse-transition
                    energy cap (capped vs uncapped budget ratio) and live
                    LM pool autoscaling with graceful retirement
+  * coproc_*     — co-processing prefill: chunked paged prefill vs the
+                   windowed baseline (output equality + prefix-sharing
+                   savings) and the disaggregated prefill->decode
+                   two-pool fleet vs the unified engine pool
+
+``--check`` turns invariants into failures across the serving benches:
+truncated open-loop traces (the ``max_s`` safety net fired, so the
+trace silently shrank), chunked-prefill output mismatches, token loss
+at the co-processing handoff, and mis-attributed per-stage energy all
+abort the run instead of printing a smaller number.
 """
 from __future__ import annotations
 
 import argparse
+import warnings
 
 
 def main() -> None:
@@ -31,11 +42,22 @@ def main() -> None:
                     help="longer QAT training for Table I accuracy rows")
     ap.add_argument("--skip-accuracy", action="store_true",
                     help="cost-model rows only (fast CI mode)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on truncated traces / completeness / "
+                         "equality violations in the serving benches")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (decode_bench, fig2_throughput, orbit_bench,
-                            partition_sweep, precision_micro,
+    from benchmarks import (coproc_bench, decode_bench, fig2_throughput,
+                            orbit_bench, partition_sweep, precision_micro,
                             roofline_bench, router_bench, table1_ursonet)
+
+    if args.check:
+        # any open_loop truncation inside a bench is a hard failure:
+        # a trace cut by the max_s safety net undercounts the offered
+        # load, so every ratio gated downstream would be fiction
+        warnings.filterwarnings(
+            "error", message=".*open_loop truncated.*",
+            category=RuntimeWarning)
 
     fig2_throughput.main()
     partition_sweep.main()
@@ -49,7 +71,9 @@ def main() -> None:
     roofline_bench.main()
     router_bench.main(n=200 if not args.full else 400)
     decode_bench.main(smoke=not args.full)
-    orbit_bench.main(smoke=not args.full)
+    orbit_bench.main(smoke=not args.full, check=args.check)
+    coproc_bench.main(smoke=not args.full, check=args.check,
+                      min_ratio=1.0 if args.check else 0.0)
 
 
 if __name__ == "__main__":

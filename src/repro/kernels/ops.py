@@ -153,6 +153,66 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     return paged_attention_xla(q, k_pool, v_pool, block_table, lengths)
 
 
+@jax.jit
+def paged_chunk_attention_xla(q: jnp.ndarray, k_pool: jnp.ndarray,
+                              v_pool: jnp.ndarray, table_row: jnp.ndarray,
+                              qpos: jnp.ndarray) -> jnp.ndarray:
+    """Chunk-prefill attention for ONE sequence against its paged KV.
+
+    The chunked-paged-prefill companion to :func:`paged_attention_xla`:
+    a C-token query block (one prefill chunk, already pasted into the
+    pool by ``paging.write_prefill_chunk``) attends causally to every
+    earlier position of its own sequence — the paged prefix written by
+    previous chunks plus the in-chunk lower triangle — walking the
+    sequence's block-table row with an online softmax, one block in
+    flight at a time.
+
+    q: [C, KVp, gp, hd]; k_pool/v_pool: [num_rows, P, KVp, hd];
+    table_row: [MB] int32 (-1 = unallocated); qpos: [C] int32 absolute
+    positions of the chunk.  Returns [C, KVp, gp, hd].  Blocks past the
+    chunk (decode-budget rows, dead entries) fall to the causal mask:
+    their positions exceed every query position.
+    """
+    c, kvp, gp, hd = q.shape
+    page = k_pool.shape[1]
+    mb = table_row.shape[0]
+    qf = q.astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+
+    def step(carry, j):
+        m, l, acc = carry
+        row = jnp.maximum(table_row[j], 0)
+        k = k_pool[row].astype(jnp.float32)           # [P, KVp, hd]
+        v = v_pool[row].astype(jnp.float32)
+        s = jnp.einsum("ckgd,pkd->kgcp", qf, k)
+        pos = j * page + jnp.arange(page)
+        mask = (pos[None, :] <= qpos[:, None]) & (table_row[j] >= 0)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("kgcp,pkd->kgcd", p, v)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((kvp, gp, c), -1e30, jnp.float32),
+            jnp.zeros((kvp, gp, c), jnp.float32),
+            jnp.zeros((kvp, gp, c, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(mb), unroll=True)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # [KVp, gp, C, hd]
+    return out.transpose(2, 0, 1, 3).astype(q.dtype)
+
+
+def paged_chunk_attention(q: jnp.ndarray, k_pool: jnp.ndarray,
+                          v_pool: jnp.ndarray, table_row: jnp.ndarray,
+                          qpos: jnp.ndarray) -> jnp.ndarray:
+    """Backend front door for chunk-prefill paged attention (see
+    :func:`paged_chunk_attention_xla`).  The block-walk runs as native
+    XLA everywhere today; a Pallas grid over (q-block, kv-block) with
+    the same scalar-prefetch table walk as the decode kernel is the
+    drop-in TPU upgrade and slots in here."""
+    return paged_chunk_attention_xla(q, k_pool, v_pool, table_row, qpos)
+
+
 def selective_scan(x, dt, b, c, a, d, bd: int = 512, q: int = 256):
     """Fused Mamba selective scan.  x, dt: [B,S,D]; b, c: [B,S,N];
     a: [D,N]; d: [D] -> y [B,S,D] (pads D and S to block multiples)."""

@@ -272,6 +272,35 @@ def paged_decode_attention_apply(params: Dict, cfg: ModelConfig,
     return pdot(out, params["wo"], policy), state
 
 
+def paged_chunk_attention_apply(params: Dict, cfg: ModelConfig,
+                                x: jnp.ndarray,
+                                state: paging.PagedKVState,
+                                positions: jnp.ndarray, seq,
+                                policy: PrecisionPolicy = DEFAULT_POLICY
+                                ) -> Tuple[jnp.ndarray, paging.PagedKVState]:
+    """One prefill *chunk* of sequence ``seq`` against the paged cache.
+
+    x: [1, C, D]; positions: [1, C] absolute (chunk start must be
+    block-aligned, C a whole number of blocks).  The chunk's KV is
+    pasted into the sequence's blocks first (``write_prefill_chunk``),
+    then attention reads the pool back through the block-table walk —
+    queries see the paged prefix written by earlier chunks plus the
+    in-chunk causal triangle, so chunked prefill computes exactly the
+    full-prompt attention, C tokens at a time.  ``seq`` may be traced.
+    """
+    b, c, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q, k, v = _project_qkv(params, cfg, x, positions, policy)
+    state = paging.write_prefill_chunk(state, k[0], v[0], seq,
+                                       positions[0, 0])
+    kvp = k.shape[2]
+    qh = q[0].reshape(c, kvp, -1, hd)             # grouped-query layout
+    out = kops.paged_chunk_attention(qh, state.k_pool, state.v_pool,
+                                     state.block_table[seq], positions[0])
+    out = out.reshape(b, c, -1).astype(x.dtype)
+    return pdot(out, params["wo"], policy), state
+
+
 def decode_attention_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
                            cache: KVCache,
                            policy: PrecisionPolicy = DEFAULT_POLICY

@@ -174,8 +174,11 @@ def first_paged_state(cache) -> Optional[PagedKVState]:
 def _sublayer_apply(sub: Dict, cfg: ModelConfig, kind: str, is_moe: bool,
                     x: jnp.ndarray, positions: jnp.ndarray,
                     policy: PrecisionPolicy, tp: int,
-                    cache=None, decode: bool = False):
-    """Returns (x, new_cache, aux)."""
+                    cache=None, decode: bool = False, chunk_seq=None):
+    """Returns (x, new_cache, aux).  ``chunk_seq`` (paged caches only)
+    switches prefill into chunked-paged mode: the window is one chunk of
+    sequence ``chunk_seq`` at absolute ``positions``, pasted into its
+    blocks and attended against the paged prefix."""
     _, norm = make_norm("rmsnorm")
     aux = jnp.zeros((), jnp.float32)
     h = norm(sub["norm1"], x, cfg.norm_eps)
@@ -188,6 +191,9 @@ def _sublayer_apply(sub: Dict, cfg: ModelConfig, kind: str, is_moe: bool,
             else:
                 out, new_cache = attn.decode_attention_apply(
                     sub["mixer"], cfg, h, cache, policy)
+        elif chunk_seq is not None and isinstance(cache, PagedKVState):
+            out, new_cache = attn.paged_chunk_attention_apply(
+                sub["mixer"], cfg, h, cache, positions, chunk_seq, policy)
         else:
             out = attn.attention_apply(sub["mixer"], cfg, h, positions, policy)
             if cache is not None:
@@ -272,7 +278,7 @@ def _prefill_kv(mix_params, cfg, h, positions, cache, policy):
 # ---------------------------------------------------------------------------
 def _segment_scan(seg_params, cfg: ModelConfig, x, positions,
                   policy: PrecisionPolicy, tp: int, caches=None,
-                  decode: bool = False):
+                  decode: bool = False, chunk_seq=None):
     """Scan a segment's super-blocks.  Returns (x, new_caches, aux_sum)."""
     pat = sublayer_pattern(cfg)
 
@@ -283,7 +289,7 @@ def _segment_scan(seg_params, cfg: ModelConfig, x, positions,
             c = None if blk_cache is None else blk_cache[f"sub_{j}"]
             x, c2, aux = _sublayer_apply(blk_params[f"sub_{j}"], cfg, kind,
                                          is_moe, x, positions, policy, tp,
-                                         c, decode)
+                                         c, decode, chunk_seq)
             if new_blk_cache is not None:
                 new_blk_cache[f"sub_{j}"] = c2
             aux_tot = aux_tot + aux
@@ -365,11 +371,15 @@ class LMOutput(NamedTuple):
 def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
             plan: Optional[PartitionPlan] = None, tp: int = 1,
             cache=None, decode: bool = False,
-            frontend_embeds: Optional[jnp.ndarray] = None) -> LMOutput:
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            chunk=None) -> LMOutput:
     """Unified forward.
 
     * train/prefill: tokens [B, S], cache None or prefill-target cache
     * decode: tokens [B, 1], cache required
+    * chunked paged prefill: tokens [1, C], cache paged, ``chunk`` =
+      ``(seq, start)`` — one chunk of sequence ``seq`` at absolute
+      positions ``start .. start+C-1`` (see :func:`prefill_paged_chunk`)
     """
     period = pattern_period(cfg)
     plan = plan or PartitionPlan.uniform(cfg.num_layers)
@@ -380,6 +390,7 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
               plan.embed_policy.precision.compute_dtype)
     if frontend_embeds is not None:
         x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+    chunk_seq = None
     if decode:
         ps = first_paged_state(cache)
         if ps is not None:
@@ -391,6 +402,10 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
             start = cache_position(cfg, cache)
             positions = jnp.broadcast_to(start,
                                          (x.shape[0], 1)).astype(jnp.int32)
+    elif chunk is not None:
+        chunk_seq, start = chunk
+        positions = (jnp.asarray(start, jnp.int32)
+                     + jnp.arange(x.shape[1], dtype=jnp.int32))[None, :]
     else:
         positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
                                      x.shape[:2])
@@ -402,7 +417,8 @@ def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
         seg_params = _slice_stack(params["layers"], lo, hi)
         seg_cache = None if cache is None else _slice_stack(cache, lo, hi)
         x, seg_new, aux = _segment_scan(seg_params, cfg, x, positions,
-                                        seg.policy, tp, seg_cache, decode)
+                                        seg.policy, tp, seg_cache, decode,
+                                        chunk_seq)
         new_cache_parts.append(seg_new)
         aux_total = aux_total + aux
 
@@ -449,3 +465,22 @@ def prefill(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray, cache,
             frontend_embeds: Optional[jnp.ndarray] = None) -> LMOutput:
     return forward(params, cfg, tokens, plan, tp, cache=cache, decode=False,
                    frontend_embeds=frontend_embeds)
+
+
+def prefill_paged_chunk(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                        caches, seq, start,
+                        plan: Optional[PartitionPlan] = None,
+                        tp: int = 1) -> LMOutput:
+    """One chunk of a chunked paged prefill.
+
+    tokens: [1, C] — tokens ``start .. start+C-1`` of sequence ``seq``
+    (``start`` and ``C`` block-aligned); ``caches`` is the engine's
+    paged cache tree.  The chunk's KV lands directly in the sequence's
+    blocks and attention reads the paged prefix back, so no dense
+    scratch cache bounds the prompt length.  ``seq``/``start`` may be
+    traced — the serving engine jits this once per chunk shape.
+    Returns logits for the chunk (callers use ``logits[:, -1]`` of the
+    final chunk to sample the first output token) and the updated caches.
+    """
+    return forward(params, cfg, tokens, plan, tp, cache=caches,
+                   decode=False, chunk=(seq, start))

@@ -162,6 +162,12 @@ class FleetController:
             "mode": self.mode,
             "deferred_waiting": self.deferred_count,
             "bucket": self.bucket.summary(),
+            # per-pool spend the bucket drained against — disaggregated
+            # pools show their co-processing split here (the `.prefill`
+            # stage pool is charged separately from its decode pool)
+            "energy_by_pool": {
+                name: round(c.energy_j, 4) for name, c in
+                sorted(self.client.router.telemetry.pools.items())},
             "transitions": [{"t": t, "mode": m}
                             for t, m in self.transitions],
             "scale_actions": ([] if self.autoscaler is None

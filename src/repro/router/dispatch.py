@@ -100,6 +100,29 @@ class Router:
         self.all_profiles = merged
         self.refresh_plans()
 
+    def register_stage_pool(self, name: str, counters):
+        """Attach telemetry counters for a co-processing *stage* pool —
+        e.g. the prefill-class engine feeding a disaggregated decode
+        pool.  Stage pools never take independent dispatches (the owning
+        executor charges their share of each routed batch — tokens,
+        busy time, energy — directly into these counters), but they
+        appear in the fleet snapshot like any routed pool, so the orbit
+        energy bucket drains against per-stage spend and monitors see
+        the DPU/VPU split.
+
+        Returns the counters object actually registered: re-adding a
+        stage name whose pool retired earlier *continues* the retired
+        counters (callers must charge the returned object), because the
+        fleet's cumulative ``energy_j`` must stay monotone for the
+        orbit bucket — the same history-splicing ``remove_pool`` keeps
+        for routed pools."""
+        if name in self.pools:
+            raise ValueError(f"pool name {name!r} is already routed")
+        if name in self.telemetry.pools:
+            return self.telemetry.pools[name]
+        self.telemetry.pools[name] = counters
+        return counters
+
     def remove_pool(self, name: str) -> AcceleratorPool:
         """Detach a drained pool (graceful retirement's final step).  The
         pool must be empty — callers mark it ``draining`` and wait for its

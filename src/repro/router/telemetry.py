@@ -54,6 +54,7 @@ class PoolCounters:
     tokens_generated: int = 0             # LM pools: real sampled tokens
     decode_tokens: int = 0                # tokens from decode steps only
     decode_s: float = 0.0                 # wall time inside decode steps
+    prefill_tokens: int = 0               # prompt tokens prefilled here
     deferrals: int = 0                    # OutOfBlocks admission deferrals
     queue_depth_now: int = 0              # live queue depth (this instant)
     load_now: int = 0                     # live queued + in-flight
@@ -84,6 +85,7 @@ class PoolCounters:
                 "decode_tokens": self.decode_tokens,
                 "decode_s": round(self.decode_s, 4),
                 "decode_tokens_per_s": round(self.decode_tokens_per_s, 2),
+                "prefill_tokens": self.prefill_tokens,
                 "deferrals": self.deferrals,
                 "queue_depth_now": self.queue_depth_now,
                 "load_now": self.load_now,

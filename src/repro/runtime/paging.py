@@ -27,7 +27,8 @@ kernel predicates those blocks off entirely.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Tuple
+import hashlib
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -222,6 +223,109 @@ def write_prefill_batch(state: PagedKVState, k: jnp.ndarray,
     v_pool = state.v_pool.at[rows].set(blocked(v).astype(state.v_pool.dtype))
     return PagedKVState(k_pool, v_pool, state.block_table,
                         jnp.where(admit, s, state.lengths))
+
+
+@jax.jit
+def write_prefill_chunk(state: PagedKVState, k: jnp.ndarray, v: jnp.ndarray,
+                        seq, start) -> PagedKVState:
+    """Paste one *chunk* of a prefill into sequence ``seq``'s blocks.
+
+    k, v: [C, KVp, hd] — tokens ``start .. start+C-1`` of the sequence.
+    Both ``start`` and ``C`` must be block-aligned (``% P == 0``), so the
+    paste is a whole-block scatter (the Pallas-friendly layout: rows are
+    written in full, never read-modify-written) and chunks can land in
+    any order without masking.  ``seq`` and ``start`` may be traced —
+    this is the jit-safe building block chunked paged prefill and the
+    co-processing KV handoff both ride.  The sequence's length advances
+    to ``start + C``; callers paste chunks left to right so the final
+    chunk leaves the true prefill length behind.  Unallocated table
+    entries route to the trash row (same contract as ``append_tokens``).
+    """
+    p = state.k_pool.shape[1]
+    trash = state.k_pool.shape[0] - 1
+    c = k.shape[0]
+    nb = c // p
+    row = jax.lax.dynamic_slice(state.block_table[seq], (start // p,), (nb,))
+    rows = jnp.where(row >= 0, row, trash)
+
+    def blocked(x):
+        return x.reshape(nb, p, *x.shape[1:])
+    k_pool = state.k_pool.at[rows].set(blocked(k).astype(state.k_pool.dtype))
+    v_pool = state.v_pool.at[rows].set(blocked(v).astype(state.v_pool.dtype))
+    return PagedKVState(k_pool, v_pool, state.block_table,
+                        state.lengths.at[seq].set(start + c))
+
+
+class SharedBlockIndex:
+    """Content-hashed prefix-block sharing over one allocator's pool.
+
+    A full block of prompt tokens is identified by the *chain digest* of
+    its content: ``sha1(parent_digest + tokens.tobytes())``.  Because the
+    digest folds in the whole token prefix, two sequences map to the
+    same digest exactly when their prompts agree through that block —
+    the condition under which their KV is bit-identical and the block
+    can be shared read-only.  The index tracks a refcount per registered
+    block: the prefilling owner holds one reference, each sharer adds
+    one, and the block returns to the allocator only when the last
+    reference releases.  Entries leave the index the moment their
+    refcount hits zero, so sharing happens across *concurrently live*
+    sequences (a common system prompt across a batch) and the allocator
+    accounting stays exact — no unreferenced cache to evict.
+    """
+
+    ROOT = b""
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self._by_digest: Dict[bytes, int] = {}
+        self._digest_of: Dict[int, bytes] = {}
+        self._refs: Dict[int, int] = {}
+        self.hits = 0                     # blocks reused instead of refilled
+
+    @staticmethod
+    def chain(parent: bytes, tokens: np.ndarray) -> bytes:
+        return hashlib.sha1(parent
+                            + np.ascontiguousarray(tokens, np.int32)
+                            .tobytes()).digest()
+
+    def lookup(self, digest: bytes) -> Optional[int]:
+        return self._by_digest.get(digest)
+
+    def acquire(self, digest: bytes) -> Optional[int]:
+        """Take a reference on the block holding ``digest``'s KV."""
+        blk = self._by_digest.get(digest)
+        if blk is not None:
+            self._refs[blk] += 1
+            self.hits += 1
+        return blk
+
+    def register(self, digest: bytes, block: int) -> None:
+        """Publish a freshly prefilled block (owner's reference)."""
+        if digest in self._by_digest:     # raced by an identical prompt:
+            return                        # keep the first copy canonical
+        self._by_digest[digest] = block
+        self._digest_of[block] = digest
+        self._refs[block] = self._refs.get(block, 0) + 1
+
+    def release(self, blocks: Iterable[int] = ()) -> List[int]:
+        """Drop one reference per block; returns the blocks NOT tracked
+        here (still owned solely by the caller) so the caller can hand
+        them straight back to the allocator.  Tracked blocks go back to
+        the allocator automatically when their last reference drops."""
+        untracked: List[int] = []
+        for b in blocks:
+            b = int(b)
+            if b < 0:
+                continue
+            if b not in self._refs:
+                untracked.append(b)
+                continue
+            self._refs[b] -= 1
+            if self._refs[b] <= 0:
+                del self._refs[b]
+                self._by_digest.pop(self._digest_of.pop(b), None)
+                self.alloc.release([b])
+        return untracked
 
 
 def gather_kv(state: PagedKVState, max_len: int

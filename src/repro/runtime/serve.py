@@ -114,9 +114,11 @@ class WindowedBaselineServer:
         self.decode_steps = 0
         self.decode_tokens = 0            # tokens produced by decode steps
         self.decode_s = 0.0               # wall time inside decode steps
+        self.prefill_tokens = 0           # prompt tokens prefilled
         self.deferrals = 0                # windowed loop never defers
 
     def submit(self, req: Request) -> None:
+        _require_prompt(req, "server")
         assert req.prompt.shape[0] <= self.prompt_len
         assert self.prompt_len + req.max_new <= self.max_len, \
             (req.rid, req.max_new, self.max_len)
@@ -182,6 +184,7 @@ class WindowedBaselineServer:
                 "decode_steps": self.decode_steps,
                 "decode_tokens": self.decode_tokens,
                 "decode_s": self.decode_s,
+                "prefill_tokens": self.prefill_tokens,
                 "deferrals": self.deferrals}
 
     def _start_window(self) -> None:
@@ -195,6 +198,7 @@ class WindowedBaselineServer:
         out = self._prefill(self.params, jnp.asarray(toks), cache)
         last = jnp.argmax(out.logits[:, -1], axis=-1)[:, None]
         max_new = max(r.max_new for r in batch)
+        self.prefill_tokens += self.prompt_len * len(batch)
         self.total_tokens += sum(1 for r in batch if r.max_new >= 1)
         self._active = _ActiveWindow(batch, out.cache, last,
                                      [np.asarray(last)], max_new - 1)
@@ -216,6 +220,7 @@ def engine_or_windowed(params, cfg: ModelConfig,
                        max_slots: int = 8, prompt_len: int = 32,
                        max_len: int = 64, block_size: int = 8,
                        num_blocks: Optional[int] = None,
+                       prefill_chunk: Optional[int] = None,
                        on_fallback=None):
     """The one engine-with-windowed-fallback policy.
 
@@ -231,7 +236,8 @@ def engine_or_windowed(params, cfg: ModelConfig,
             return ContinuousBatchingEngine(
                 params, cfg, plan=plan, tp=tp, max_slots=max_slots,
                 prompt_len=prompt_len, max_len=max_len,
-                block_size=block_size, num_blocks=num_blocks)
+                block_size=block_size, num_blocks=num_blocks,
+                prefill_chunk=prefill_chunk)
         except ValueError as e:    # non-pageable: keep the windowed loop
             if on_fallback is not None:
                 on_fallback(e)
@@ -273,6 +279,40 @@ class _Slot:
     sampled: bool = False              # non-greedy sampling requested
 
 
+_DEFER = object()        # admission verdict: blocks unavailable, retry later
+
+
+def _require_prompt(req: Request, who: str) -> None:
+    """Every server rejects empty prompts up front: a zero-length prompt
+    used to slip into a batch and crash it mid-admission (the -0 slice
+    selects the whole row)."""
+    if req.prompt.shape[0] == 0:
+        raise ValueError(
+            f"request {req.rid}: empty prompt — the {who} needs at "
+            f"least one prompt token to prefill")
+
+
+@jax.jit
+def _gather_block_rows(caches, rows):
+    """Export the KV content of ``rows`` from every sublayer pool —
+    one fused device call per handoff (the DPU->VPU DMA analogue)."""
+    return {key: (st.k_pool[:, rows], st.v_pool[:, rows])
+            for key, st in caches.items()}
+
+
+@jax.jit
+def _paste_block_rows(caches, kv, rows):
+    """Import handed-off KV content into ``rows`` of every sublayer
+    pool (mirrored geometry); the receiving side of the handoff."""
+    out = {}
+    for key, st in caches.items():
+        k_b, v_b = kv[key]
+        out[key] = st._replace(
+            k_pool=st.k_pool.at[:, rows].set(k_b.astype(st.k_pool.dtype)),
+            v_pool=st.v_pool.at[:, rows].set(v_b.astype(st.v_pool.dtype)))
+    return out
+
+
 class ContinuousBatchingEngine:
     """Slot-based continuous-batching decode over a paged KV pool.
 
@@ -307,17 +347,29 @@ class ContinuousBatchingEngine:
                  plan: Optional[PartitionPlan] = None, tp: int = 1,
                  max_slots: int = 8, prompt_len: int = 32,
                  max_len: int = 64, block_size: int = 8,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.params, self.cfg, self.plan, self.tp = params, cfg, plan, tp
         self.max_slots, self.prompt_len = max_slots, prompt_len
         self.max_len, self.block_size = max_len, block_size
         assert max_len > prompt_len, (max_len, prompt_len)
+        # chunked paged prefill: prompts longer than the prompt_len
+        # bucket admit in block-aligned chunks of this many tokens,
+        # written straight into paged blocks (no dense scratch cache
+        # bounds them) — the only remaining prompt limit is max_len
+        self.prefill_chunk = (prefill_chunk if prefill_chunk is not None
+                              else max(block_size,
+                                       prompt_len // block_size
+                                       * block_size))
+        assert self.prefill_chunk % block_size == 0, \
+            (self.prefill_chunk, block_size)
         self.table_width = -(-max_len // block_size)
         if num_blocks is None:
             num_blocks = max_slots * self.table_width
         assert num_blocks >= self.table_width, \
             "pool smaller than one max-length request"
         self.alloc = BlockAllocator(num_blocks)
+        self.shared = paging.SharedBlockIndex(self.alloc)
         self.table = -np.ones((max_slots, self.table_width), np.int32)
         self.lengths = np.zeros(max_slots, np.int32)
         self.caches = T.init_paged_decode_cache(
@@ -351,6 +403,7 @@ class ContinuousBatchingEngine:
         # PRNG work rivals the forward pass) and a sampling one; the
         # host picks per call based on the live slots
         self._admit_step = jax.jit(self._admit_impl, static_argnums=(8,))
+        self._chunk_step = jax.jit(self._chunk_impl, static_argnums=(8,))
 
         def _decode_greedy(p, toks, caches):
             out = T.decode_step(p, cfg, toks, caches, plan, tp)
@@ -374,16 +427,35 @@ class ContinuousBatchingEngine:
         self.decode_tokens = 0                # tokens from decode steps only
         self.decode_s = 0.0                   # wall time in decode steps
         self.admit_s = 0.0                    # wall time in admission steps
+        self.prefill_tokens = 0               # prompt tokens prefilled
         self.deferrals = 0                    # OutOfBlocks admission deferrals
+        self.shared.hits = 0                  # prefix blocks served by index
 
     # ------------------------------------------------------------------
     # public API (shared with WindowedBaselineServer)
     # ------------------------------------------------------------------
+    def padded_prompt_len(self, s: int) -> int:
+        """Prompt context a length-``s`` prompt occupies once admitted:
+        the ``prompt_len`` bucket when it fits (left-padded, matching
+        the windowed baseline), else the next prefill-chunk multiple."""
+        if s <= self.prompt_len:
+            return self.prompt_len
+        c = self.prefill_chunk
+        return -(-s // c) * c
+
     def submit(self, req: Request) -> None:
-        assert req.prompt.shape[0] <= self.prompt_len
-        assert self.prompt_len + req.max_new <= self.max_len, \
-            (req.rid, req.max_new, self.max_len)
+        _require_prompt(req, "engine")
+        padded = self.padded_prompt_len(int(req.prompt.shape[0]))
+        assert padded + req.max_new <= self.max_len, \
+            (req.rid, req.prompt.shape[0], req.max_new, self.max_len)
         self.queue.append(req)
+
+    def _held_blocks(self) -> List[int]:
+        """Per-slot count of blocks currently owned — the baseline
+        ``plan_blocks`` needs: growing one row must restate every other
+        row's holdings so nothing it already owns is re-planned."""
+        return [int((self.table[j] >= 0).sum())
+                for j in range(self.max_slots)]
 
     @property
     def pending(self) -> int:
@@ -420,6 +492,8 @@ class ContinuousBatchingEngine:
                 "decode_tokens": self.decode_tokens,
                 "decode_s": self.decode_s,
                 "admit_s": self.admit_s,
+                "prefill_tokens": self.prefill_tokens,
+                "shared_block_hits": self.shared.hits,
                 "deferrals": self.deferrals}
 
     # ------------------------------------------------------------------
@@ -448,6 +522,26 @@ class ContinuousBatchingEngine:
             firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return firsts, new_caches
 
+    def _chunk_impl(self, params, toks, caches, seq, start,
+                    temps, topks, seeds, sampled):
+        """One chunked-prefill device call: run chunk ``toks`` [1, C] of
+        sequence ``seq`` at absolute positions ``start..start+C-1``,
+        pasting its KV straight into the sequence's paged blocks
+        (``write_prefill_chunk``) and attending against the paged prefix
+        written by earlier chunks.  Returns the sampled/argmax token off
+        the chunk's last logit — callers keep only the final chunk's
+        (token index 0 for the sampling key, matching the fused bucket
+        admission) — plus the updated caches."""
+        out = T.prefill_paged_chunk(params, self.cfg, toks, caches, seq,
+                                    start, self.plan, self.tp)
+        logits = out.logits[:, -1]
+        if sampled:
+            firsts = sample_logits(logits, temps, topks, seeds,
+                                   jnp.zeros_like(seeds))
+        else:
+            firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return firsts, out.cache
+
     def _push_tables(self) -> None:
         tbl = jnp.asarray(self.table)
         lens = jnp.asarray(self.lengths)
@@ -466,14 +560,26 @@ class ContinuousBatchingEngine:
 
     def _admit(self) -> List[Request]:
         admits: List[tuple] = []
+        completed: List[Request] = []
         for i in range(self.max_slots):
             if not self.queue:
                 break
             if self.slots[i] is not None:
                 continue
             req = self.queue[0]
-            need = [int((self.table[j] >= 0).sum())
-                    for j in range(self.max_slots)]
+            if req.prompt.shape[0] > self.prompt_len:
+                # over-bucket prompt: chunked paged prefill, one fused
+                # chunk call at a time (shares prefix blocks when the
+                # content-hash index has them live)
+                res = self._admit_chunked(i, req)
+                if res is _DEFER:
+                    self.deferrals += 1
+                    break
+                self.queue.pop(0)
+                if res is not None:
+                    completed.append(res)
+                continue
+            need = self._held_blocks()
             need[i] = -(-(self.prompt_len + req.max_new) // self.block_size)
             try:
                 self.table = paging.plan_blocks(self.table, self.alloc, need)
@@ -482,7 +588,7 @@ class ContinuousBatchingEngine:
                 break
             admits.append((i, self.queue.pop(0)))
         if not admits:
-            return []
+            return completed
         self._push_tables()                # freed + freshly-planned rows
         self._dirty = False
         # every admission this round rides one fused prefill+paste call;
@@ -510,13 +616,16 @@ class ContinuousBatchingEngine:
             any_sampled)
         firsts = np.asarray(firsts)
         self.admit_s += time.perf_counter() - t0
-        completed: List[Request] = []
         for i, req in admits:
             self.lengths[i] = self.prompt_len
             self._gen_counts[i] = 1
+            self.prefill_tokens += self.prompt_len
             tok = int(firsts[i])
-            self.total_tokens += 1
             if req.max_new >= 1:
+                # the admission token only counts when it is actually
+                # emitted: a max_new=0 request produces no tokens, and
+                # counting its prefill argmax inflated tokens/s
+                self.total_tokens += 1
                 self._emit(req.rid, tok)
             if req.max_new <= 1:       # done at admission (0 => empty,
                 completed.append(       # matching the windowed baseline)
@@ -527,6 +636,97 @@ class ContinuousBatchingEngine:
                                       sampled=not sp.greedy)
                 self.last[i, 0] = tok
         return completed
+
+    def _run_chunks(self, i: int, padded: np.ndarray, first_chunk: int,
+                    sp: SamplingParams) -> int:
+        """Drive the jitted chunk program over ``padded``'s chunks from
+        ``first_chunk`` on; returns the final chunk's sampled token."""
+        c = self.prefill_chunk
+        temps1 = jnp.asarray([sp.temperature], jnp.float32)
+        topks1 = jnp.asarray([sp.top_k], jnp.int32)
+        seeds1 = jnp.asarray([sp.seed], jnp.int32)
+        t0 = time.perf_counter()
+        firsts = None
+        for ci in range(first_chunk, padded.shape[0] // c):
+            firsts, self.caches = self._chunk_step(
+                self.params, jnp.asarray(padded[ci * c:(ci + 1) * c][None]),
+                self.caches, np.int32(i), np.int32(ci * c),
+                temps1, topks1, seeds1, not sp.greedy)
+        self.admit_s += time.perf_counter() - t0
+        self.prefill_tokens += padded.shape[0] - first_chunk * c
+        return int(np.asarray(firsts)[0])
+
+    def _admit_chunked(self, i: int, req: Request):
+        """Admit one over-bucket prompt into slot ``i`` via chunked
+        paged prefill.
+
+        The prompt is left-padded to a whole number of prefill chunks
+        (generalizing the bucket's left-pad), its full block budget
+        (padded prompt + max_new) reserved atomically, and each chunk
+        runs one fused prefill+paste call — the final chunk's is also
+        the admit+sample step, exactly like the bucket path.  Before
+        allocating, the content-hashed :class:`~repro.runtime.paging.
+        SharedBlockIndex` is consulted: a live identical prompt prefix
+        (whole chunks only — the final chunk always recomputes, its
+        last-token logits seed sampling) is reference-shared instead of
+        re-prefilled.  Returns the completed Request for ``max_new<=1``,
+        None when the request now occupies the slot, or ``_DEFER`` when
+        the pool cannot cover it yet (nothing leaks; retried later)."""
+        bs, c = self.block_size, self.prefill_chunk
+        s = int(req.prompt.shape[0])
+        length = -(-s // c) * c
+        padded = np.zeros(length, np.int32)
+        padded[length - s:] = req.prompt
+        n_prompt_blocks = length // bs
+        per_chunk = c // bs
+        digests = []
+        d = paging.SharedBlockIndex.ROOT
+        for b in range(n_prompt_blocks):
+            d = self.shared.chain(d, padded[b * bs:(b + 1) * bs])
+            digests.append(d)
+        hit = 0
+        for b in range(n_prompt_blocks - per_chunk):
+            if self.shared.lookup(digests[b]) is None:
+                break
+            hit = b + 1
+        shared_blocks = (hit // per_chunk) * per_chunk
+        acquired = [self.shared.acquire(digests[b])
+                    for b in range(shared_blocks)]
+        self.table[i, :shared_blocks] = acquired
+        need = self._held_blocks()
+        need[i] = -(-(length + req.max_new) // bs)
+        try:
+            self.table = paging.plan_blocks(self.table, self.alloc, need)
+        except OutOfBlocksError:
+            self.shared.release(acquired)   # refs only; owners keep blocks
+            self.shared.hits -= len(acquired)   # retry will re-count them
+            self.table[i, :shared_blocks] = -1
+            return _DEFER
+        self._push_tables()
+        self._dirty = False
+        sp = req.sampling or GREEDY
+        self._temps[i], self._topks[i] = sp.temperature, sp.top_k
+        self._seeds[i] = sp.seed
+        self._knobs_dev = (jnp.asarray(self._temps),
+                           jnp.asarray(self._topks),
+                           jnp.asarray(self._seeds))
+        tok = self._run_chunks(i, padded, shared_blocks * bs // c, sp)
+        # publish the freshly prefilled prompt blocks for future sharers
+        # (all are full, read-only blocks: decode appends start a new
+        # block because the padded length is block-aligned)
+        for b in range(shared_blocks, n_prompt_blocks):
+            self.shared.register(digests[b], int(self.table[i, b]))
+        self.lengths[i] = length
+        self._gen_counts[i] = 1
+        if req.max_new >= 1:
+            self.total_tokens += 1
+            self._emit(req.rid, tok)
+        if req.max_new <= 1:
+            return self._finalize(i, req, [tok][:req.max_new])
+        self.slots[i] = _Slot(req, [tok], req.max_new - 1,
+                              sampled=not sp.greedy)
+        self.last[i, 0] = tok
+        return None
 
     def _decode_once(self) -> List[Request]:
         active = [i for i, s in enumerate(self.slots) if s is not None]
@@ -569,8 +769,285 @@ class ContinuousBatchingEngine:
     def _finalize(self, i: int, req: Request, gen: List[int]) -> Request:
         req.output = np.asarray(gen, np.int32)
         self.done[req.rid] = req
-        self.alloc.release(self.table[i][self.table[i] >= 0])
+        # shared prompt blocks are refcounted by the content-hash index
+        # (freed with their last referencing sequence); the rest of the
+        # row goes straight back to the allocator
+        self.alloc.release(
+            self.shared.release(self.table[i][self.table[i] >= 0]))
         self.table[i] = -1
         self.lengths[i] = 0
         self._dirty = True        # device sees the freed row at next push
         return req
+
+    # ------------------------------------------------------------------
+    # co-processing handoff (prefill-class <-> decode-class engines)
+    # ------------------------------------------------------------------
+    def prefill_handoff(self, req: Request) -> "PrefillHandoff":
+        """Run ``req``'s prompt through chunked paged prefill on THIS
+        engine and export the block-level KV for a peer decode engine —
+        the MPAI DPU->VPU handoff.  The prompt is left-padded to the
+        engine's bucket/chunk grid exactly like a unified admission, the
+        final chunk samples the first output token (under this engine's
+        precision plan — the prefill stage owns it), and the filled
+        blocks are gathered out and freed before returning: the handoff
+        carries KV *content*; the importer re-blocks it into its own
+        mirrored pool.  Raises :class:`OutOfBlocksError` when the prompt
+        cannot be covered right now (atomic — callers defer and retry)."""
+        _require_prompt(req, "engine")
+        bs, c = self.block_size, self.prefill_chunk
+        length = -(-max(int(req.prompt.shape[0]), self.prompt_len) // c) * c
+        free = [j for j, sl in enumerate(self.slots) if sl is None]
+        if not free:
+            raise OutOfBlocksError("prefill engine has no free slot")
+        i = free[0]
+        padded = np.zeros(length, np.int32)
+        padded[length - req.prompt.shape[0]:] = req.prompt
+        need = self._held_blocks()
+        need[i] = length // bs            # prompt only: no decode budget
+        self.table = paging.plan_blocks(self.table, self.alloc, need)
+        self._push_tables()
+        self._dirty = False
+        sp = req.sampling or GREEDY
+        tok = self._run_chunks(i, padded, 0, sp)
+        if req.max_new >= 1:
+            self.total_tokens += 1
+            self._emit(req.rid, tok)
+        rows = self.table[i][:length // bs].copy()
+        kv = _gather_block_rows(self.caches, jnp.asarray(rows))
+        self.alloc.release(self.shared.release(rows))
+        self.table[i] = -1
+        self.lengths[i] = 0
+        self._dirty = True
+        return PrefillHandoff(req.rid, tok, length, self.block_size, kv)
+
+    def import_prefill(self, req: Request,
+                       handoff: "PrefillHandoff") -> Optional[Request]:
+        """Admit a request whose prompt KV a co-processing peer already
+        prefilled: reserve the full block budget, paste the handed-off
+        blocks into this engine's mirrored pool, and resume at decode
+        with the peer's first sampled token (emitted there — importing
+        never double-counts or double-streams it).  Returns the
+        completed Request for ``max_new<=1``, else None; raises
+        :class:`OutOfBlocksError` when blocks are short (callers defer)."""
+        assert handoff.block_size == self.block_size, \
+            (f"mirrored pools must share block geometry: handoff wrote "
+             f"{handoff.block_size}-token blocks, this pool holds "
+             f"{self.block_size}-token blocks")
+        free = [j for j, sl in enumerate(self.slots) if sl is None]
+        if not free:
+            raise OutOfBlocksError("decode engine has no free slot")
+        i = free[0]
+        bs, length = self.block_size, handoff.length
+        assert length + req.max_new <= self.table_width * bs, \
+            (req.rid, length, req.max_new, self.max_len)
+        need = self._held_blocks()
+        need[i] = -(-(length + req.max_new) // bs)
+        self.table = paging.plan_blocks(self.table, self.alloc, need)
+        rows = self.table[i][:length // bs]
+        self.caches = _paste_block_rows(self.caches, handoff.kv,
+                                        jnp.asarray(rows))
+        self.lengths[i] = length
+        self._gen_counts[i] = 1
+        self._dirty = True                # table + lengths push next step
+        sp = req.sampling or GREEDY
+        self._temps[i], self._topks[i] = sp.temperature, sp.top_k
+        self._seeds[i] = sp.seed
+        self._knobs_dev = (jnp.asarray(self._temps),
+                           jnp.asarray(self._topks),
+                           jnp.asarray(self._seeds))
+        tok = handoff.first_token
+        if req.max_new <= 1:
+            return self._finalize(i, req, [tok][:req.max_new])
+        self.slots[i] = _Slot(req, [tok], req.max_new - 1,
+                              sampled=not sp.greedy)
+        self.last[i, 0] = tok
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Prefill/decode disaggregation (MPAI co-processing)
+# ---------------------------------------------------------------------------
+@dataclass
+class PrefillHandoff:
+    """One prefilled prompt crossing the co-processing seam.
+
+    Produced by :meth:`ContinuousBatchingEngine.prefill_handoff` on the
+    prefill-class engine, consumed by
+    :meth:`ContinuousBatchingEngine.import_prefill` on the decode-class
+    engine.  Carries the first sampled token (the prefill stage owns
+    admission sampling), the padded prompt length, and the block-level
+    KV per sublayer — ``kv[key] = (k, v)`` with shape
+    ``[n_super, n_blocks, P, KVp, hd]`` — in the shared block geometry
+    both mirrored pools were built with.
+    """
+    rid: int
+    first_token: int
+    length: int                        # padded prompt length (tokens)
+    block_size: int
+    kv: Dict[str, tuple]
+
+
+class CoProcServer:
+    """Disaggregated serving: a prefill-class engine feeding a
+    decode-class engine over mirrored paged pools.
+
+    The MPAI co-processing split as a server: stage 1 (the DPU
+    analogue — typically a cheap/int8 precision plan) runs chunked
+    paged prefill and samples the first token; stage 2 (the VPU
+    analogue) imports the filled blocks into its own pool and decodes.
+    Each stage is a full :class:`ContinuousBatchingEngine` with its own
+    allocator, so backpressure is per-stage: a prefill-pool shortage
+    defers the handoff without touching decode blocks, and vice versa.
+    A prefilled-but-unplaced request parks at the seam (its prefill
+    compute is never repeated) until a decode slot + blocks free up.
+
+    Exposes the same ``submit`` / ``step`` / ``flush`` / ``done`` /
+    ``stats`` API as the engines, so
+    :class:`~repro.serving.executor.EngineExecutor` drives it
+    unchanged; per-stage counters (``prefill_tokens`` / ``admit_s`` on
+    the prefill engine, decode counters on the decode engine) let the
+    executor charge each stage to its own pool telemetry.
+    """
+
+    def __init__(self, prefill_engine: ContinuousBatchingEngine,
+                 decode_engine: ContinuousBatchingEngine):
+        assert prefill_engine.block_size == decode_engine.block_size, \
+            "mirrored pools must share block geometry"
+        self.prefill = prefill_engine
+        self.decode = decode_engine
+        self.max_len = decode_engine.max_len
+        self.prompt_len = decode_engine.prompt_len
+        self.queue: List[Request] = []
+        self._parked: Optional[tuple] = None   # (req, handoff) at the seam
+        self.handoff_count = 0
+        self._seam_deferrals = 0
+        self._on_token: Optional[Callable[[int, int], None]] = None
+
+    # --- token relay: both stages emit through one hook ---------------
+    @property
+    def on_token(self):
+        return self._on_token
+
+    @on_token.setter
+    def on_token(self, fn) -> None:
+        self._on_token = fn
+        self.prefill.on_token = fn         # first token, at the handoff
+        self.decode.on_token = fn          # everything after
+
+    # --- mirrored engine API ------------------------------------------
+    @property
+    def done(self) -> Dict[int, Request]:
+        return self.decode.done
+
+    @property
+    def pending(self) -> int:
+        return (len(self.queue) + (self._parked is not None)
+                + self.decode.pending)
+
+    @property
+    def occupancy(self) -> float:
+        return self.decode.occupancy
+
+    @property
+    def decode_steps(self) -> int:
+        return self.decode.decode_steps
+
+    @property
+    def decode_tokens(self) -> int:
+        return self.decode.decode_tokens
+
+    @property
+    def decode_s(self) -> float:
+        return self.decode.decode_s
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill.total_tokens + self.decode.total_tokens
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self.prefill.prefill_tokens
+
+    @property
+    def admit_s(self) -> float:
+        return self.prefill.admit_s
+
+    @property
+    def deferrals(self) -> int:
+        return (self.prefill.deferrals + self.decode.deferrals
+                + self._seam_deferrals)
+
+    def padded_prompt_len(self, s: int) -> int:
+        # the prefill-class engine's chunk grid decides the padded
+        # length crossing the seam (its chunks may be wider than the
+        # decode engine's bucket — the DPU-analogue is a *wide* engine)
+        c = self.prefill.prefill_chunk
+        return -(-max(s, self.prefill.prompt_len) // c) * c
+
+    def submit(self, req: Request) -> None:
+        _require_prompt(req, "engine")
+        padded = self.padded_prompt_len(int(req.prompt.shape[0]))
+        assert padded + req.max_new <= self.decode.table_width \
+            * self.decode.block_size, \
+            (req.rid, req.prompt.shape[0], req.max_new, self.max_len)
+        self.queue.append(req)
+
+    def step(self) -> List[Request]:
+        """Move work across the handoff seam, then run one decode step.
+
+        Per step: prefill queued requests (stage 1) and import them into
+        decode slots (stage 2) while blocks and slots allow; a stage
+        hitting backpressure parks the request without losing the other
+        stage's progress, and exactly-once token delivery holds across
+        the seam (the first token streams from the prefill stage, the
+        decode stage resumes at token index 1)."""
+        completed: List[Request] = []
+        while True:
+            if self._parked is None:
+                if not self.queue:
+                    break
+                try:
+                    ho = self.prefill.prefill_handoff(self.queue[0])
+                    self._parked = (self.queue.pop(0), ho)
+                except OutOfBlocksError:
+                    self._seam_deferrals += 1
+                    break
+            req, ho = self._parked
+            try:
+                done = self.decode.import_prefill(req, ho)
+            except OutOfBlocksError:
+                self._seam_deferrals += 1
+                break
+            self._parked = None
+            self.handoff_count += 1
+            if done is not None:
+                completed.append(done)
+        completed += self.decode.step()
+        return completed
+
+    def flush(self) -> List[Request]:
+        """Blocking form: run until at least one request completes."""
+        if not self.pending:
+            return []
+        while True:
+            done = self.step()
+            if done:
+                return done
+
+    def stats(self) -> Dict[str, float]:
+        d = self.decode.stats()
+        p = self.prefill.stats()
+        d["total_tokens"] = self.total_tokens
+        d["prefill_tokens"] = p["prefill_tokens"]
+        d["admit_s"] = p["admit_s"]            # prefill stage wall time
+        d["shared_block_hits"] = (p["shared_block_hits"]
+                                  + d["shared_block_hits"])
+        d["deferrals"] = self.deferrals
+        d["handoffs"] = self.handoff_count
+        return d
+
+    def reset_stats(self) -> None:
+        self.prefill.reset_stats()
+        self.decode.reset_stats()
+        self._seam_deferrals = 0
+        self.handoff_count = 0

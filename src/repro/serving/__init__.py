@@ -50,11 +50,11 @@ from repro.serving.client import Response, ResponseHandle, ServingClient
 from repro.serving.executor import EngineExecutor, LMWork
 from repro.serving.spec import (DEFAULT_SLOS, FaultSpec, FleetSpec,
                                 PoolSpec, build_pool, make_server)
-from repro.serving.traffic import open_loop, poisson_arrivals
+from repro.serving.traffic import TrafficTrace, open_loop, poisson_arrivals
 
 __all__ = [
     "DEFAULT_SLOS", "EngineExecutor", "FaultSpec", "FleetSpec", "GREEDY",
     "LMWork", "PoolSpec", "Response", "ResponseHandle", "SLOClass",
-    "SLO_CLASSES", "SamplingParams", "ServingClient", "build_pool",
-    "make_server", "open_loop", "poisson_arrivals",
+    "SLO_CLASSES", "SamplingParams", "ServingClient", "TrafficTrace",
+    "build_pool", "make_server", "open_loop", "poisson_arrivals",
 ]

@@ -140,6 +140,12 @@ class ResponseHandle:
             "rid": r.rid,
             "admitted": self.admitted,
             "pool": r.pool,
+            # the co-processing split, per request: a disaggregated pool
+            # stamps which stage pool prefilled the prompt; the routed
+            # pool itself runs decode (they coincide on unified pools)
+            "prefill_pool": (getattr(self._work, "prefill_pool", None)
+                             if self._work is not None else None),
+            "decode_pool": r.pool,
             "dropped": r.dropped,
             "violated": r.violated,
             "rerouted": r.rerouted,
@@ -212,6 +218,16 @@ class ServingClient:
         elif prompt is not None:
             work = LMWork(np.asarray(prompt, np.int32), max_new=max_new,
                           sampling=sampling)
+        if work is not None and work.prompt.shape[0] == 0:
+            # fail fast with an actionable error, mirroring the
+            # oversized-max_new check below: a zero-length prompt used
+            # to slip into a pool's batch and crash it mid-admission
+            # (the -0 slice selects the whole row), taking the already-
+            # batched neighbors down with it
+            raise ValueError(
+                "empty prompt: LM serving needs at least one prompt "
+                "token to prefill; submit prompt=None to route a "
+                "cost-model (vision) request instead")
         if work is not None and work.max_new is not None and self.engines:
             # fail fast with an actionable error instead of counting the
             # request admitted and crashing inside a pool's batch.  The
@@ -226,6 +242,32 @@ class ServingClient:
                     f"pool's budget ({budget}), and dispatch does not "
                     f"route by max_new; raise PoolSpec.max_new — it "
                     f"sizes the per-request KV allocation")
+        if work is not None and self.engines:
+            # same fast-fail for prompts: dispatch is payload-blind, so
+            # the (padded) prompt plus requested max_new must fit EVERY
+            # LM pool's KV table — each pool's own chunk grid decides
+            # the padding, so ask the servers rather than guessing.
+            # (max_new=None resolves to the pool default, which sizes
+            # max_len by construction and can never overflow.)
+            s = int(work.prompt.shape[0])
+            mn = max(work.max_new or 1, 1)
+            for name, e in self.engines.items():
+                pad_fn = getattr(e, "padded_prompt_len", None)
+                if pad_fn is None and s > e.prompt_len:   # windowed pool
+                    raise ValueError(
+                        f"prompt of {s} tokens exceeds pool {name!r}'s "
+                        f"windowed prompt_len bucket of {e.prompt_len}; "
+                        f"use an engine pool (chunked paged prefill "
+                        f"lifts the bucket limit)")
+                padded = e.prompt_len if pad_fn is None else pad_fn(s)
+                if padded + mn > e.max_len:
+                    raise ValueError(
+                        f"prompt of {s} tokens ({padded} padded) + "
+                        f"max_new={mn} cannot fit pool {name!r}'s "
+                        f"context of {e.max_len}; raise "
+                        f"PoolSpec.max_prompt_len (chunked paged "
+                        f"prefill sizes the KV table, not a compiled "
+                        f"shape) or shrink the request")
         rreq = RouterRequest(rid, self.resolve_slo(slo),
                              self.now if arrival is None else arrival,
                              payload=work)
@@ -306,6 +348,10 @@ class ServingClient:
         if ex is not None:
             ex.on_token = self._on_token
         self.router.add_pool(pool)
+        if ex is not None and ex.prefill_counters is not None:
+            # bind back: a reused stage name continues its history
+            ex.prefill_counters = self.router.register_stage_pool(
+                ex.prefill_pool, ex.prefill_counters)
         if engine is not None:
             self.engines[pool_spec.name] = engine
         self.router.telemetry.pools_added += 1

@@ -41,6 +41,9 @@ class LMWork:
     max_new: Optional[int] = None        # None -> the pool's default
     sampling: Optional[SamplingParams] = None
     output: Optional[np.ndarray] = None
+    # disaggregated pools stamp which stage pool prefilled the prompt
+    # (None on unified pools; the routed pool itself decodes either way)
+    prefill_pool: Optional[str] = None
 
 
 class EngineExecutor:
@@ -59,11 +62,22 @@ class EngineExecutor:
 
     def __init__(self, server, max_new: int = 8,
                  counters: Optional[PoolCounters] = None,
-                 on_token: Optional[Callable[[int, int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int, int], None]] = None,
+                 prefill_pool: Optional[str] = None,
+                 prefill_counters: Optional[PoolCounters] = None,
+                 prefill_energy_scale: float = 0.5):
         self.server = server
         self.max_new = max_new
         self.counters = counters
         self.on_token = on_token             # (rid, token, engine_step)
+        # disaggregated (CoProcServer) pools: the prefill stage's own
+        # telemetry identity — its counters are charged here (tokens
+        # prefilled, stage wall time, energy at the DPU-analogue's
+        # discounted per-token rate) and registered with the router so
+        # the fleet snapshot and orbit energy bucket see both stages
+        self.prefill_pool = prefill_pool
+        self.prefill_counters = prefill_counters
+        self.prefill_energy_scale = prefill_energy_scale
         if hasattr(server, "on_token"):
             server.on_token = self._relay
 
@@ -71,22 +85,19 @@ class EngineExecutor:
         if self.on_token is not None:
             self.on_token(rid, tok, getattr(self.server, "decode_steps", 0))
 
-    def _stats(self) -> Tuple[int, float, int]:
+    def _stats(self) -> Tuple[int, float, int, int, float]:
         s = self.server
         return (getattr(s, "decode_tokens", 0),
                 getattr(s, "decode_s", 0.0),
-                getattr(s, "deferrals", 0))
-
-    @property
-    def max_new_budget(self) -> int:
-        """Largest per-request ``max_new`` this server can honor."""
-        return self.server.max_len - self.server.prompt_len
+                getattr(s, "deferrals", 0),
+                getattr(s, "prefill_tokens", 0),
+                getattr(s, "admit_s", 0.0))
 
     def run(self, plan: ScheduledPlan,
             requests: Sequence[RouterRequest]) -> Tuple[float, float]:
         from repro.runtime.serve import Request as ServeRequest
         t0 = time.perf_counter()
-        tok0, dec0, def0 = self._stats()
+        tok0, dec0, def0, pre0, adm0 = self._stats()
         want = {}
         for r in requests:
             work = (r.payload if isinstance(r.payload, LMWork)
@@ -99,12 +110,27 @@ class EngineExecutor:
                 work.output = self.server.done[r.rid].output
                 continue
             max_new = self.max_new if work.max_new is None else work.max_new
-            if max_new > self.max_new_budget:
+            pad_fn = getattr(self.server, "padded_prompt_len", None)
+            if pad_fn is None:             # windowed baseline: hard bucket
+                if work.prompt.shape[0] > self.server.prompt_len:
+                    raise ValueError(
+                        f"request {r.rid}: prompt of "
+                        f"{work.prompt.shape[0]} tokens exceeds this "
+                        f"windowed pool's prompt_len bucket of "
+                        f"{self.server.prompt_len}; route it to an "
+                        f"engine pool (chunked paged prefill lifts the "
+                        f"bucket limit)")
+                padded = self.server.prompt_len
+            else:
+                padded = pad_fn(int(work.prompt.shape[0]))
+            if padded + max_new > self.server.max_len:
                 raise ValueError(
-                    f"request {r.rid}: max_new={max_new} exceeds this "
-                    f"pool's budget of {self.max_new_budget} (PoolSpec "
-                    f"max_new sizes the KV allocation; raise it or "
-                    f"lower the request's max_new)")
+                    f"request {r.rid}: prompt ({work.prompt.shape[0]} "
+                    f"tokens, {padded} padded) + max_new={max_new} "
+                    f"exceeds this pool's max_len={self.server.max_len} "
+                    f"(PoolSpec max_prompt_len/max_new size the KV "
+                    f"allocation; raise them or shrink the request)")
+            work.prefill_pool = self.prefill_pool
             want[r.rid] = work
             self.server.submit(ServeRequest(r.rid, work.prompt,
                                             max_new=max_new,
@@ -116,13 +142,29 @@ class EngineExecutor:
                 self.counters.slot_occupancy.record(self.server.occupancy)
         for rid, work in want.items():
             work.output = self.server.done[rid].output
-        tok1, dec1, def1 = self._stats()
+        tok1, dec1, def1, pre1, adm1 = self._stats()
         if self.counters is not None:
             self.counters.tokens_generated += sum(
                 int(w.output.shape[0]) for w in want.values())
             self.counters.decode_tokens += tok1 - tok0
             self.counters.decode_s += dec1 - dec0
             self.counters.deferrals += def1 - def0
+            if self.prefill_counters is None:
+                self.counters.prefill_tokens += pre1 - pre0
+        if self.prefill_counters is not None:
+            # disaggregated pool: the prefill stage's share of this
+            # batch — prompt tokens pushed through the DPU-analogue
+            # engine, its wall time, and its energy at the discounted
+            # per-token rate — lands on ITS pool counters, never the
+            # decode pool's, so snapshots and the orbit bucket attribute
+            # each stage's joules to the hardware that spent them
+            pc = self.prefill_counters
+            pc.dispatched += len(want)
+            pc.completed += len(want)
+            pc.prefill_tokens += pre1 - pre0
+            pc.busy_s += adm1 - adm0
+            pc.energy_j += (plan.energy_j * self.prefill_energy_scale
+                            * (pre1 - pre0))
         # Energy scales with tokens actually decoded this batch (every
         # decode step is one forward pass priced at the plan's nominal
         # per-inference energy_j) — not with request count, which would

@@ -43,6 +43,20 @@ class PoolSpec:
         stacks paged decode cannot serve);
       * ``"windowed"`` — the legacy windowed baseline, kept for
         engine-vs-windowed benchmark comparisons.
+
+    ``max_prompt_len`` (engine pools) admits prompts beyond the
+    ``prompt_len`` bucket via chunked paged prefill — it sizes the KV
+    table, not a compiled shape, so only block budget bounds it.
+
+    ``prefill_backend="engine"`` disaggregates the pool into MPAI's
+    co-processing split: a prefill-class engine (the DPU analogue,
+    running ``prefill_plan`` — e.g. ``"mpai"`` for the int8 cost-model
+    plan) fills paged KV blocks and hands them to the decode-class
+    engine (the VPU analogue) over mirrored pools.  The fleet routes
+    one pool; telemetry and the orbit energy bucket see two —
+    ``<name>`` (decode) and ``<name>.prefill`` — each charged its own
+    stage (``prefill_energy_scale`` scales the plan's per-token energy
+    for the cheaper prefill engine).
     """
     name: str
     profiles: Tuple[str, ...]
@@ -58,17 +72,43 @@ class PoolSpec:
     num_blocks: Optional[int] = None     # None -> slots * ceil(max_len/block)
     plan: Optional[str] = None           # None/"bf16" | "mpai"
     plan_split: Optional[int] = None     # mpai split point override
+    max_prompt_len: Optional[int] = None  # None -> prompt_len bucket only
+    prefill_chunk: Optional[int] = None   # chunk width; None -> prompt_len
+    # prefill/decode disaggregation (engine backend only):
+    prefill_backend: Optional[str] = None     # None | "engine"
+    prefill_plan: Optional[str] = None        # None/"bf16" | "mpai"
+    prefill_energy_scale: float = 0.5         # DPU-vs-VPU per-token energy
 
     def __post_init__(self):
         if self.backend not in ("costmodel", "engine", "windowed"):
             raise ValueError(f"unknown pool backend {self.backend!r}")
+        if self.prefill_backend not in (None, "engine"):
+            raise ValueError(
+                f"unknown prefill backend {self.prefill_backend!r}")
+        if self.prefill_backend is not None and self.backend != "engine":
+            raise ValueError(
+                f"pool {self.name!r}: prefill_backend requires "
+                f"backend='engine' (got {self.backend!r})")
         self.profiles = tuple(self.profiles)
+
+    @property
+    def chunk(self) -> int:
+        """The prefill chunk grid (block-aligned; prompts pad to it)."""
+        if self.prefill_chunk is not None:
+            return self.prefill_chunk
+        return max(self.block_size,
+                   self.prompt_len // self.block_size * self.block_size)
 
     @property
     def max_len(self) -> int:
         # +2 floor keeps one decode step available for jit warm-up even
-        # for max_new=1 pools
-        return self.prompt_len + max(self.max_new, 2)
+        # for max_new=1 pools.  max_prompt_len is a guarantee, not a
+        # cap: it rounds UP to the chunk grid, so every prompt up to it
+        # (and its grid remainder) actually fits the KV table
+        prompt = self.prompt_len
+        if self.max_prompt_len is not None and self.max_prompt_len > prompt:
+            prompt = -(-self.max_prompt_len // self.chunk) * self.chunk
+        return prompt + max(self.max_new, 2)
 
     def to_dict(self) -> Dict:
         d = asdict(self)
@@ -210,6 +250,11 @@ class FleetSpec:
                         accuracy_penalty=self.accuracy_penalty or None,
                         cut_candidates=self.cut_candidates,
                         latency_headroom=self.latency_headroom)
+        for ex in executors:
+            if getattr(ex, "prefill_counters", None) is not None:
+                # bind back: a reused stage name continues its history
+                ex.prefill_counters = router.register_stage_pool(
+                    ex.prefill_pool, ex.prefill_counters)
         injector = PoolFaultInjector([
             PoolFault(f.pool, at_s=f.at_s, duration_s=f.duration_s,
                       lost_profiles=f.lost_profiles) for f in self.faults])
@@ -234,6 +279,7 @@ def build_pool(ps: PoolSpec, layers, model=None, warm: bool = True):
     backends decode with.
     """
     from repro.router import AcceleratorPool, CostModelExecutor
+    from repro.router.telemetry import PoolCounters
     from repro.serving.executor import EngineExecutor
 
     engine = engine_ex = None
@@ -247,7 +293,15 @@ def build_pool(ps: PoolSpec, layers, model=None, warm: bool = True):
                 f"or include an engine pool in the original FleetSpec")
         cfg, params = model
         engine = make_server(cfg, params, ps, warm=warm)
-        ex = engine_ex = EngineExecutor(engine, max_new=ps.max_new)
+        kw = {}
+        if ps.prefill_backend is not None:
+            # disaggregated pool: the prefill stage gets its own named
+            # counters so dispatch/energy telemetry charges each stage
+            # to its own pool (registered with the router by the caller)
+            kw = dict(prefill_pool=f"{ps.name}.prefill",
+                      prefill_counters=PoolCounters(),
+                      prefill_energy_scale=ps.prefill_energy_scale)
+        ex = engine_ex = EngineExecutor(engine, max_new=ps.max_new, **kw)
     pool = AcceleratorPool(ps.name, ps.profiles, ex,
                            capacity=ps.capacity,
                            max_window=ps.max_window,
@@ -270,15 +324,32 @@ def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
     import numpy as np
 
     from repro.runtime.sampling import SamplingParams
-    from repro.runtime.serve import (ContinuousBatchingEngine, Request,
-                                     WindowedBaselineServer,
+    from repro.runtime.serve import (ContinuousBatchingEngine, CoProcServer,
+                                     Request, WindowedBaselineServer,
                                      engine_or_windowed)
-    plan = _resolve_plan(spec, cfg)
-    if spec.backend == "engine":
+    plan = _resolve_plan(spec, cfg, spec.plan)
+    if spec.backend == "engine" and spec.prefill_backend == "engine":
+        # MPAI co-processing split: a prefill-class engine under its own
+        # (typically cheaper) precision plan fills paged blocks, the
+        # decode-class engine imports them over a mirrored pool.  The
+        # prefill worker is single-slot (the handoff is synchronous) and
+        # sized to one max-length prompt; disaggregation has no windowed
+        # fallback — stacks paged decode cannot serve cannot split either
+        prefill = ContinuousBatchingEngine(
+            params, cfg, plan=_resolve_plan(spec, cfg, spec.prefill_plan),
+            max_slots=1, prompt_len=spec.prompt_len, max_len=spec.max_len,
+            block_size=spec.block_size, prefill_chunk=spec.prefill_chunk)
+        decode = ContinuousBatchingEngine(
+            params, cfg, plan=plan, max_slots=spec.max_slots,
+            prompt_len=spec.prompt_len, max_len=spec.max_len,
+            block_size=spec.block_size, num_blocks=spec.num_blocks)
+        srv = CoProcServer(prefill, decode)
+    elif spec.backend == "engine":
         srv = engine_or_windowed(
             params, cfg, plan=plan, max_slots=spec.max_slots,
             prompt_len=spec.prompt_len, max_len=spec.max_len,
             block_size=spec.block_size, num_blocks=spec.num_blocks,
+            prefill_chunk=spec.prefill_chunk,
             on_fallback=lambda e: warnings.warn(
                 f"pool {spec.name!r}: paged decode unavailable ({e}); "
                 f"falling back to the windowed baseline"))
@@ -294,21 +365,30 @@ def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
         # compile time into the latency telemetry
         srv.submit(Request(-1, np.array([1, 2], np.int32), max_new=2))
         srv.flush()
-        if isinstance(srv, ContinuousBatchingEngine):
+        if isinstance(srv, (ContinuousBatchingEngine, CoProcServer)):
             srv.submit(Request(-2, np.array([1, 2], np.int32), max_new=2,
                                sampling=SamplingParams(temperature=1.0,
                                                        seed=0)))
+            srv.flush()
+        if (isinstance(srv, ContinuousBatchingEngine)
+                and spec.max_prompt_len is not None
+                and spec.max_prompt_len > spec.prompt_len
+                and srv.padded_prompt_len(spec.prompt_len + 1) + 2
+                <= srv.max_len):
+            # over-bucket pool: compile the chunked-prefill program too
+            srv.submit(Request(-3, np.arange(
+                1, spec.prompt_len + 2, dtype=np.int32), max_new=2))
             srv.flush()
         srv.reset_stats()
     return srv
 
 
-def _resolve_plan(spec: PoolSpec, cfg):
-    if spec.plan in (None, "bf16"):
+def _resolve_plan(spec: PoolSpec, cfg, name: Optional[str]):
+    if name in (None, "bf16"):
         return None
-    if spec.plan == "mpai":
+    if name == "mpai":
         from repro.core import qat
         from repro.core.partition import PartitionPlan
         kw = {} if spec.plan_split is None else {"split": spec.plan_split}
         return qat.serve_plan(PartitionPlan.mpai(cfg.num_layers, **kw))
-    raise ValueError(f"unknown pool plan {spec.plan!r}")
+    raise ValueError(f"unknown pool plan {name!r}")

@@ -9,11 +9,25 @@ reproduce the pre-facade traces exactly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.serving.client import ResponseHandle, ServingClient
+
+
+class TrafficTrace(List[ResponseHandle]):
+    """``open_loop``'s return value: a plain list of handles (fully
+    backward compatible) plus truncation markers.  A run that hits the
+    ``max_s`` safety net used to return normally with arrivals never
+    submitted and handles incomplete — benchmark traces silently
+    shrank; now ``truncated`` flags it (and a warning fires), and
+    ``unsubmitted``/``incomplete`` say what was lost, so ``--check``
+    gates can fail loudly instead of gating on a partial trace."""
+    truncated: bool = False
+    unsubmitted: int = 0                 # arrivals never submitted
+    incomplete: int = 0                  # submitted but unfinished handles
 
 
 def poisson_arrivals(classes: Sequence, weights: Sequence[float],
@@ -35,18 +49,20 @@ def open_loop(client: ServingClient, classes: Sequence,
               weights: Sequence[float], rate_hz: float, n_requests: int,
               seed: int = 0, dt: Optional[float] = None,
               payload_fn: Optional[Callable] = None,
-              max_s: float = 600.0) -> List[ResponseHandle]:
+              max_s: float = 600.0) -> TrafficTrace:
     """Drive Poisson open-loop traffic through the fleet until drained.
 
     ``payload_fn(rng)`` (optional) draws each request's payload: a token
     prompt array or a prebuilt :class:`~repro.serving.executor.LMWork`
     for LM pools; None routes cost-model requests.  Returns every
     request's handle (rejected submissions included — check
-    ``handle.admitted``).
+    ``handle.admitted``) as a :class:`TrafficTrace`; a run cut short by
+    the ``max_s`` safety net is marked ``truncated`` and warns, so
+    benchmark gates never silently score a shrunken trace.
     """
     arrivals = poisson_arrivals(classes, weights, rate_hz, n_requests,
                                 seed=seed, payload_fn=payload_fn)
-    handles: List[ResponseHandle] = []
+    handles = TrafficTrace()
     i = 0
     while i < len(arrivals) or client.outstanding or client.pending_faults:
         client.advance(dt)
@@ -56,5 +72,14 @@ def open_loop(client: ServingClient, classes: Sequence,
             i += 1
         client.pump()
         if client.now > max_s:          # safety net: never loop forever
+            handles.truncated = True
+            handles.unsubmitted = len(arrivals) - i
+            handles.incomplete = sum(1 for h in handles if not h.done)
+            warnings.warn(
+                f"open_loop truncated at the max_s={max_s}s safety net: "
+                f"{handles.unsubmitted} arrivals never submitted, "
+                f"{handles.incomplete} in-flight requests incomplete — "
+                f"metrics over this trace undercount the offered load",
+                RuntimeWarning, stacklevel=2)
             break
     return handles

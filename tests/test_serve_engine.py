@@ -258,3 +258,254 @@ def test_batching_server_shim_falls_back_for_non_pageable_stacks():
         srv = BatchingServer(params, hybrid, max_batch=2,
                              prompt_len=PROMPT_LEN, max_len=MAX_LEN)
     assert isinstance(srv, WindowedBaselineServer)
+
+
+# ---------------------------------------------------------------------------
+# accounting bugfixes
+# ---------------------------------------------------------------------------
+def test_max_new_zero_emits_no_tokens_and_counts_none(model):
+    """Regression: the admission token used to be counted into
+    total_tokens even for max_new=0 requests, whose token is never
+    emitted — inflating tokens/s."""
+    cfg, params = model
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2,
+                                   prompt_len=PROMPT_LEN, max_len=MAX_LEN,
+                                   block_size=BLOCK)
+    emitted = []
+    eng.on_token = lambda rid, tok: emitted.append((rid, tok))
+    eng.submit(Request(0, np.array([5, 6], np.int32), max_new=0))
+    done = eng.step()
+    assert [r.rid for r in done] == [0]
+    assert eng.done[0].output.shape == (0,)
+    assert eng.stats()["total_tokens"] == 0
+    assert emitted == []                 # counted tokens == emitted tokens
+    # a real request afterwards counts exactly its own tokens
+    eng.submit(Request(1, np.array([5, 6], np.int32), max_new=3))
+    _drain(eng)
+    assert eng.stats()["total_tokens"] == 3
+    assert [rid for rid, _ in emitted] == [1, 1, 1]
+
+
+def test_empty_prompt_rejected_at_submit(model):
+    cfg, params = model
+    eng = ContinuousBatchingEngine(params, cfg, max_slots=2,
+                                   prompt_len=PROMPT_LEN, max_len=MAX_LEN,
+                                   block_size=BLOCK)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(0, np.zeros((0,), np.int32), max_new=2))
+    srv = WindowedBaselineServer(params, cfg, max_batch=2,
+                                 prompt_len=PROMPT_LEN, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="empty prompt"):
+        srv.submit(Request(0, np.zeros((0,), np.int32), max_new=2))
+
+
+# ---------------------------------------------------------------------------
+# chunked paged prefill (prompts beyond the prompt_len bucket)
+# ---------------------------------------------------------------------------
+LONG_MAX_LEN = 48
+
+
+def _long_engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("prompt_len", PROMPT_LEN)
+    kw.setdefault("max_len", LONG_MAX_LEN)
+    kw.setdefault("block_size", BLOCK)
+    return ContinuousBatchingEngine(params, cfg, **kw)
+
+
+def test_chunked_prefill_matches_windowed_at_full_length(model):
+    """A prompt longer than the prompt_len bucket admits via chunked
+    paged prefill and decodes to exactly the tokens of a windowed
+    baseline whose bucket spans the whole (padded) prompt."""
+    cfg, params = model
+    prompt = np.random.default_rng(11).integers(0, 256, 21).astype(np.int32)
+    eng = _long_engine(model)
+    eng.submit(Request(0, prompt, max_new=6))
+    _drain(eng)
+    padded = eng.padded_prompt_len(21)          # 24 for chunk 8
+    ref = WindowedBaselineServer(params, cfg, max_batch=1,
+                                 prompt_len=padded, max_len=padded + 8)
+    ref.submit(Request(0, prompt, max_new=6))
+    ref.flush()
+    np.testing.assert_array_equal(eng.done[0].output, ref.done[0].output)
+    assert eng.alloc.available == eng.alloc.num_blocks
+
+
+def test_chunked_prefill_mixed_with_bucket_admissions(model):
+    """Long and short prompts share slots and decode batches; outputs
+    match their solo runs and every block recycles."""
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    reqs = [(0, rng.integers(0, 256, 30).astype(np.int32), 5),
+            (1, rng.integers(0, 256, 4).astype(np.int32), 3),
+            (2, rng.integers(0, 256, 17).astype(np.int32), 7)]
+    eng = _long_engine(model)
+    for rid, p, mn in reqs:
+        eng.submit(Request(rid, p, max_new=mn))
+    _drain(eng)
+    for rid, p, mn in reqs:
+        solo = _long_engine(model)
+        solo.submit(Request(rid, p, max_new=mn))
+        _drain(solo)
+        np.testing.assert_array_equal(eng.done[rid].output,
+                                      solo.done[rid].output)
+    assert eng.alloc.available == eng.alloc.num_blocks
+    assert (eng.table == -1).all()
+
+
+def test_chunked_prefill_defers_on_block_exhaustion(model):
+    """A pool sized for one long request serves them one at a time."""
+    cfg, params = model
+    prompt = np.random.default_rng(5).integers(0, 256, 20).astype(np.int32)
+    eng = _long_engine(model, max_slots=3,
+                       num_blocks=LONG_MAX_LEN // BLOCK)
+    for i in range(3):
+        eng.submit(Request(i, prompt, max_new=4))
+    done = _drain(eng)
+    assert len(done) == 3
+    assert eng.stats()["deferrals"] > 0
+    assert eng.alloc.available == eng.alloc.num_blocks
+
+
+def test_prompt_over_max_len_rejected(model):
+    eng = _long_engine(model)
+    with pytest.raises(AssertionError):
+        eng.submit(Request(0, np.arange(LONG_MAX_LEN + 1, dtype=np.int32),
+                           max_new=4))
+
+
+# ---------------------------------------------------------------------------
+# prefix-block sharing (content-hashed index)
+# ---------------------------------------------------------------------------
+def test_prefix_sharing_reuses_live_blocks_without_changing_outputs(model):
+    cfg, params = model
+    prompt = np.random.default_rng(6).integers(0, 256, 24).astype(np.int32)
+    eng = _long_engine(model)
+    eng.submit(Request(0, prompt, max_new=6))
+    eng.submit(Request(1, prompt, max_new=6))
+    eng.step()                       # both admitted into one round
+    st = eng.stats()
+    # the second request's chunks[:-1] (16 tokens = 4 blocks) came from
+    # the index, and only its final chunk was recomputed
+    assert st["shared_block_hits"] == 16 // BLOCK
+    assert st["prefill_tokens"] == 24 + 8
+    _drain(eng)
+    np.testing.assert_array_equal(eng.done[0].output, eng.done[1].output)
+    solo = _long_engine(model)
+    solo.submit(Request(9, prompt, max_new=6))
+    _drain(solo)
+    np.testing.assert_array_equal(eng.done[0].output, solo.done[9].output)
+    # refcounts drained: every block is back in the pool and the index
+    # holds nothing once the last sharer finished
+    assert eng.alloc.available == eng.alloc.num_blocks
+    assert eng.shared.release([]) == []
+
+
+def test_prefix_sharing_survives_first_owner_finishing_last(model):
+    """The owner releasing before the sharer must not free shared
+    blocks under the still-running request (refcount, not ownership)."""
+    cfg, params = model
+    prompt = np.random.default_rng(8).integers(0, 256, 24).astype(np.int32)
+    eng = _long_engine(model, max_slots=2)
+    eng.submit(Request(0, prompt, max_new=1))    # owner: done at admission
+    eng.submit(Request(1, prompt, max_new=8))    # sharer decodes on
+    _drain(eng)
+    solo = _long_engine(model, max_slots=2)
+    solo.submit(Request(1, prompt, max_new=8))
+    _drain(solo)
+    np.testing.assert_array_equal(eng.done[1].output, solo.done[1].output)
+    assert eng.alloc.available == eng.alloc.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# co-processing handoff (prefill-class -> decode-class engines)
+# ---------------------------------------------------------------------------
+def _coproc(model, prefill_chunk=None, decode_blocks=None):
+    from repro.runtime.serve import CoProcServer
+    cfg, params = model
+    pre = ContinuousBatchingEngine(params, cfg, max_slots=1,
+                                   prompt_len=PROMPT_LEN,
+                                   max_len=LONG_MAX_LEN, block_size=BLOCK,
+                                   prefill_chunk=prefill_chunk)
+    dec = ContinuousBatchingEngine(params, cfg, max_slots=2,
+                                   prompt_len=PROMPT_LEN,
+                                   max_len=LONG_MAX_LEN, block_size=BLOCK,
+                                   num_blocks=decode_blocks)
+    return CoProcServer(pre, dec)
+
+
+def test_coproc_outputs_match_unified_engine(model):
+    rng = np.random.default_rng(12)
+    reqs = [(0, rng.integers(0, 256, 20).astype(np.int32), 6),
+            (1, rng.integers(0, 256, 5).astype(np.int32), 3),
+            (2, rng.integers(0, 256, 33).astype(np.int32), 4)]
+    co = _coproc(model)
+    uni = _long_engine(model)
+    for srv in (co, uni):
+        for rid, p, mn in reqs:
+            srv.submit(Request(rid, p, max_new=mn))
+        while srv.pending:
+            srv.step()
+    for rid, _, mn in reqs:
+        assert co.done[rid].output.shape == (mn,)
+        np.testing.assert_array_equal(co.done[rid].output,
+                                      uni.done[rid].output)
+    assert co.stats()["handoffs"] == 3
+
+
+def test_coproc_streams_every_token_exactly_once(model):
+    """Exact stream completeness across the handoff: the prefill stage
+    emits token 0, the decode stage the rest — no loss, no dup."""
+    rng = np.random.default_rng(13)
+    co = _coproc(model)
+    emitted = []
+    co.on_token = lambda rid, tok: emitted.append((rid, tok))
+    reqs = [(i, rng.integers(0, 256, int(rng.integers(10, 30))
+                             ).astype(np.int32), int(rng.integers(1, 7)))
+            for i in range(4)]
+    for rid, p, mn in reqs:
+        co.submit(Request(rid, p, max_new=mn))
+    while co.pending:
+        co.step()
+    for rid, _, mn in reqs:
+        stream = [t for r, t in emitted if r == rid]
+        assert len(stream) == mn
+        np.testing.assert_array_equal(stream, co.done[rid].output)
+
+
+def test_coproc_wide_prefill_chunk_matches_narrow(model):
+    """The DPU-analogue's wide fused chunk is a pure scheduling choice:
+    per-block online softmax makes the math identical at any width."""
+    prompt = np.random.default_rng(14).integers(0, 256, 37).astype(np.int32)
+    wide = _coproc(model, prefill_chunk=40)
+    narrow = _coproc(model)
+    outs = {}
+    for name, srv in (("wide", wide), ("narrow", narrow)):
+        srv.submit(Request(0, prompt, max_new=5))
+        while srv.pending:
+            srv.step()
+        outs[name] = srv.done[0].output
+    # both pad to 40 tokens here (ceil(37/8)*8 == ceil(37/40)*40), so
+    # the streams must agree token for token
+    np.testing.assert_array_equal(outs["wide"], outs["narrow"])
+
+
+def test_coproc_seam_backpressure_defers_without_losing_work(model):
+    """A decode pool sized for one request at a time parks the prefilled
+    handoff at the seam instead of dropping or re-prefilling it."""
+    rng = np.random.default_rng(15)
+    co = _coproc(model, decode_blocks=LONG_MAX_LEN // BLOCK)
+    for i in range(3):
+        co.submit(Request(i, rng.integers(0, 256, 20).astype(np.int32),
+                          max_new=4))
+    pre_tokens_seen = set()
+    while co.pending:
+        co.step()
+        pre_tokens_seen.add(co.prefill.prefill_tokens)
+    assert len(co.done) == 3
+    assert co.stats()["deferrals"] > 0
+    # prefill ran exactly once per request (24 padded tokens each):
+    # deferral parks the handoff, it never burns the prefill again
+    assert co.prefill.prefill_tokens == 3 * 24
+    assert co.decode.alloc.available == co.decode.alloc.num_blocks

@@ -274,3 +274,161 @@ def test_open_loop_drains_and_returns_handles(model):
     assert snap["completed"] == snap["admitted"] == 8
     assert snap["pools"]["lm"]["tokens_generated"] == sum(
         len(h.tokens) for h in handles) > 0
+
+
+# ---------------------------------------------------------------------------
+# empty / oversized prompts fail fast at the front door
+# ---------------------------------------------------------------------------
+def test_empty_prompt_fails_fast_with_actionable_error(model):
+    client = lm_spec().build(model=model)
+    with pytest.raises(ValueError, match="empty prompt"):
+        client.submit(np.zeros((0,), np.int32), max_new=2)
+    # nothing was counted admitted and the fleet still serves
+    assert client.telemetry["admitted"] == 0
+    h = client.submit(prompts(1)[0], max_new=2)
+    assert h.result().tokens.shape == (2,)
+
+
+def test_oversized_prompt_fails_fast_with_actionable_error(model):
+    client = lm_spec().build(model=model)
+    with pytest.raises(ValueError, match="max_prompt_len"):
+        client.submit(np.arange(100, dtype=np.int32), max_new=2)
+
+
+# ---------------------------------------------------------------------------
+# chunked paged prefill + disaggregation through the facade
+# ---------------------------------------------------------------------------
+def test_long_prompt_admits_through_facade(model):
+    """max_prompt_len lifts the prompt_len bucket: a 3x-bucket prompt
+    streams through the same front door as any other request."""
+    client = lm_spec(max_prompt_len=4 * PROMPT_LEN).build(model=model)
+    prompt = np.random.default_rng(21).integers(
+        0, 256, 3 * PROMPT_LEN + 1).astype(np.int32)
+    h = client.submit(prompt, max_new=4)
+    assert list(h.stream()) == list(h.result().tokens)
+    assert len(h.tokens) == 4
+    t = h.telemetry
+    assert t["prefill_pool"] is None        # unified pool: no split
+    assert t["decode_pool"] == "lm"
+
+
+def _disagg_spec(**kw):
+    return lm_spec(max_prompt_len=4 * PROMPT_LEN,
+                   prefill_backend="engine", **kw)
+
+
+def test_disaggregated_pool_serves_and_stamps_stage_pools(model):
+    client = _disagg_spec().build(model=model)
+    rng = np.random.default_rng(22)
+    handles = [client.submit(rng.integers(0, 256, n).astype(np.int32),
+                             max_new=3)
+               for n in (5, 2 * PROMPT_LEN + 3, 3 * PROMPT_LEN)]
+    for h in handles:
+        r = h.result()
+        assert list(r.tokens) == h.tokens and len(h.tokens) == 3
+        assert h.telemetry["prefill_pool"] == "lm.prefill"
+        assert h.telemetry["decode_pool"] == "lm"
+
+
+def test_disaggregated_pool_charges_each_stage_separately(model):
+    client = _disagg_spec().build(model=model)
+    prompt = np.random.default_rng(23).integers(
+        0, 256, 2 * PROMPT_LEN).astype(np.int32)
+    client.submit(prompt, max_new=4).result()
+    pools = client.telemetry["pools"]
+    assert set(pools) == {"lm", "lm.prefill"}
+    pre, dec = pools["lm.prefill"], pools["lm"]
+    # prompt tokens + their energy land on the prefill stage's pool;
+    # decode tokens + theirs on the routed decode pool — no leakage
+    assert pre["prefill_tokens"] > 0 and pre["energy_j"] > 0
+    assert dec["prefill_tokens"] == 0
+    assert dec["decode_tokens"] == 3 and dec["energy_j"] > 0
+    assert pre["decode_tokens"] == 0
+    # fleet-level energy is the sum over both stages (summaries round
+    # to 4 decimals, so compare at that granularity)
+    assert client.telemetry["energy_j"] == pytest.approx(
+        pre["energy_j"] + dec["energy_j"], abs=2e-4)
+
+
+def test_disaggregated_outputs_match_unified_pool(model):
+    rng = np.random.default_rng(24)
+    ps = [rng.integers(0, 256, n).astype(np.int32)
+          for n in (4, PROMPT_LEN + 5, 3 * PROMPT_LEN)]
+    outs = {}
+    for kind, spec in (("unified",
+                        lm_spec(max_prompt_len=4 * PROMPT_LEN)),
+                       ("disagg", _disagg_spec())):
+        client = spec.build(model=model)
+        outs[kind] = [list(client.submit(p, max_new=4).result().tokens)
+                      for p in ps]
+    assert outs["unified"] == outs["disagg"]
+
+
+def test_pool_spec_round_trips_coproc_fields():
+    spec = _disagg_spec(prefill_plan="mpai", prefill_energy_scale=0.25,
+                        prefill_chunk=16)
+    restored = FleetSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert restored.to_dict() == spec.to_dict()
+    p = restored.pools[0]
+    assert (p.prefill_backend, p.prefill_plan, p.prefill_energy_scale,
+            p.prefill_chunk, p.max_prompt_len) == (
+        "engine", "mpai", 0.25, 16, 4 * PROMPT_LEN)
+
+
+def test_pool_spec_rejects_prefill_backend_without_engine():
+    with pytest.raises(ValueError, match="prefill_backend"):
+        PoolSpec("p", ("x",), backend="windowed",
+                 prefill_backend="engine")
+
+
+def test_disaggregated_int8_prefill_plan_completes_streams(model):
+    """The DPU-analogue running the int8 mpai plan: precision differs
+    from the decode stage by design, so tokens are not gated against
+    the unified pool — completeness and stage attribution are."""
+    client = _disagg_spec(prefill_plan="mpai").build(model=model)
+    rng = np.random.default_rng(25)
+    for n in (5, 2 * PROMPT_LEN + 3, 3 * PROMPT_LEN):
+        h = client.submit(rng.integers(0, 256, n).astype(np.int32),
+                          max_new=4)
+        r = h.result()
+        assert len(r.tokens) == 4 and list(r.tokens) == h.tokens
+        assert h.telemetry["prefill_pool"] == "lm.prefill"
+    assert client.telemetry["pools"]["lm.prefill"]["energy_j"] > 0
+
+
+def test_combined_prompt_and_max_new_overflow_fails_at_submit(model):
+    """A padded prompt + max_new that individually pass the bucket
+    checks but jointly overflow the KV table must fail at submit() —
+    not blow up mid-batch inside the pool and take already-batched
+    neighbors down with it."""
+    client = lm_spec(max_prompt_len=4 * PROMPT_LEN).build(model=model)
+    good = client.submit(prompts(1)[0], max_new=2)
+    # prompt pads to 32; 32 + max_new 8 > max_len 38 is fine, but
+    # 32 + 12 > 38 overflows even though 12 <= max_len - prompt_len
+    with pytest.raises(ValueError, match="cannot fit"):
+        client.submit(np.arange(1, 31, dtype=np.int32), max_new=12)
+    assert len(good.result().tokens) == 2      # neighbor unharmed
+
+
+def test_disaggregated_pool_retire_and_readd_continues_stage_history(
+        model):
+    """Retiring a disaggregated pool keeps both pools' counters as
+    history; re-adding the same name splices onto them (cumulative
+    energy stays monotone for the orbit bucket) instead of failing
+    mid-mutation."""
+    spec = _disagg_spec()
+    spec.pools.append(PoolSpec("spare", ("tpu_v5e_bf16",),
+                               backend="engine", max_slots=2,
+                               prompt_len=PROMPT_LEN, max_new=MAX_NEW))
+    client = spec.build(model=model)
+    p = prompts(1, seed=30)[0]
+    client.submit(p, max_new=3).result()
+    e0 = client.telemetry["pools"]["lm.prefill"]["energy_j"]
+    assert e0 > 0
+    client.retire_pool("lm")
+    client.step()              # drained pool is removed on a later step
+    assert "lm" not in client.router.pools
+    client.add_pool(spec.pools[0])               # same name, same stage
+    client.submit(p, max_new=3).result()
+    e1 = client.telemetry["pools"]["lm.prefill"]["energy_j"]
+    assert e1 > e0                               # history continued

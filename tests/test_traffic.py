@@ -94,3 +94,33 @@ def test_open_loop_returns_rejected_handles_too():
     assert len(handles) == 5
     assert all(h.done and not h.admitted for h in handles)
     assert client.telemetry["rejected"] == 5
+
+
+def test_open_loop_marks_truncated_runs_and_warns():
+    """The max_s safety net used to break out silently with arrivals
+    never submitted and handles incomplete — traces shrank without a
+    trace.  Now the returned TrafficTrace flags it and a warning fires."""
+    from repro.serving.traffic import TrafficTrace
+
+    client = vision_fleet_spec().build()
+    classes = [SLO_CLASSES[n] for n in MIX_CLASSES]
+    # arrivals spread over ~10s of virtual time, hard-capped at 0.1s:
+    # most of the trace can never be submitted
+    with pytest.warns(RuntimeWarning, match="open_loop truncated"):
+        trace = open_loop(client, classes, MIX_WEIGHTS, rate_hz=5.0,
+                          n_requests=50, seed=0, max_s=0.1)
+    assert isinstance(trace, TrafficTrace)
+    assert trace.truncated
+    assert trace.unsubmitted > 0
+    assert len(trace) + trace.unsubmitted == 50
+    assert trace.incomplete == sum(1 for h in trace if not h.done)
+
+
+def test_open_loop_full_run_is_not_truncated():
+    client = vision_fleet_spec().build()
+    classes = [SLO_CLASSES[n] for n in MIX_CLASSES]
+    trace = open_loop(client, classes, MIX_WEIGHTS, rate_hz=200.0,
+                      n_requests=20, seed=0)
+    assert not trace.truncated
+    assert trace.unsubmitted == 0 and trace.incomplete == 0
+    assert len(trace) == 20
