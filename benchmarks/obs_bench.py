@@ -1,0 +1,198 @@
+"""Flight-recorder overhead benchmark: tracing on vs off.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench [--smoke] [--check] \
+        [--out BENCH_obs.json] [--trace-out trace.json] [--spans-out s.jsonl]
+
+One scenario, ``obs_overhead``: the same engine-backed fleet serves the
+same seeded workload twice — flight recorder off and on — interleaved
+best-of-N on a process-CPU basis (the same noise policy as
+``decode_bench`` / ``coproc_bench``).  The traced arm records the full
+span chain of every request (root request span, queue, serve, engine
+admit/decode-step lane spans) plus the per-tick fleet time-series;
+overhead is ``1 - on_tokens_per_s / off_tokens_per_s``.
+
+Under ``--check`` the run fails when:
+
+  * overhead exceeds ``--max-overhead`` (default 3% — the recorder must
+    be cheap enough to leave on in flight);
+  * the untraced arm recorded any span at all (tracing-off must be
+    zero-record, not just cheap);
+  * any traced request's span chain is left open or unterminated (the
+    no-orphan invariant), or the outcome tally disagrees with the
+    admission count;
+  * the exported Chrome trace contains a malformed event.
+
+With ``--trace-out`` / ``--spans-out`` the traced arm's Chrome
+``trace_event`` JSON and span JSONL are written as artifacts (CI uploads
+them next to ``BENCH_obs.json``); the Chrome file opens directly in
+Perfetto / ``chrome://tracing``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+PROMPT_LEN = 8
+MAX_NEW = 8
+BLOCK = 8
+
+
+def _tiny_lm():
+    from repro.configs.base import ModelConfig
+    return ModelConfig(name="tiny-mha", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                       vocab_size=256, remat=False)
+
+
+def _model():
+    import jax
+
+    from repro.models import transformer as T
+    cfg = _tiny_lm()
+    return cfg, T.model_init(jax.random.PRNGKey(0), cfg)
+
+
+def _fleet(slots: int):
+    from repro.serving import FleetSpec, PoolSpec
+    return FleetSpec(
+        pools=[PoolSpec("lm", ("tpu_v5e_bf16",), backend="engine",
+                        capacity=1, max_window=slots, max_wait_s=0.0,
+                        max_slots=slots, prompt_len=PROMPT_LEN,
+                        max_new=MAX_NEW, block_size=BLOCK)],
+        workload="transformer", seq_len=PROMPT_LEN)
+
+
+def _serve_once(client, n_requests: int, seed: int):
+    """One timed pass: submit ``n_requests`` seeded prompts, drain, and
+    return (tokens_per_cpu_s, tokens)."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 256, int(rng.integers(2, PROMPT_LEN + 1)))
+               .astype(np.int32) for _ in range(n_requests)]
+    c0 = time.process_time()
+    handles = [client.submit(p, slo="offline", max_new=MAX_NEW)
+               for p in prompts]
+    client.drain()
+    cpu = time.process_time() - c0
+    toks = sum(len(h.tokens) for h in handles)
+    return toks / max(cpu, 1e-9), toks
+
+
+def _validate_chrome(trace: dict) -> int:
+    """Minimal trace_event validity: every event carries the keys its
+    phase requires; returns the event count."""
+    evs = trace["traceEvents"]
+    for ev in evs:
+        assert {"ph", "pid", "tid", "name"} <= set(ev), ev
+        if ev["ph"] != "M":
+            assert "ts" in ev, ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0, ev
+    return len(evs)
+
+
+def run_overhead(n_requests: int = 24, repeats: int = 5, slots: int = 4,
+                 seed: int = 0, check: bool = False,
+                 max_overhead: float = 0.03, trace_out: str | None = None,
+                 spans_out: str | None = None) -> dict:
+    cfg, params = _model()
+    clients = {}
+    for kind in ("off", "on"):
+        clients[kind] = _fleet(slots).build(model=(cfg, params))
+        if kind == "on":
+            clients[kind].enable_tracing()
+    best = {"off": 0.0, "on": 0.0}
+    # interleave the repeats so co-tenant drift on a shared box hits
+    # both arms alike (best-of-N per arm, process-CPU basis)
+    for rep in range(repeats):
+        for kind, client in clients.items():
+            tps, _ = _serve_once(client, n_requests, seed + rep)
+            best[kind] = max(best[kind], tps)
+    overhead = 1.0 - best["on"] / max(best["off"], 1e-9)
+
+    on = clients["on"]
+    tr = on.tracer
+    out = {
+        "scenario": "obs_overhead",
+        "requests_per_rep": n_requests, "repeats": repeats,
+        "slots": slots, "max_new": MAX_NEW,
+        "off_tokens_per_cpu_s": round(best["off"], 1),
+        "on_tokens_per_cpu_s": round(best["on"], 1),
+        "overhead": round(overhead, 4),
+        "max_overhead": max_overhead,
+        "tracer": tr.summary(),
+        "timeseries": on.timeseries.summary(),
+    }
+    if trace_out:
+        from repro.obs import export_chrome_trace
+        trace = export_chrome_trace(on, trace_out)
+        out["trace_events"] = _validate_chrome(trace)
+        out["trace_path"] = str(trace_out)
+    if spans_out:
+        from repro.obs import export_spans_jsonl
+        out["spans_written"] = export_spans_jsonl(on, spans_out)
+        out["spans_path"] = str(spans_out)
+
+    if check:
+        assert len(clients["off"].tracer.spans) == 0, \
+            "tracing-off arm recorded spans — the off path is not off"
+        assert not tr.open_spans(), \
+            f"orphan spans after drain: {tr.open_spans()}"
+        n_chains = repeats * n_requests
+        assert len(tr.request_ids) == n_chains, \
+            (len(tr.request_ids), n_chains)
+        assert all(tr.closed(rid) for rid in tr.request_ids), \
+            "a traced request never saw a terminal outcome"
+        assert tr.summary()["outcomes"].get("completed", 0) == n_chains
+        assert overhead <= max_overhead, (
+            f"flight-recorder overhead {overhead:.1%} exceeds the "
+            f"{max_overhead:.0%} gate "
+            f"(off {best['off']:.0f} vs on {best['on']:.0f} tok/cpu-s)")
+    return out
+
+
+def main(csv: bool = True, out: str | None = None, smoke: bool = False,
+         check: bool = False, max_overhead: float = 0.03,
+         trace_out: str | None = None, spans_out: str | None = None):
+    results = [
+        # keep 5 repeats even in smoke: the overhead gate is a
+        # best-of-N CPU-time ratio and needs the samples against noise
+        run_overhead(n_requests=16 if smoke else 32, repeats=5,
+                     check=check, max_overhead=max_overhead,
+                     trace_out=trace_out, spans_out=spans_out),
+    ]
+    if csv:
+        r = results[0]
+        us = 1e6 / max(r["on_tokens_per_cpu_s"], 1e-9)
+        print(f"{r['scenario']},{us:.1f},"
+              f"off_tps={r['off_tokens_per_cpu_s']};"
+              f"on_tps={r['on_tokens_per_cpu_s']};"
+              f"overhead={r['overhead']};"
+              f"spans={r['tracer']['spans']};"
+              f"open={r['tracer']['open']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write full JSON here")
+    ap.add_argument("--smoke", action="store_true", help="small CI run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on overhead > --max-overhead, orphan "
+                         "spans, or a malformed Chrome trace")
+    ap.add_argument("--max-overhead", type=float, default=0.03,
+                    help="with --check: max tracing-on tokens/s loss "
+                         "vs tracing-off (fraction; default 0.03)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the traced arm's Chrome trace JSON here")
+    ap.add_argument("--spans-out", default=None,
+                    help="write the traced arm's span JSONL here")
+    args = ap.parse_args()
+    main(out=args.out, smoke=args.smoke, check=args.check,
+         max_overhead=args.max_overhead, trace_out=args.trace_out,
+         spans_out=args.spans_out)

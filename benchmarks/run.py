@@ -23,12 +23,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
                    windowed baseline (output equality + prefix-sharing
                    savings) and the disaggregated prefill->decode
                    two-pool fleet vs the unified engine pool
+  * obs_*        — flight-recorder overhead: decode tokens/s with
+                   per-request span tracing on vs off (``--trace PATH``
+                   additionally writes the traced run as Chrome
+                   trace_event JSON for Perfetto / chrome://tracing)
 
 ``--check`` turns invariants into failures across the serving benches:
 truncated open-loop traces (the ``max_s`` safety net fired, so the
 trace silently shrank), chunked-prefill output mismatches, token loss
-at the co-processing handoff, and mis-attributed per-stage energy all
-abort the run instead of printing a smaller number.
+at the co-processing handoff, mis-attributed per-stage energy, orphan
+trace spans, and flight-recorder overhead above 3% all abort the run
+instead of printing a smaller number.
 """
 from __future__ import annotations
 
@@ -45,11 +50,18 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="fail on truncated traces / completeness / "
                          "equality violations in the serving benches")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the obs bench's traced serving run as "
+                         "Chrome trace_event JSON (pool lanes, engine "
+                         "stages, counter tracks — open in Perfetto / "
+                         "chrome://tracing); see the Observability "
+                         "quickstart in ROADMAP.md")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (coproc_bench, decode_bench, fig2_throughput,
-                            orbit_bench, partition_sweep, precision_micro,
-                            roofline_bench, router_bench, table1_ursonet)
+                            obs_bench, orbit_bench, partition_sweep,
+                            precision_micro, roofline_bench, router_bench,
+                            table1_ursonet)
 
     if args.check:
         # any open_loop truncation inside a bench is a hard failure:
@@ -74,6 +86,8 @@ def main() -> None:
     orbit_bench.main(smoke=not args.full, check=args.check)
     coproc_bench.main(smoke=not args.full, check=args.check,
                       min_ratio=1.0 if args.check else 0.0)
+    obs_bench.main(smoke=not args.full, check=args.check,
+                   trace_out=args.trace)
 
 
 if __name__ == "__main__":

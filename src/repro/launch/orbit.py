@@ -68,7 +68,8 @@ def mix_demand_w(client, rate_hz: float, mix=MIX) -> float:
 
 def run_eclipse_scenario(n_requests: int = 300, rate_hz: float = 60.0,
                          seed: int = 0, controlled: bool = True,
-                         scale: bool = True) -> dict:
+                         scale: bool = True,
+                         trace_path: str = None) -> dict:
     """One eclipse transition, controller on or off; returns the report.
 
     Both variants are scored against the *same* orbit-average budget
@@ -82,6 +83,8 @@ def run_eclipse_scenario(n_requests: int = 300, rate_hz: float = 60.0,
                if scale else None)
     ospec = eclipse_orbit_spec(demand_w, scaling=scaling)
     ctrl = ospec.attach(client) if controlled else None
+    if trace_path:
+        client.enable_tracing()
 
     classes = [SLO_CLASSES[n] for n, _ in MIX]
     weights = [w for _, w in MIX]
@@ -121,6 +124,11 @@ def run_eclipse_scenario(n_requests: int = 300, rate_hz: float = 60.0,
     }
     if ctrl is not None:
         report["controller"] = ctrl.report()
+    if trace_path:
+        from repro.obs import export_chrome_trace
+        trace = export_chrome_trace(client, trace_path)
+        report["trace_events"] = len(trace["traceEvents"])
+        report["trace_path"] = str(trace_path)
     return report
 
 
@@ -134,12 +142,17 @@ def main():
     ap.add_argument("--no-scale", action="store_true",
                     help="energy cap only, no autoscaler")
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace_event JSON of the run — "
+                         "pool lanes, orbit phases, counter tracks "
+                         "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     report = run_eclipse_scenario(n_requests=args.requests,
                                   rate_hz=args.rate, seed=args.seed,
                                   controlled=not args.uncontrolled,
-                                  scale=not args.no_scale)
+                                  scale=not args.no_scale,
+                                  trace_path=args.trace)
     print(json.dumps(report, indent=2))
     if not args.json:
         word = "inside" if report["energy_ratio"] <= 1.0 else "OVER"

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome trace_event JSON of the run "
+                         "(open in Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     spec = FleetSpec(
@@ -38,6 +41,8 @@ def main():
         workload="transformer", arch=args.arch, smoke=args.smoke,
         seq_len=16)
     client = spec.build()
+    if args.trace:
+        client.enable_tracing()
 
     rng = np.random.default_rng(0)
     vocab = client.engines["serve"].cfg.vocab_size
@@ -54,6 +59,11 @@ def main():
           f"in {pool['batches']} batches, {pool['busy_s']:.2f}s busy "
           f"({pool['decode_tokens_per_s']:.1f} decode tok/s, "
           f"occupancy p50 {pool['slot_occupancy']['p50']})")
+    if args.trace:
+        from repro.obs import export_chrome_trace
+        trace = export_chrome_trace(client, args.trace)
+        print(f"wrote {len(trace['traceEvents'])} trace events to "
+              f"{args.trace}")
 
 
 if __name__ == "__main__":

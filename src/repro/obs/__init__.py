@@ -1,0 +1,35 @@
+"""repro.obs — the flight recorder over the serving stack.
+
+Three layers, one subsystem:
+
+* :mod:`repro.obs.trace` — per-request span trees on the fleet's
+  virtual clock (``submit -> queue -> admit/prefill -> handoff ->
+  serve/decode -> complete|reject|drop``), recorded by hooks threaded
+  through ``ServingClient``, ``Router``, ``AcceleratorPool``,
+  ``EngineExecutor``, the engines, and the orbit ``FleetController``.
+  Read one back with ``ResponseHandle.trace()``.
+* :mod:`repro.obs.timeseries` — a bounded ring buffer of per-tick
+  fleet samples (tokens/s, queue depth, occupancy, bucket level, pool
+  count, mode), replacing the final-snapshot-only view; the orbit
+  report embeds its summary.
+* :mod:`repro.obs.export` — spans to JSONL and to Chrome
+  ``trace_event`` JSON (one lane per pool/stage, orbit phases as async
+  spans), viewable in Perfetto.
+
+Quickstart::
+
+    client = spec.build()                   # or FleetSpec(..., trace=True)
+    client.enable_tracing()
+    h = client.submit(prompt, max_new=8)
+    h.result()
+    print(h.trace())                        # the span tree
+    from repro.obs import export_chrome_trace
+    export_chrome_trace(client, "trace.json")   # open in Perfetto
+"""
+from repro.obs.export import (chrome_trace, export_chrome_trace,
+                              export_spans_jsonl)
+from repro.obs.timeseries import FleetTimeSeries, Sample
+from repro.obs.trace import OUTCOMES, Span, Tracer
+
+__all__ = ["FleetTimeSeries", "OUTCOMES", "Sample", "Span", "Tracer",
+           "chrome_trace", "export_chrome_trace", "export_spans_jsonl"]

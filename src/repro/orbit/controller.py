@@ -90,10 +90,13 @@ class FleetController:
             return "reject"                    # last resort: battery dry
         return "dispatch"
 
-    def defer(self, req) -> None:
+    def defer(self, req, now: Optional[float] = None) -> None:
         req.deferred = True
         self.deferred.append(req)
         self.client.router.telemetry.energy_deferred += 1
+        self.client.router.telemetry.tracer.begin(
+            req.rid, "defer", self.client.now if now is None else now,
+            mode=self.mode)
 
     # ------------------------------------------------------------------
     # control step (called from ServingClient.advance every tick)
@@ -127,6 +130,8 @@ class FleetController:
         if mode != self.mode or not self.transitions:
             self.mode = mode
             self.transitions.append((round(now, 4), mode))
+            self.client.router.telemetry.tracer.event(
+                "mode", now, mode=mode, bucket_frac=round(f, 4))
         self.client.router.energy_mode = ("nominal" if mode == "nominal"
                                           else "conserve")
 
@@ -148,6 +153,9 @@ class FleetController:
         while self.deferred and headroom > 0.0:
             req = self.deferred.pop(0)
             req.deferred = False
+            # a failed release ends the chain via the router's rejection
+            # path, which also sweeps up a still-open defer span
+            router.telemetry.tracer.finish(req.rid, "defer", now)
             ok = router.submit(req, now)
             handle = self.client._handles.get(req.rid)
             if handle is not None:
@@ -172,4 +180,7 @@ class FleetController:
                             for t, m in self.transitions],
             "scale_actions": ([] if self.autoscaler is None
                               else list(self.autoscaler.actions)),
+            # what the fleet looked like DURING the orbit, not just at
+            # its end: the ring-buffered per-tick samples' roll-up
+            "timeseries": self.client.timeseries.summary(),
         }

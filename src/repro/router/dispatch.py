@@ -56,6 +56,9 @@ class Router:
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         for p in pools:                    # pool counters live in telemetry
             self.telemetry.pools[p.name] = p.counters
+            p.tracer = self.telemetry.tracer
+            p.executor.tracer = self.telemetry.tracer
+            p.executor.pool_name = p.name
         self._sched_kw = dict(batch=batch, max_segments=max_segments,
                               accuracy_penalty=accuracy_penalty,
                               cut_candidates=cut_candidates)
@@ -96,6 +99,9 @@ class Router:
             raise ValueError(f"pool {pool.name!r} is already routed")
         self.pools[pool.name] = pool
         self.telemetry.pools[pool.name] = pool.counters
+        pool.tracer = self.telemetry.tracer
+        pool.executor.tracer = self.telemetry.tracer
+        pool.executor.pool_name = pool.name
         merged = sorted(set(self.all_profiles) | set(pool.profiles))
         self.all_profiles = merged
         self.refresh_plans()
@@ -207,6 +213,8 @@ class Router:
         choice = self._choose(req.slo)
         if choice is None:
             self.telemetry.rejected += 1
+            self.telemetry.tracer.end_request(req.rid, now, "rejected",
+                                              slo=req.slo.name)
             return False
         self._dispatch(req, *choice, now)
         self.telemetry.admitted += 1
@@ -231,6 +239,8 @@ class Router:
             req.dropped = True
             req.violated = True
             self.telemetry.record_drop(req.slo.name)
+            self.telemetry.tracer.end_request(req.rid, now, "dropped",
+                                              rerouted=req.rerouted)
             return
         self._dispatch(req, *choice, now)
 
@@ -247,11 +257,14 @@ class Router:
         completed: List[RouterRequest] = []
         for pool in self.pools.values():
             completed.extend(pool.step(now))
+        tracer = self.telemetry.tracer
         for r in completed:
             r.violated = r.done_s > r.deadline_s + _EPS
             self.telemetry.record_completion(r.slo.name,
                                              r.done_s - r.arrival_s,
                                              r.violated)
+            tracer.end_request(r.rid, r.done_s, "completed",
+                               violated=r.violated, pool=r.pool)
         return completed
 
     @property

@@ -44,7 +44,16 @@ class FailoverController:
                 displaced = pool.degrade(ev.fault.lost_profiles)
                 self.router.telemetry.failovers += 1
                 self.router.refresh_plans()
+                tracer = self.router.telemetry.tracer
                 for req in displaced:
+                    # the SEU destroyed whatever stage held the request;
+                    # close it here (degrade() has no clock) so failover
+                    # chains never leak open queue/serve spans
+                    tracer.finish(req.rid, "serve", now, evicted=True)
+                    tracer.finish(req.rid, "queue", now, evicted=True)
+                    tracer.event("failover", now, rid=req.rid,
+                                 pool=ev.fault.pool,
+                                 lost=list(ev.fault.lost_profiles))
                     self.router.redispatch(req, now)
                 displaced_total.extend(displaced)
             elif ev.kind == "recover":

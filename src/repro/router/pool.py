@@ -70,8 +70,8 @@ class CostModelExecutor:
     def __init__(self, layers: Sequence[LayerCost]):
         self.layers = list(layers)
 
-    def run(self, plan: ScheduledPlan,
-            requests: Sequence[RouterRequest]) -> Tuple[float, float]:
+    def run(self, plan: ScheduledPlan, requests: Sequence[RouterRequest],
+            now: float = 0.0) -> Tuple[float, float]:
         return price_assignments(self.layers, plan, batch=len(requests))
 
 
@@ -99,6 +99,7 @@ class AcceleratorPool:
         self.state = PoolState.HEALTHY
         self.draining = False            # graceful retirement: no new work
         self.counters = counters if counters is not None else PoolCounters()
+        self.tracer = None               # Router wires the shared Tracer
         self._lost: Counter = Counter()        # profile -> overlapping faults
         self._queues: Dict[ScheduledPlan, List[RouterRequest]] = {}
         self._inflight: List[_InFlightBatch] = []
@@ -145,6 +146,9 @@ class AcceleratorPool:
         req.pool = self.name
         req.enqueue_s = now
         self._queues.setdefault(req.plan, []).append(req)
+        if self.tracer is not None:
+            self.tracer.begin(req.rid, "queue", now, pool=self.name,
+                              rerouted=req.rerouted)
         self.counters.dispatched += 1
         self.counters.queue_depth_now = self.queue_depth
         self.counters.load_now = self.load
@@ -160,6 +164,8 @@ class AcceleratorPool:
                 for r in b.requests:
                     r.done_s = b.finish_s
                     completed.append(r)
+                    if self.tracer is not None:
+                        self.tracer.finish(r.rid, "serve", b.finish_s)
                 self.counters.completed += len(b.requests)
             else:
                 still.append(b)
@@ -191,7 +197,18 @@ class AcceleratorPool:
             return False
         plan, q = ready
         batch, self._queues[plan] = q[:self.max_window], q[self.max_window:]
-        lat, energy = self.executor.run(plan, batch)
+        if self.tracer is not None:
+            for r in batch:              # queue ends where serve begins
+                self.tracer.finish(r.rid, "queue", now)
+        lat, energy = self.executor.run(plan, batch, now)
+        if self.tracer is not None:
+            bid = self.counters.batches
+            share = energy / len(batch)  # assigned at launch: eviction
+            for r in batch:              # cannot un-spend batch energy
+                self.tracer.begin(r.rid, "serve", now, pool=self.name,
+                                  bid=f"{self.name}:{bid}",
+                                  batch=len(batch), lat_s=lat,
+                                  energy_j=share)
         self._inflight.append(_InFlightBatch(plan, batch, now, now + lat,
                                              energy))
         self.counters.batches += 1

@@ -3,35 +3,75 @@
 Everything is plain Python (no jax) and JSON-serializable via
 ``snapshot()`` — the same dict feeds the launch demo's report, the
 benchmark's output file, and the tests' assertions.  Histograms keep raw
-samples (bounded) rather than buckets: the sample counts here are small
-enough that exact percentiles are cheaper than maintaining bucket edges.
+samples rather than buckets, bounded by *reservoir sampling*: beyond
+``max_samples`` each new value replaces a uniformly-random retained one
+(deterministic seed), so long runs keep an unbiased sample of the whole
+run instead of a snapshot of its first N values.  Percentile queries
+sort once and reuse the sorted view until the next ``record`` (a
+dirty-flag cache — ``snapshot()`` asks for several percentiles per
+histogram).
 """
 from __future__ import annotations
 
+import random
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclass
 class Histogram:
     samples: List[float] = field(default_factory=list)
     max_samples: int = 100_000            # bound memory on long runs
+    seed: int = 0x5EED                    # reservoir RNG (deterministic)
+    _seen: int = field(default=0, repr=False, compare=False)
+    _dirty: bool = field(default=True, repr=False, compare=False)
+    _sorted: Optional[List[float]] = field(default=None, repr=False,
+                                           compare=False)
+    _rng: Optional[random.Random] = field(default=None, repr=False,
+                                          compare=False)
+
+    def __post_init__(self):
+        self._seen = len(self.samples)
 
     def record(self, v: float) -> None:
+        """Record one sample.  Past ``max_samples`` the reservoir kicks
+        in (Vitter's algorithm R): the new value replaces a uniformly
+        random retained one with probability ``max_samples/seen``, so
+        p50/p99 stay representative of the *whole* run — the old
+        keep-the-first-N policy biased every percentile toward run
+        start the moment the bound was hit."""
+        self._seen += 1
+        self._dirty = True
         if len(self.samples) < self.max_samples:
             self.samples.append(float(v))
+            return
+        if self._rng is None:
+            self._rng = random.Random(self.seed)
+        j = self._rng.randrange(self._seen)
+        if j < self.max_samples:
+            self.samples[j] = float(v)
 
     def percentile(self, p: float) -> float:
         if not self.samples:
             return 0.0
-        s = sorted(self.samples)
+        if (self._dirty or self._sorted is None
+                or len(self._sorted) != len(self.samples)):
+            self._sorted = sorted(self.samples)
+            self._dirty = False
+        s = self._sorted
         idx = min(len(s) - 1, max(0, int(round(p / 100.0 * (len(s) - 1)))))
         return s[idx]
 
     @property
     def count(self) -> int:
-        return len(self.samples)
+        """Samples *recorded* (dropped ones included)."""
+        return self._seen
+
+    @property
+    def dropped(self) -> int:
+        """Samples recorded but not retained by the reservoir."""
+        return self._seen - len(self.samples)
 
     @property
     def mean(self) -> float:
@@ -40,7 +80,8 @@ class Histogram:
     def summary(self) -> Dict[str, float]:
         return {"count": self.count, "mean": round(self.mean, 6),
                 "p50": round(self.percentile(50), 6),
-                "p99": round(self.percentile(99), 6)}
+                "p99": round(self.percentile(99), 6),
+                "dropped": self.dropped}
 
 
 @dataclass
@@ -96,9 +137,16 @@ class PoolCounters:
 
 class Telemetry:
     """One instance per Router; pools and the failover controller write
-    into it, reports read from it."""
+    into it, reports read from it.
+
+    Also hosts the fleet's flight recorder: ``tracer`` is the one
+    :class:`~repro.obs.trace.Tracer` every layer shares (disabled by
+    default — span recording costs one attribute check until
+    ``ServingClient.enable_tracing()`` flips it on)."""
 
     def __init__(self):
+        from repro.obs.trace import Tracer   # local: obs imports telemetry
+        self.tracer = Tracer()
         self.admitted = 0
         self.rejected = 0
         self.completed = 0

@@ -381,6 +381,11 @@ class ContinuousBatchingEngine:
         self.done: Dict[int, Request] = {}
         self._dirty = True                    # host table/lengths changed
         self.on_token: Optional[Callable[[int, int], None]] = None
+        # flight-recorder hook: ``on_stage(stage, t0, t1, rids, attrs)``
+        # with wall perf_counter endpoints; installed by EngineExecutor
+        # only while a traced batch runs, so the normal hot path pays a
+        # single None check per device call
+        self.on_stage = None
         # per-slot sampling knobs, threaded through the jit boundary.
         # Device copies are refreshed per admission round (the only
         # place they change) and the per-token step counters only when
@@ -558,6 +563,10 @@ class ContinuousBatchingEngine:
         if self.on_token is not None:
             self.on_token(rid, tok)
 
+    def _stage(self, stage: str, t0: float, t1: float, rids, **attrs):
+        if self.on_stage is not None:
+            self.on_stage(stage, t0, t1, list(rids), attrs)
+
     def _admit(self) -> List[Request]:
         admits: List[tuple] = []
         completed: List[Request] = []
@@ -615,7 +624,10 @@ class ContinuousBatchingEngine:
             self.caches, jnp.asarray(admit), temps_d, topks_d, seeds_d,
             any_sampled)
         firsts = np.asarray(firsts)
-        self.admit_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.admit_s += t1 - t0
+        self._stage("admit", t0, t1, [req.rid for _, req in admits],
+                    tokens=self.prompt_len * len(admits))
         for i, req in admits:
             self.lengths[i] = self.prompt_len
             self._gen_counts[i] = 1
@@ -638,7 +650,7 @@ class ContinuousBatchingEngine:
         return completed
 
     def _run_chunks(self, i: int, padded: np.ndarray, first_chunk: int,
-                    sp: SamplingParams) -> int:
+                    sp: SamplingParams, rid: Optional[int] = None) -> int:
         """Drive the jitted chunk program over ``padded``'s chunks from
         ``first_chunk`` on; returns the final chunk's sampled token."""
         c = self.prefill_chunk
@@ -647,11 +659,17 @@ class ContinuousBatchingEngine:
         seeds1 = jnp.asarray([sp.seed], jnp.int32)
         t0 = time.perf_counter()
         firsts = None
+        ct0 = t0
         for ci in range(first_chunk, padded.shape[0] // c):
             firsts, self.caches = self._chunk_step(
                 self.params, jnp.asarray(padded[ci * c:(ci + 1) * c][None]),
                 self.caches, np.int32(i), np.int32(ci * c),
                 temps1, topks1, seeds1, not sp.greedy)
+            if self.on_stage is not None:
+                ct1 = time.perf_counter()
+                self._stage("prefill_chunk", ct0, ct1, [rid],
+                            chunk=ci, tokens=c)
+                ct0 = ct1
         self.admit_s += time.perf_counter() - t0
         self.prefill_tokens += padded.shape[0] - first_chunk * c
         return int(np.asarray(firsts)[0])
@@ -710,7 +728,8 @@ class ContinuousBatchingEngine:
         self._knobs_dev = (jnp.asarray(self._temps),
                            jnp.asarray(self._topks),
                            jnp.asarray(self._seeds))
-        tok = self._run_chunks(i, padded, shared_blocks * bs // c, sp)
+        tok = self._run_chunks(i, padded, shared_blocks * bs // c, sp,
+                               rid=req.rid)
         # publish the freshly prefilled prompt blocks for future sharers
         # (all are full, read-only blocks: decode appends start a new
         # block because the padded length is block-aligned)
@@ -746,7 +765,11 @@ class ContinuousBatchingEngine:
             nxt, self.caches = self._decode(
                 self.params, jnp.asarray(self.last), self.caches)
         nxt = np.asarray(nxt)
-        self.decode_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        self.decode_s += t1 - t0
+        self._stage("decode_step", t0, t1,
+                    [self.slots[i].req.rid for i in active],
+                    step=self.decode_steps, tokens=len(active))
         completed: List[Request] = []
         for i in active:
             self.lengths[i] += 1           # mirror device append_tokens
@@ -808,12 +831,15 @@ class ContinuousBatchingEngine:
         self._push_tables()
         self._dirty = False
         sp = req.sampling or GREEDY
-        tok = self._run_chunks(i, padded, 0, sp)
+        tok = self._run_chunks(i, padded, 0, sp, rid=req.rid)
         if req.max_new >= 1:
             self.total_tokens += 1
             self._emit(req.rid, tok)
         rows = self.table[i][:length // bs].copy()
+        g0 = time.perf_counter()
         kv = _gather_block_rows(self.caches, jnp.asarray(rows))
+        self._stage("handoff", g0, time.perf_counter(), [req.rid],
+                    blocks=len(rows), tokens=length)
         self.alloc.release(self.shared.release(rows))
         self.table[i] = -1
         self.lengths[i] = 0
@@ -844,8 +870,11 @@ class ContinuousBatchingEngine:
         need[i] = -(-(length + req.max_new) // bs)
         self.table = paging.plan_blocks(self.table, self.alloc, need)
         rows = self.table[i][:length // bs]
+        p0 = time.perf_counter()
         self.caches = _paste_block_rows(self.caches, handoff.kv,
                                         jnp.asarray(rows))
+        self._stage("import", p0, time.perf_counter(), [req.rid],
+                    blocks=len(rows), tokens=length)
         self.lengths[i] = length
         self._gen_counts[i] = 1
         self._dirty = True                # table + lengths push next step
@@ -933,6 +962,18 @@ class CoProcServer:
         self._on_token = fn
         self.prefill.on_token = fn         # first token, at the handoff
         self.decode.on_token = fn          # everything after
+
+    # --- stage relay: each engine's stage names are disjoint (prefill:
+    # admit/prefill_chunk/handoff; decode: import/decode_step), so one
+    # shared hook keeps the seam observable without tagging ---------------
+    @property
+    def on_stage(self):
+        return self.prefill.on_stage
+
+    @on_stage.setter
+    def on_stage(self, fn) -> None:
+        self.prefill.on_stage = fn
+        self.decode.on_stage = fn
 
     # --- mirrored engine API ------------------------------------------
     @property

@@ -24,6 +24,7 @@ from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
+from repro.obs.timeseries import FleetTimeSeries
 from repro.router import FailoverController, Router, RouterRequest
 from repro.router.slo import SLO_CLASSES, SLOClass
 from repro.runtime.sampling import SamplingParams
@@ -130,6 +131,13 @@ class ResponseHandle:
                 raise RuntimeError(f"request {self.rid} stalled at "
                                    f"t={max_s}s")
 
+    def trace(self) -> Optional[Dict]:
+        """This request's span tree from the flight recorder (None when
+        tracing was off at submission): the root ``request`` span with
+        queue/serve/prefill/decode stages nested by containment, plus
+        the terminal ``outcome``.  See :mod:`repro.obs`."""
+        return self._client.tracer.trace(self.rid)
+
     @property
     def telemetry(self) -> Dict:
         """Per-request slice of the fleet's bookkeeping."""
@@ -183,6 +191,10 @@ class ServingClient:
         self._retiring: set = set()
         # orbit control plane (repro.orbit.FleetController), if attached
         self.controller = None
+        # flight recorder: the router's tracer (disabled until
+        # enable_tracing) plus the always-on fleet time-series ring
+        self.tracer = router.telemetry.tracer
+        self.timeseries = FleetTimeSeries()
 
     # ------------------------------------------------------------------
     # submission
@@ -271,6 +283,11 @@ class ServingClient:
         rreq = RouterRequest(rid, self.resolve_slo(slo),
                              self.now if arrival is None else arrival,
                              payload=work)
+        self.tracer.begin_request(
+            rreq.rid, rreq.arrival_s, slo=rreq.slo.name,
+            kind="lm" if work is not None else "cost",
+            prompt=None if work is None else int(work.prompt.shape[0]),
+            max_new=None if work is None else work.max_new)
         # the orbit controller (if attached) gates admission on the
         # global energy bucket: deferrable work parks until sunlight
         # returns; rejection is the dry-battery last resort
@@ -279,11 +296,13 @@ class ServingClient:
         if verdict == "dispatch":
             admitted = self.router.submit(rreq, self.now)
         elif verdict == "defer":
-            self.controller.defer(rreq)
+            self.controller.defer(rreq, self.now)
             admitted = True                  # accepted; dispatches later
         else:                                # "reject"
             self.router.telemetry.rejected += 1
             self.router.telemetry.energy_rejected += 1
+            self.tracer.end_request(rreq.rid, self.now, "energy_rejected",
+                                    slo=rreq.slo.name)
             admitted = False
         handle = ResponseHandle(self, rreq, work, admitted)
         self._handles[rid] = handle
@@ -306,6 +325,7 @@ class ServingClient:
             self.failover.poll(self.now)
         if self.controller is not None:
             self.controller.step(self.now)
+        self.timeseries.observe(self, self.now)
 
     def pump(self) -> List[RouterRequest]:
         """Advance every pool at the current time (non-blocking)."""
@@ -393,6 +413,14 @@ class ServingClient:
     # ------------------------------------------------------------------
     # observability
     # ------------------------------------------------------------------
+    def enable_tracing(self, max_spans: Optional[int] = None) -> None:
+        """Turn the flight recorder on: every subsequent submission
+        records its span chain (``ResponseHandle.trace()`` reads one
+        back; ``repro.obs.export`` serializes them all)."""
+        if max_spans is not None:
+            self.tracer.max_spans = max_spans
+        self.tracer.enabled = True
+
     @property
     def outstanding(self) -> int:
         deferred = (0 if self.controller is None

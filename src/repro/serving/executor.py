@@ -78,6 +78,12 @@ class EngineExecutor:
         self.prefill_pool = prefill_pool
         self.prefill_counters = prefill_counters
         self.prefill_energy_scale = prefill_energy_scale
+        # flight recorder: the Router wires the fleet's shared tracer
+        # and this pool's name in; engine stage events (admit, prefill
+        # chunks, handoff, import, decode steps) are relayed into it
+        # while a traced batch runs
+        self.tracer = None
+        self.pool_name = None
         if hasattr(server, "on_token"):
             server.on_token = self._relay
 
@@ -93,10 +99,49 @@ class EngineExecutor:
                 getattr(s, "prefill_tokens", 0),
                 getattr(s, "admit_s", 0.0))
 
-    def run(self, plan: ScheduledPlan,
-            requests: Sequence[RouterRequest]) -> Tuple[float, float]:
+    def _install_stage_relay(self, plan: ScheduledPlan, now: float,
+                             wall0: float) -> bool:
+        """While this batch runs, forward the engine's ``on_stage``
+        events into the tracer, anchoring wall perf_counter times at the
+        batch's *virtual* launch instant ``now`` — engine sub-spans
+        (chunks, decode steps) then nest inside the pool's virtual
+        ``serve`` span.  Per-request stages (prefill chunks, the
+        handoff, the import) record under their rid; batch-wide stages
+        (fused admit, decode steps) are pool-lane spans (rid=None).
+        Disaggregated pools put prefill-side stages on the prefill stage
+        pool's lane and stamp each chunk's energy at the discounted
+        per-token rate, so summed chunk energy equals the stage
+        counters' charge exactly."""
+        tr = self.tracer
+        if (tr is None or not tr.enabled
+                or not hasattr(self.server, "on_stage")):
+            return False
+        decode_pool = self.pool_name
+        pre_pool = self.prefill_pool or decode_pool
+        chunk_e = (plan.energy_j * self.prefill_energy_scale
+                   if self.prefill_counters is not None else None)
+
+        def relay(stage, w0, w1, rids, attrs):
+            vt0, vt1 = now + (w0 - wall0), now + (w1 - wall0)
+            if stage in ("admit", "decode_step"):
+                tr.add(None, stage, vt0, vt1, pool=decode_pool,
+                       rids=len(rids), **attrs)
+                return
+            pool = pre_pool if stage in ("prefill_chunk",
+                                         "handoff") else decode_pool
+            extra = ({} if chunk_e is None or stage != "prefill_chunk"
+                     else {"energy_j": chunk_e * attrs.get("tokens", 0)})
+            for rid in rids:
+                tr.add(rid, stage, vt0, vt1, pool=pool, **attrs, **extra)
+
+        self.server.on_stage = relay
+        return True
+
+    def run(self, plan: ScheduledPlan, requests: Sequence[RouterRequest],
+            now: float = 0.0) -> Tuple[float, float]:
         from repro.runtime.serve import Request as ServeRequest
         t0 = time.perf_counter()
+        traced = self._install_stage_relay(plan, now, t0)
         tok0, dec0, def0, pre0, adm0 = self._stats()
         want = {}
         for r in requests:
@@ -172,4 +217,6 @@ class EngineExecutor:
         # charge failover re-serves (zero decode) all over again.  The
         # decode-only basis matches the pool's decode_tokens_per_s
         # telemetry, so the orbit energy bucket drains against real work.
+        if traced:
+            self.server.on_stage = None
         return time.perf_counter() - t0, plan.energy_j * (tok1 - tok0)

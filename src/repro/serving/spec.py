@@ -156,6 +156,7 @@ class FleetSpec:
     faults: List[FaultSpec] = field(default_factory=list)
     dt: float = 0.002                    # clock tick for drive loops
     latency_headroom: float = 0.6
+    trace: bool = False                  # flight recorder on from tick 0
 
     # ------------------------------------------------------------------
     # serialization
@@ -174,6 +175,7 @@ class FleetSpec:
             "faults": [f.to_dict() for f in self.faults],
             "dt": self.dt,
             "latency_headroom": self.latency_headroom,
+            "trace": self.trace,
         }
 
     @classmethod
@@ -264,6 +266,10 @@ class FleetSpec:
                                model=model, layers=layers)
         for ex in executors:
             ex.on_token = client._on_token
+        if self.trace:
+            # after warmup: the throwaway compile requests never appear
+            # in the flight recorder
+            client.enable_tracing()
         return client
 
 

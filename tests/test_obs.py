@@ -1,0 +1,472 @@
+"""Flight recorder: span-chain closure on every terminal path (complete /
+reject / energy-reject / drop / eviction / deferral), churn-proof
+reconciliation of span energy and batch time against PoolCounters,
+engine-stage nesting, Chrome trace export validity, the fleet
+time-series ring, reservoir-sampled histograms, and the telemetry
+snapshot schema golden."""
+import json
+import math
+
+import numpy as np
+import jax
+import pytest
+
+from repro.launch.route import vision_fleet_spec
+from repro.models import transformer as T
+from repro.obs import FleetTimeSeries, Tracer, chrome_trace
+from repro.orbit import OrbitSpec, PhaseSpec, ScalingPolicy
+from repro.router import SLO_CLASSES
+from repro.router.telemetry import Histogram
+from repro.serving import (FaultSpec, FleetSpec, PoolSpec, SLOClass,
+                           open_loop)
+
+from conftest import tiny_dense
+
+PROMPT_LEN, MAX_NEW = 8, 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_dense()
+    params = T.model_init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def lm_spec(**pool_kw):
+    kw = dict(capacity=1, max_window=4, max_wait_s=0.0, max_slots=3,
+              prompt_len=PROMPT_LEN, max_new=MAX_NEW, backend="engine")
+    kw.update(pool_kw)
+    return FleetSpec(pools=[PoolSpec("lm", ("tpu_v5e_bf16",), **kw)],
+                     workload="transformer", seq_len=PROMPT_LEN)
+
+
+def cost_spec(**kw):
+    return FleetSpec(
+        pools=[PoolSpec("board", ("mpsoc_dpu",), capacity=1,
+                        max_window=4, max_wait_s=0.0)],
+        workload="ursonet", **kw)
+
+
+# ---------------------------------------------------------------------------
+# Tracer unit behavior
+# ---------------------------------------------------------------------------
+def test_tracer_disabled_is_inert():
+    tr = Tracer()
+    tr.begin_request(1, 0.0)
+    tr.begin(1, "queue", 0.0)
+    tr.add(1, "serve", 0.0, 1.0)
+    tr.event("mode", 0.5)
+    tr.end_request(1, 1.0, "completed")
+    assert tr.spans == [] and tr.outcomes == {}
+    assert tr.summary()["spans"] == 0
+
+
+def test_tracer_tree_nests_by_containment_and_closes_orphans():
+    tr = Tracer(enabled=True)
+    tr.begin_request(1, 0.0, slo="offline")
+    tr.begin(1, "queue", 0.0, pool="p")
+    tr.finish(1, "queue", 1.0)
+    tr.begin(1, "serve", 1.0, pool="p")
+    tr.add(1, "prefill_chunk", 1.1, 1.2, pool="p", tokens=8)
+    tr.end_request(1, 2.0, "completed")          # serve left open on purpose
+    assert tr.closed(1) and not tr.open_spans()
+    tree = tr.trace(1)
+    assert tree["stage"] == "request" and tree["outcome"] == "completed"
+    assert {c["stage"] for c in tree["children"]} == {"queue", "serve"}
+    serve = next(c for c in tree["children"] if c["stage"] == "serve")
+    # the chunk nests under the serve span that contains it, and the
+    # dangling serve span was closed at the terminal event, marked
+    assert [c["stage"] for c in serve["children"]] == ["prefill_chunk"]
+    assert serve["t1"] == 2.0 and serve["attrs"]["truncated"] is True
+
+
+def test_tracer_stale_same_stage_span_closes_defensively():
+    tr = Tracer(enabled=True)
+    tr.begin(5, "queue", 0.0)
+    tr.begin(5, "queue", 1.0)                    # re-open without finish
+    first, second = tr.spans_for(5)
+    assert first.t1 == 1.0 and first.attrs["truncated"] is True
+    assert second.open
+
+
+def test_tracer_span_cap_counts_dropped_but_chains_still_close():
+    tr = Tracer(enabled=True, max_spans=2)
+    tr.begin_request(1, 0.0)
+    tr.begin(1, "queue", 0.0)
+    tr.begin(1, "serve", 0.5)                    # over the cap -> dropped
+    assert tr.dropped == 1
+    tr.end_request(1, 1.0, "completed")
+    assert tr.closed(1) and not tr.open_spans()
+    s = tr.summary()
+    assert s["spans"] == 2 and s["dropped"] == 1
+
+
+def test_tracer_jsonl_round_trips(tmp_path):
+    tr = Tracer(enabled=True)
+    tr.begin_request(3, 0.25, slo="offline")
+    tr.end_request(3, 0.5, "completed")
+    path = tmp_path / "spans.jsonl"
+    assert tr.to_jsonl(path) == 1
+    rows = [json.loads(l) for l in path.read_text().splitlines()]
+    assert rows[0]["rid"] == 3 and rows[0]["stage"] == "request"
+    assert rows[0]["attrs"]["outcome"] == "completed"
+
+
+# ---------------------------------------------------------------------------
+# terminal paths through the fleet: every exit closes the chain
+# ---------------------------------------------------------------------------
+def test_completed_and_rejected_chains_close_through_fleet():
+    client = cost_spec().build()
+    client.enable_tracing()
+    ok = client.submit(slo="bulk-reprocess")
+    bad = client.submit(slo=SLOClass("impossible", max_latency_s=1e-9))
+    client.drain()
+    tr = client.tracer
+    assert not tr.open_spans()
+    assert tr.outcomes[ok.rid] == "completed"
+    assert tr.outcomes[bad.rid] == "rejected"
+    assert ok.trace()["outcome"] == "completed"
+    # the rejected chain is just the root span, closed at submit time
+    assert [s.stage for s in tr.spans_for(bad.rid)] == ["request"]
+    assert not tr.spans_for(bad.rid)[0].open
+
+
+def test_fault_drop_chain_closes_with_dropped_outcome():
+    client = cost_spec(faults=[FaultSpec("board", at_s=0.001,
+                                         duration_s=math.inf)]).build()
+    client.enable_tracing()
+    h = client.submit(slo="bulk-reprocess")
+    client.drain()
+    tr = client.tracer
+    assert tr.outcomes[h.rid] == "dropped" and tr.closed(h.rid)
+    assert not tr.open_spans()
+    stages = {s.stage for s in tr.spans_for(h.rid)}
+    assert "queue" in stages                     # it did reach a pool
+    assert any(s.stage == "failover" for s in tr.spans)   # fleet marker
+
+
+def test_deferred_chain_carries_defer_span_then_completes():
+    client = vision_fleet_spec().build()
+    ospec = OrbitSpec(phases=[PhaseSpec("eclipse", 1.0, 0.0),
+                              PhaseSpec("sunlit", 9.0, 100.0)],
+                      bucket_j=1.0, initial_frac=0.2,
+                      conserve_frac=0.5, critical_frac=0.01)
+    ospec.attach(client)
+    client.enable_tracing()
+    h = client.submit(slo="bulk-reprocess")      # parks through the eclipse
+    assert h.result(max_s=30.0).admitted
+    tr = client.tracer
+    assert tr.outcomes[h.rid] == "completed" and not tr.open_spans()
+    defer = next(s for s in tr.spans_for(h.rid) if s.stage == "defer")
+    assert not defer.open and defer.duration_s > 0.9   # waited for sunlight
+    assert any(s.stage == "mode" for s in tr.spans)    # mode-change marker
+
+
+def test_energy_rejected_chain_closes_while_deferred_stays_open():
+    client = vision_fleet_spec().build()
+    ospec = OrbitSpec(phases=[PhaseSpec("eclipse", 100.0, 0.0)],
+                      bucket_j=1.0, initial_frac=0.0,
+                      conserve_frac=0.5, critical_frac=0.1)
+    ospec.attach(client)
+    client.enable_tracing()
+    parked = client.submit(slo="bulk-reprocess")       # defers
+    critical = client.submit(slo="downlink-critical")  # dry bucket: reject
+    tr = client.tracer
+    assert tr.outcomes[critical.rid] == "energy_rejected"
+    assert tr.closed(critical.rid)
+    # the parked request is legitimately still in flight: root + defer
+    assert not tr.closed(parked.rid)
+    assert {s.stage for s in tr.open_spans()} == {"request", "defer"}
+
+
+# ---------------------------------------------------------------------------
+# churn: faults + autoscaler retirements, chains still reconcile
+# ---------------------------------------------------------------------------
+def test_churn_every_chain_closes_and_totals_reconcile():
+    """Open-loop traffic over the three-pool vision fleet while board-b
+    takes an SEU mid-run and the autoscaler clones/retires board-a:
+    every submitted request must end in a closed chain, and the spans
+    must re-derive the fleet's aggregate energy and batch time."""
+    spec = vision_fleet_spec(faults=[
+        FaultSpec("board-b", at_s=0.3, duration_s=0.6)])
+    client = spec.build()
+    ospec = OrbitSpec(
+        phases=[PhaseSpec("sunlit", 10.0, 1000.0)], bucket_j=1000.0,
+        scaling=ScalingPolicy(template="board-a", min_pools=1, max_pools=3,
+                              queue_high=4, queue_low=0, cooldown_s=0.05))
+    ospec.attach(client)
+    client.enable_tracing()
+    classes = [SLO_CLASSES["downlink-critical"],
+               SLO_CLASSES["background-science"],
+               SLO_CLASSES["bulk-reprocess"]]
+    handles = open_loop(client, classes, [0.2, 0.5, 0.3], rate_hz=500.0,
+                        n_requests=150, seed=3)
+    for _ in range(300):                         # idle tail: clones retire
+        client.step()
+
+    snap = client.telemetry
+    assert snap["failovers"] >= 1                # the SEU actually hit
+    assert snap["pools_added"] >= 1 and snap["pools_retired"] >= 1
+
+    tr = client.tracer
+    assert tr.dropped == 0
+    assert not tr.open_spans()                   # the orphan invariant
+    assert len(handles) == 150
+    for h in handles:
+        assert tr.closed(h.rid), f"rid {h.rid} never closed"
+    # outcome conservation: every handle accounted for exactly once
+    s = tr.summary()
+    assert sum(s["outcomes"].values()) == len(handles)
+    assert s["outcomes"]["completed"] == snap["completed"]
+
+    # span-level energy re-derives the fleet total: each serve span
+    # carries its equal split of the batch's launch-time charge (an
+    # evicted request keeps its share — the joules were spent)
+    counters = client.router.telemetry.pools
+    serve = [sp for sp in tr.spans if sp.stage == "serve"]
+    span_energy = sum(sp.attrs["energy_j"] for sp in serve)
+    fleet_energy = sum(c.energy_j for c in counters.values())
+    assert span_energy == pytest.approx(fleet_energy, rel=1e-6)
+
+    # batch-time reconciliation: busy_s counts each batch once, so
+    # dedup the per-request serve spans by batch id before summing
+    by_bid = {sp.attrs["bid"]: sp.attrs["lat_s"] for sp in serve}
+    fleet_busy = sum(c.busy_s for c in counters.values())
+    assert sum(by_bid.values()) == pytest.approx(fleet_busy, rel=1e-6)
+
+    # chain containment: no span outlives its root request span
+    for h in handles:
+        spans = tr.spans_for(h.rid)
+        root = next(sp for sp in spans if sp.stage == "request")
+        for sp in spans:
+            assert sp.t0 >= root.t0 - 1e-9
+            assert sp.t1 <= root.t1 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# engine pools: stage lanes + per-request engine detail nest in serve
+# ---------------------------------------------------------------------------
+def test_engine_trace_stage_lanes_and_nesting(model):
+    client = lm_spec(max_prompt_len=4 * PROMPT_LEN).build(model=model)
+    client.enable_tracing()
+    rng = np.random.default_rng(7)
+    h_long = client.submit(
+        rng.integers(0, 256, 2 * PROMPT_LEN + 3).astype(np.int32),
+        slo="offline", max_new=3)
+    h_short = client.submit(
+        rng.integers(0, 256, 5).astype(np.int32), slo="offline", max_new=3)
+    client.drain()
+    tr = client.tracer
+    assert not tr.open_spans()
+    assert tr.outcomes[h_long.rid] == "completed"
+    assert tr.outcomes[h_short.rid] == "completed"
+    # batch-level engine stages land on the pool lane (rid=None)
+    lanes = [sp for sp in tr.spans if sp.rid is None]
+    assert any(sp.stage == "decode_step" for sp in lanes)
+    assert all(sp.pool == "lm" for sp in lanes)
+    # the over-bucket prompt prefilled in chunks, attributed to the rid
+    spans = tr.spans_for(h_long.rid)
+    chunks = [sp for sp in spans if sp.stage == "prefill_chunk"]
+    assert chunks
+    serve = next(sp for sp in spans if sp.stage == "serve")
+    for sp in chunks:                            # wall-time engine detail
+        assert serve.t0 - 1e-9 <= sp.t0          # anchors inside the
+        assert sp.t1 <= serve.t1 + 1e-9          # virtual serve span
+    tree = h_long.trace()
+    assert tree["stage"] == "request" and tree["children"]
+
+
+def test_disaggregated_trace_attributes_stages_to_stage_pools(model):
+    client = lm_spec(max_prompt_len=4 * PROMPT_LEN,
+                     prefill_backend="engine").build(model=model)
+    client.enable_tracing()
+    prompt = np.random.default_rng(23).integers(
+        0, 256, 2 * PROMPT_LEN + 3).astype(np.int32)
+    h = client.submit(prompt, max_new=3)
+    h.result()
+    tr = client.tracer
+    spans = tr.spans_for(h.rid)
+    stages = {sp.stage for sp in spans}
+    assert {"prefill_chunk", "handoff", "import"} <= stages
+    # prefill-side stages carry the stage pool's name, decode side the
+    # routed pool's — the co-processing split is visible per span
+    assert {sp.pool for sp in spans
+            if sp.stage in ("prefill_chunk", "handoff")} == {"lm.prefill"}
+    assert next(sp.pool for sp in spans if sp.stage == "import") == "lm"
+    # summed chunk energy is exactly the prefill stage counter's charge
+    chunk_e = sum(sp.attrs["energy_j"] for sp in spans
+                  if sp.stage == "prefill_chunk")
+    pre = client.router.telemetry.pools["lm.prefill"]
+    assert chunk_e == pytest.approx(pre.energy_j, rel=1e-6)
+
+
+def test_response_handle_trace_none_when_recorder_off(model):
+    client = lm_spec().build(model=model)
+    h = client.submit(np.arange(4, dtype=np.int32), max_new=2)
+    client.drain()
+    assert h.trace() is None
+
+
+# ---------------------------------------------------------------------------
+# Chrome export
+# ---------------------------------------------------------------------------
+def test_chrome_trace_export_is_valid_and_laned(tmp_path):
+    client = cost_spec().build()
+    ospec = OrbitSpec(phases=[PhaseSpec("sunlit", 0.5, 100.0),
+                              PhaseSpec("eclipse", 0.5, 0.0)],
+                      bucket_j=100.0)
+    ospec.attach(client)
+    client.enable_tracing()
+    for _ in range(6):
+        client.submit(slo="bulk-reprocess")
+    client.drain()
+
+    from repro.obs import export_chrome_trace
+    path = tmp_path / "trace.json"
+    trace = export_chrome_trace(client, path)
+    reloaded = json.loads(path.read_text())      # valid JSON on disk
+    assert reloaded["otherData"]["spans"] == len(client.tracer.spans)
+    evs = reloaded["traceEvents"]
+    for ev in evs:
+        assert {"ph", "pid", "tid", "name"} <= set(ev)
+        if ev["ph"] != "M":
+            assert "ts" in ev
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+    # one process lane per pool plus the fleet lane, named via metadata
+    names = {ev["args"]["name"] for ev in evs
+             if ev["ph"] == "M" and ev["name"] == "process_name"}
+    assert names == {"fleet", "board"}
+    # orbit phases ride the fleet lane as async begin/end pairs
+    assert (sum(1 for ev in evs if ev["ph"] == "b")
+            == sum(1 for ev in evs if ev["ph"] == "e") > 0)
+    # the always-on time-series feeds counter tracks
+    assert any(ev["ph"] == "C" and ev["name"] == "queue_depth"
+               for ev in evs)
+    assert trace["traceEvents"] == evs
+
+
+# ---------------------------------------------------------------------------
+# fleet time-series
+# ---------------------------------------------------------------------------
+def test_timeseries_ring_bounds_decimation_and_rates():
+    client = cost_spec().build()
+    for _ in range(4):
+        client.submit(slo="bulk-reprocess")
+    ts = FleetTimeSeries(maxlen=8, interval_s=0.5)
+    for i in range(100):                         # 0.25 s ticks: exact in
+        took = ts.observe(client, i * 0.25)      # binary, no fp drift
+        assert took == (i % 2 == 0)              # decimated to every 0.5 s
+    assert len(ts) == 8 and ts.total_samples == 50   # ring aged 42 out
+    tvals = ts.series("t")
+    assert tvals == sorted(tvals) and len(ts.tokens_per_s()) == 7
+    s = ts.summary()
+    assert s["retained"] == 8 and s["samples"] == 50
+    assert s["pools_min"] == s["pools_max"] == 1
+    assert s["mode_last"] == "nominal" and s["bucket_frac_last"] is None
+
+
+def test_timeseries_sampled_by_client_and_embedded_in_orbit_report():
+    client = vision_fleet_spec().build()
+    ospec = OrbitSpec(phases=[PhaseSpec("sunlit", 1.0, 100.0)],
+                      bucket_j=100.0)
+    ctrl = ospec.attach(client)
+    client.submit(slo="bulk-reprocess")
+    client.drain()
+    assert len(client.timeseries) > 0            # advance() samples it
+    assert client.timeseries.series("bucket_frac")[-1] is not None
+    rep = ctrl.report()
+    assert rep["timeseries"]["samples"] == client.timeseries.total_samples
+    assert rep["timeseries"]["mode_last"] == ctrl.mode
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec: declarative recorder enablement
+# ---------------------------------------------------------------------------
+def test_fleet_spec_trace_field_round_trips_and_enables():
+    spec = cost_spec(trace=True)
+    d = spec.to_dict()
+    restored = FleetSpec.from_dict(json.loads(json.dumps(d)))
+    assert restored.to_dict() == d and restored.trace is True
+    client = restored.build()
+    assert client.tracer.enabled
+    h = client.submit(slo="bulk-reprocess")
+    client.drain()
+    assert client.tracer.closed(h.rid)
+    assert cost_spec().to_dict()["trace"] is False
+
+
+# ---------------------------------------------------------------------------
+# histogram satellites: reservoir sampling + cached percentiles
+# ---------------------------------------------------------------------------
+def test_histogram_reservoir_is_deterministic_and_reports_dropped():
+    h1, h2 = Histogram(max_samples=100), Histogram(max_samples=100)
+    for v in range(1000):
+        h1.record(v)
+        h2.record(v)
+    assert h1.samples == h2.samples              # seeded reservoir
+    assert h1.count == 1000 and h1.dropped == 900
+    assert len(h1.samples) == 100
+    s = h1.summary()
+    assert s["count"] == 1000 and s["dropped"] == 900
+    # the reservoir keeps the whole run, not its first 100 values
+    assert h1.percentile(50) > 100
+
+
+def test_histogram_under_capacity_drops_nothing():
+    h = Histogram(max_samples=100)
+    for v in range(50):
+        h.record(v)
+    assert h.count == 50 and h.dropped == 0
+    assert h.summary()["dropped"] == 0
+
+
+def test_histogram_percentile_cache_invalidates_on_record():
+    h = Histogram()
+    for v in (5.0, 1.0, 3.0):
+        h.record(v)
+    assert h.percentile(50) == 3.0               # caches the sorted view
+    h.record(0.0)
+    h.record(0.0)
+    assert h.percentile(50) == 1.0               # record dirtied the cache
+    assert h.percentile(0) == 0.0 and h.percentile(100) == 5.0
+    assert h.mean == pytest.approx(9.0 / 5)
+
+
+# ---------------------------------------------------------------------------
+# snapshot schema golden: the keys monitors depend on
+# ---------------------------------------------------------------------------
+FLEET_KEYS = {
+    "admitted", "rejected", "completed", "violations", "dropped",
+    "failovers", "reschedules", "energy_deferred", "energy_rejected",
+    "pools_added", "pools_retired", "energy_j", "queue_depth", "pools",
+    "latency_by_class", "violations_by_class",
+}
+POOL_KEYS = {
+    "dispatched", "completed", "evicted", "batches", "energy_j", "busy_s",
+    "tokens_generated", "tokens_per_s", "decode_tokens", "decode_s",
+    "decode_tokens_per_s", "prefill_tokens", "deferrals",
+    "queue_depth_now", "load_now", "queue_depth", "batch_size",
+    "slot_occupancy",
+}
+HIST_KEYS = {"count", "mean", "p50", "p99", "dropped"}
+
+
+def test_telemetry_snapshot_schema_golden():
+    """The snapshot dict is the contract every external consumer reads
+    (orbit controller, benches, CI gates, dashboards).  Growing it is
+    fine — this golden makes renames and removals a deliberate act:
+    update the key sets here in the same change that edits
+    ``Telemetry.snapshot()`` / ``PoolCounters.summary()``."""
+    client = cost_spec().build()
+    client.submit(slo="bulk-reprocess")
+    client.drain()
+    snap = client.telemetry
+    assert set(snap) == FLEET_KEYS
+    pool = snap["pools"]["board"]
+    assert set(pool) == POOL_KEYS
+    for hist_key in ("queue_depth", "batch_size", "slot_occupancy"):
+        assert set(pool[hist_key]) == HIST_KEYS
+    assert all(set(v) == HIST_KEYS
+               for v in snap["latency_by_class"].values())
+    json.dumps(snap)                             # JSON-serializable whole
