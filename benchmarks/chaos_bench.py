@@ -1,0 +1,340 @@
+"""Radiation-hardening chaos benchmark: overhead gate + seeded campaign.
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke] [--check] \
+        [--out BENCH_chaos.json]
+
+Two scenarios:
+
+``chaos_overhead`` — the same engine-backed fleet serves the same
+seeded workload with the hardening layer off and on (no faults),
+interleaved best-of-N on both a process-CPU and a decode-wall basis
+(the noise policy of ``decode_bench`` / ``obs_bench``).  Hardening buys
+per-block integrity digests, the fused decode-path verify, and the
+background scrub pass; the gate says that insurance must cost under
+``--max-overhead`` (default 3%) of decode tokens/s — and that the
+hardened arm's outputs are *bit-identical* to hardening-off, so the
+layer is pure observation until an upset actually lands.
+
+``chaos_campaign`` — a seeded randomized SEU campaign over a two-pool
+fleet (one unified hardened engine pool, one disaggregated
+prefill->decode pool) under open-loop traffic, with the orbit storm
+ladder attached: one ``kv_bitflip``, one ``slot_stall``, one
+``handoff_loss``, and one transient control-plane pool fault, all at
+seed-jittered times.  Under ``--check`` the campaign fails unless:
+
+  * **exactly-once accounting** — ``admitted == completed + dropped``
+    and every drop carries a reason code;
+  * **zero corrupted tokens** — every completed request's final tokens
+    bit-match a clean (fault-free) run of the same seeded workload,
+    recovery and failover included;
+  * **detection fired** — each injected fault class shows up in
+    telemetry (bitflip detected + block quarantined, watchdog trip,
+    handoff replayed, failover + retry);
+  * **no open chains** — the flight recorder closes every request span
+    chain and no engine lane span leaks.
+
+Results (including the storm ladder's pressure trace) land in
+``BENCH_chaos.json`` for the CI artifact trail.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+PROMPT_LEN = 8
+MAX_NEW = 6
+BLOCK = 4
+# the overhead gate decodes much longer sequences than the campaign:
+# each timed pass needs enough decode steps that the on/off wall ratio
+# measures the fused verify, not scheduler jitter on ~ms passes
+OVERHEAD_MAX_NEW = 48
+
+
+def _model():
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as T
+    cfg = ModelConfig(name="tiny-mha", family="dense", num_layers=2,
+                      d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=256, remat=False)
+    return cfg, T.model_init(jax.random.PRNGKey(0), cfg)
+
+
+def _overhead_model():
+    """Overhead-gate model: big enough that a decode step is real work
+    (~ms), not dispatch overhead.  On the tiny campaign model the
+    full-pool checksum sweep rivals the forward pass itself and the
+    gate would measure the model, not the hardening layer; at
+    ``d_model=256`` the compute-to-pool ratio is in the regime any
+    deployment-sized config lives in."""
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as T
+    cfg = ModelConfig(name="small-mha", family="dense", num_layers=2,
+                      d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
+                      vocab_size=256, remat=False)
+    return cfg, T.model_init(jax.random.PRNGKey(0), cfg)
+
+
+# ---------------------------------------------------------------------------
+# scenario 1: hardening overhead (no faults)
+# ---------------------------------------------------------------------------
+def _overhead_fleet(harden: bool, slots: int):
+    from repro.serving import FleetSpec, PoolSpec
+    return FleetSpec(
+        pools=[PoolSpec("lm", ("tpu_v5e_bf16",), backend="engine",
+                        capacity=1, max_window=slots, max_wait_s=0.0,
+                        max_slots=slots, prompt_len=PROMPT_LEN,
+                        max_new=OVERHEAD_MAX_NEW, block_size=BLOCK,
+                        harden=harden)],
+        workload="transformer", seq_len=PROMPT_LEN)
+
+
+def _serve_once(client, n_requests: int, seed: int):
+    """One timed pass; returns (tokens/cpu-s, decode tokens/wall-s,
+    {rid-order index: tokens})."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, 256, int(rng.integers(2, PROMPT_LEN + 1)))
+               .astype(np.int32) for _ in range(n_requests)]
+    pc = client.router.telemetry.pools["lm"]
+    d_tok0, d_s0 = pc.decode_tokens, pc.decode_s
+    c0 = time.process_time()
+    handles = [client.submit(p, slo="offline", max_new=OVERHEAD_MAX_NEW)
+               for p in prompts]
+    client.drain()
+    cpu = time.process_time() - c0
+    toks = {i: tuple(h.tokens) for i, h in enumerate(handles)}
+    decode_tps = ((pc.decode_tokens - d_tok0)
+                  / max(pc.decode_s - d_s0, 1e-9))
+    return sum(map(len, toks.values())) / max(cpu, 1e-9), decode_tps, toks
+
+
+def run_overhead(n_requests: int = 24, repeats: int = 9, slots: int = 4,
+                 seed: int = 0, check: bool = False,
+                 max_overhead: float = 0.03) -> dict:
+    model = _overhead_model()
+    clients = {k: _overhead_fleet(k == "on", slots).build(model=model)
+               for k in ("off", "on")}
+    best_cpu = {"off": 0.0, "on": 0.0}
+    best_dec = {"off": 0.0, "on": 0.0}
+    outputs = {"off": {}, "on": {}}
+    # interleave the repeats so co-tenant drift on a shared box hits
+    # both arms alike; the gate ratio is the MEDIAN of per-pair
+    # (off, on back-to-back) ratios — within a pair the drift is the
+    # same for both arms, and the median shrugs off the pairs a noise
+    # spike still lands inside (best-of-N of each arm independently
+    # wobbled several % on a loaded box because a clean multi-second
+    # window for one arm need not exist for the other)
+    pair_overheads = []
+    for rep in range(repeats):
+        pair_dec = {}
+        for kind, client in clients.items():
+            cpu_tps, dec_tps, toks = _serve_once(client, n_requests,
+                                                 seed + rep)
+            best_cpu[kind] = max(best_cpu[kind], cpu_tps)
+            best_dec[kind] = max(best_dec[kind], dec_tps)
+            pair_dec[kind] = dec_tps
+            outputs[kind][rep] = toks
+        pair_overheads.append(1.0 - pair_dec["on"]
+                              / max(pair_dec["off"], 1e-9))
+    overhead = float(np.median(pair_overheads))
+    bit_identical = outputs["on"] == outputs["off"]
+    eng = clients["on"].engines["lm"]
+    out = {
+        "scenario": "chaos_overhead",
+        "requests_per_rep": n_requests, "repeats": repeats,
+        "slots": slots, "max_new": OVERHEAD_MAX_NEW,
+        "off_decode_tokens_per_s": round(best_dec["off"], 1),
+        "on_decode_tokens_per_s": round(best_dec["on"], 1),
+        "off_tokens_per_cpu_s": round(best_cpu["off"], 1),
+        "on_tokens_per_cpu_s": round(best_cpu["on"], 1),
+        "overhead": round(overhead, 4),
+        "max_overhead": max_overhead,
+        "bit_identical": bit_identical,
+        "scrubbed_blocks": eng.scrubbed_blocks,
+    }
+    if check:
+        assert bit_identical, \
+            "hardened no-fault outputs differ from hardening-off"
+        assert eng.bitflips_detected == 0, "phantom detection with no SEU"
+        assert overhead <= max_overhead, (
+            f"hardening overhead {overhead:.1%} exceeds the "
+            f"{max_overhead:.0%} decode-tokens/s gate (off "
+            f"{best_dec['off']:.0f} vs on {best_dec['on']:.0f} tok/s)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scenario 2: seeded randomized SEU campaign
+# ---------------------------------------------------------------------------
+def _campaign_fleet(seed: int, faulted: bool):
+    from repro.serving import FaultSpec, FleetSpec, PoolSpec
+    pools = [
+        PoolSpec("vpu", ("tpu_v5e_bf16",), backend="engine", capacity=1,
+                 max_window=4, max_wait_s=0.0, max_slots=3,
+                 prompt_len=PROMPT_LEN, max_new=MAX_NEW, block_size=BLOCK,
+                 harden=True, watchdog_steps=3),
+        PoolSpec("dpu", ("tpu_v5e_bf16",), backend="engine", capacity=1,
+                 max_window=4, max_wait_s=0.0, max_slots=3,
+                 prompt_len=PROMPT_LEN, max_new=MAX_NEW, block_size=BLOCK,
+                 max_prompt_len=2 * PROMPT_LEN, prefill_backend="engine",
+                 harden=True, watchdog_steps=3),
+    ]
+    faults = []
+    if faulted:
+        rng = np.random.default_rng(seed)
+        t = lambda lo, hi: round(float(rng.uniform(lo, hi)), 4)  # noqa: E731
+        faults = [
+            FaultSpec("vpu", at_s=t(0.001, 0.01), kind="kv_bitflip",
+                      seed=int(rng.integers(1 << 16))),
+            # stall the disagg pool's decode slot: under open-loop load
+            # it is saturated through this window, so the latched fault
+            # is guaranteed to sit under a live request until the
+            # watchdog trips it (an empty stalled slot trips nothing —
+            # correctly)
+            FaultSpec("dpu", at_s=t(0.01, 0.05), duration_s=0.3,
+                      kind="slot_stall", slot=0),
+            FaultSpec("dpu", at_s=t(0.001, 0.02), kind="handoff_loss"),
+            FaultSpec("vpu", at_s=t(0.05, 0.1), duration_s=0.2,
+                      kind="pool"),
+        ]
+    return FleetSpec(pools=pools, workload="transformer",
+                     seq_len=PROMPT_LEN, trace=faulted, faults=faults)
+
+
+def _run_campaign_arm(seed: int, n_requests: int, faulted: bool,
+                      model) -> tuple:
+    from repro.orbit import OrbitSpec, PhaseSpec
+    from repro.router import SLOClass
+    from repro.serving import LMWork, open_loop
+    client = _campaign_fleet(seed, faulted).build(model=model)
+    ctrl = None
+    if faulted:
+        # storm ladder: hardening-event pressure floors the mode at
+        # conserve even though the battery never runs low
+        ctrl = OrbitSpec(phases=[PhaseSpec("sunlit", 1e4, 1e6)],
+                         bucket_j=1e6, storm_events=1).attach(client)
+    rng = np.random.default_rng(seed + 1)
+
+    def payload(prng):
+        return LMWork(prng.integers(0, 256, int(prng.integers(
+            2, PROMPT_LEN + 1))).astype(np.int32), max_new=MAX_NEW)
+
+    handles = open_loop(client, [SLOClass("offline", max_latency_s=600.0)],
+                        [1.0], rate_hz=400.0, n_requests=n_requests,
+                        seed=int(rng.integers(1 << 16)), dt=0.002,
+                        payload_fn=payload)
+    client.drain()
+    return client, ctrl, {h.rid: (tuple(h.tokens), h.dropped)
+                          for h in handles}
+
+
+def run_campaign(n_requests: int = 32, seed: int = 7,
+                 check: bool = False) -> dict:
+    model = _model()
+    _, _, clean = _run_campaign_arm(seed, n_requests, False, model)
+    client, ctrl, chaos = _run_campaign_arm(seed, n_requests, True, model)
+    snap = client.router.telemetry.snapshot()
+    pools = snap["pools"]
+    corrupted = [rid for rid, (toks, dropped) in chaos.items()
+                 if not dropped and toks != clean[rid][0]]
+    dropped = [rid for rid, (_, d) in chaos.items() if d]
+    tr = client.tracer
+    events = {
+        "bitflips_detected": snap["bitflips_detected"],
+        "blocks_quarantined": snap["blocks_quarantined"],
+        "watchdog_trips": sum(p["watchdog_trips"] for p in pools.values()),
+        "handoffs_replayed": snap["handoffs_replayed"],
+        "failovers": snap["failovers"],
+        "retries": snap["retries"],
+    }
+    out = {
+        "scenario": "chaos_campaign",
+        "requests": n_requests, "seed": seed,
+        "admitted": snap["admitted"], "completed": snap["completed"],
+        "dropped": snap["dropped"],
+        "drops_by_reason": snap["drops_by_reason"],
+        "corrupted_tokens": len(corrupted),
+        "events": events,
+        "storm_pressure_peak": (None if ctrl is None else
+                                round(max(
+                                    (abs(p) for p in [ctrl.storm_pressure]),
+                                    default=0.0), 4)),
+        "mode_transitions": [] if ctrl is None else [
+            {"t": t, "mode": m} for t, m in ctrl.transitions],
+        "open_spans": len(tr.open_spans()),
+    }
+    if check:
+        assert not corrupted, \
+            f"corrupted final tokens on requests {corrupted[:5]}"
+        assert snap["admitted"] == snap["completed"] + snap["dropped"], \
+            (snap["admitted"], snap["completed"], snap["dropped"])
+        assert len(dropped) == snap["dropped"]
+        reasoned = sum(snap["drops_by_reason"].values())
+        assert reasoned >= snap["dropped"], "drop without a reason code"
+        for name, n in events.items():
+            assert n >= 1, f"fault campaign never exercised {name}"
+        assert not tr.open_spans(), \
+            f"orphan spans after drain: {tr.open_spans()}"
+        assert all(tr.closed(rid) for rid in tr.request_ids), \
+            "a traced request never saw a terminal outcome"
+        assert any(m == "conserve" for _, m in (ctrl.transitions or [])), \
+            "storm pressure never floored the mode"
+    return out
+
+
+def main(csv: bool = True, out: str | None = None, smoke: bool = False,
+         check: bool = False, max_overhead: float = 0.03,
+         seed: int = 7):
+    results = [
+        # keep 9 repeats even in smoke: the overhead gate is a
+        # best-of-N ratio and needs the samples against noise
+        run_overhead(n_requests=16 if smoke else 32, repeats=9,
+                     check=check, max_overhead=max_overhead),
+        run_campaign(n_requests=24 if smoke else 48, seed=seed,
+                     check=check),
+    ]
+    if csv:
+        r = results[0]
+        us = 1e6 / max(r["on_decode_tokens_per_s"], 1e-9)
+        print(f"{r['scenario']},{us:.1f},"
+              f"off_tps={r['off_decode_tokens_per_s']};"
+              f"on_tps={r['on_decode_tokens_per_s']};"
+              f"overhead={r['overhead']};"
+              f"bit_identical={r['bit_identical']}")
+        c = results[1]
+        ev = c["events"]
+        print(f"{c['scenario']},0,"
+              f"admitted={c['admitted']};completed={c['completed']};"
+              f"dropped={c['dropped']};corrupted={c['corrupted_tokens']};"
+              f"bitflips={ev['bitflips_detected']};"
+              f"trips={ev['watchdog_trips']};"
+              f"handoffs_replayed={ev['handoffs_replayed']};"
+              f"retries={ev['retries']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write full JSON here")
+    ap.add_argument("--smoke", action="store_true", help="small CI run")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on overhead > --max-overhead, corrupted "
+                         "tokens, accounting drift, a fault class that "
+                         "never fired, or an open trace chain")
+    ap.add_argument("--max-overhead", type=float, default=0.03,
+                    help="with --check: max hardened decode tokens/s "
+                         "loss vs hardening-off (fraction; default 0.03)")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="campaign seed (fault times + sites + traffic)")
+    args = ap.parse_args()
+    main(out=args.out, smoke=args.smoke, check=args.check,
+         max_overhead=args.max_overhead, seed=args.seed)

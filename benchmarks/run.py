@@ -27,6 +27,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                    per-request span tracing on vs off (``--trace PATH``
                    additionally writes the traced run as Chrome
                    trace_event JSON for Perfetto / chrome://tracing)
+  * chaos_*      — radiation-hardened data plane: hardening (per-block
+                   digests + fused decode-path verify + scrub) decode
+                   overhead vs hardening-off, and a seeded SEU campaign
+                   (kv_bitflip / slot_stall / handoff_loss / pool fault)
+                   gated on zero corrupted tokens and exactly-once
+                   accounting
 
 ``--check`` turns invariants into failures across the serving benches:
 truncated open-loop traces (the ``max_s`` safety net fired, so the
@@ -58,10 +64,10 @@ def main() -> None:
                          "quickstart in ROADMAP.md")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (coproc_bench, decode_bench, fig2_throughput,
-                            obs_bench, orbit_bench, partition_sweep,
-                            precision_micro, roofline_bench, router_bench,
-                            table1_ursonet)
+    from benchmarks import (chaos_bench, coproc_bench, decode_bench,
+                            fig2_throughput, obs_bench, orbit_bench,
+                            partition_sweep, precision_micro,
+                            roofline_bench, router_bench, table1_ursonet)
 
     if args.check:
         # any open_loop truncation inside a bench is a hard failure:
@@ -88,6 +94,7 @@ def main() -> None:
                       min_ratio=1.0 if args.check else 0.0)
     obs_bench.main(smoke=not args.full, check=args.check,
                    trace_out=args.trace)
+    chaos_bench.main(smoke=not args.full, check=args.check)
 
 
 if __name__ == "__main__":

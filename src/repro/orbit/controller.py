@@ -55,6 +55,12 @@ class FleetController:
         self.mode = "nominal"
         self.deferred: List = []               # parked RouterRequests
         self.transitions: List[Tuple[float, str]] = []
+        # radiation-storm pressure: leaky integrator of hardening-event
+        # deltas (retries + watchdog trips + bitflips + quarantines +
+        # handoff replays); at/above spec.storm_events the mode floors
+        # at "conserve"
+        self.storm_pressure = 0.0
+        self._seen_events = self._hardening_events()
         self._seen_j = self._fleet_energy_j()
         self.initial_level_j = bucket.level_j
         bucket.rebase(client.now)              # no phantom pre-attach harvest
@@ -69,6 +75,20 @@ class FleetController:
         telemetry, so this is monotone across scale-downs."""
         return sum(c.energy_j
                    for c in self.client.router.telemetry.pools.values())
+
+    def _hardening_events(self) -> int:
+        """Cumulative count of every hardening event the fleet has
+        recorded — the storm ladder's raw signal."""
+        t = self.client.router.telemetry
+        return (t.retries + t.watchdog_trips
+                + sum(c.bitflips_detected + c.blocks_quarantined
+                      + c.watchdog_trips + c.handoffs_replayed
+                      for c in t.pools.values()))
+
+    @property
+    def storm(self) -> bool:
+        return (self.spec.storm_events > 0
+                and self.storm_pressure >= self.spec.storm_events)
 
     @property
     def deferred_count(self) -> int:
@@ -107,6 +127,12 @@ class FleetController:
         if spent > self._seen_j:               # drain against real work
             self.bucket.drain(spent - self._seen_j)
             self._seen_j = spent
+        if self.spec.storm_events > 0:
+            ev = self._hardening_events()
+            self.storm_pressure = (self.storm_pressure
+                                   * self.spec.storm_decay
+                                   + (ev - self._seen_events))
+            self._seen_events = ev
         self._set_mode(now)
         if self.mode == "nominal" and self.deferred:
             self._release(now)
@@ -127,11 +153,17 @@ class FleetController:
             mode = "conserve"
         else:
             mode = "nominal"
+        if mode == "nominal" and self.storm:
+            # storm ladder: retry pressure floors the mode at conserve
+            # even on a healthy battery (scale-ups are suppressed for
+            # free — the autoscaler already gates on mode)
+            mode = "conserve"
         if mode != self.mode or not self.transitions:
             self.mode = mode
             self.transitions.append((round(now, 4), mode))
             self.client.router.telemetry.tracer.event(
-                "mode", now, mode=mode, bucket_frac=round(f, 4))
+                "mode", now, mode=mode, bucket_frac=round(f, 4),
+                storm=self.storm)
         self.client.router.energy_mode = ("nominal" if mode == "nominal"
                                           else "conserve")
 
@@ -169,6 +201,7 @@ class FleetController:
         return {
             "mode": self.mode,
             "deferred_waiting": self.deferred_count,
+            "storm_pressure": round(self.storm_pressure, 4),
             "bucket": self.bucket.summary(),
             # per-pool spend the bucket drained against — disaggregated
             # pools show their co-processing split here (the `.prefill`

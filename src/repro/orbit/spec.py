@@ -55,6 +55,16 @@ class OrbitSpec:
     hysteresis_frac: float = 0.05         # extra charge needed to mode-up
     defer_max_priority: int = 0           # SLO priority <= this is deferrable
     scaling: Optional[ScalingPolicy] = None
+    # radiation-storm response: the controller keeps a leaky integrator
+    # of hardening events (retries, watchdog trips, detected bitflips,
+    # quarantined blocks, replayed handoffs).  While the pressure is at
+    # or above ``storm_events`` the dispatch mode floors at "conserve" —
+    # cheap plans, deferred background work, no scale-ups — even on a
+    # full battery: a storm spikes the retry bill, so spending the
+    # margin on throughput invites the next upset to waste it.  0
+    # disables the ladder.
+    storm_events: int = 0                 # pressure threshold; 0 -> off
+    storm_decay: float = 0.9              # per-tick integrator decay
 
     def __post_init__(self):
         if not 0.0 <= self.critical_frac <= self.conserve_frac <= 1.0:
@@ -63,6 +73,8 @@ class OrbitSpec:
                 f"{self.critical_frac} / {self.conserve_frac}")
         if self.hysteresis_frac < 0.0:
             raise ValueError("hysteresis_frac must be >= 0")
+        if not 0.0 <= self.storm_decay < 1.0:
+            raise ValueError("storm_decay must be in [0, 1)")
 
     # ------------------------------------------------------------------
     # serialization (JSON round-trip, like FleetSpec)
@@ -78,6 +90,8 @@ class OrbitSpec:
             "defer_max_priority": self.defer_max_priority,
             "scaling": (None if self.scaling is None
                         else self.scaling.to_dict()),
+            "storm_events": self.storm_events,
+            "storm_decay": self.storm_decay,
         }
 
     @classmethod

@@ -47,7 +47,7 @@ should not construct :class:`Router` directly.
 Demo: ``PYTHONPATH=src python -m repro.launch.route --requests 400``.
 Bench: ``PYTHONPATH=src python -m benchmarks.router_bench``.
 """
-from repro.router.dispatch import Router
+from repro.router.dispatch import RetryPolicy, Router
 from repro.router.failover import FailoverController
 from repro.router.pool import (AcceleratorPool, CostModelExecutor,
                                PoolState, RouterRequest)
@@ -57,6 +57,7 @@ from repro.router.telemetry import Telemetry
 
 __all__ = [
     "AcceleratorPool", "CostModelExecutor", "FailoverController",
-    "PoolState", "Router", "RouterRequest", "SLOClass", "SLO_CLASSES",
+    "PoolState", "RetryPolicy", "Router", "RouterRequest", "SLOClass",
+    "SLO_CLASSES",
     "Telemetry", "admissible_plans", "select_plan",
 ]

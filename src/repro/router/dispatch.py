@@ -24,7 +24,9 @@ a property the test suite checks directly.
 """
 from __future__ import annotations
 
+import heapq
 import math
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.cost_model import LayerCost
@@ -34,6 +36,31 @@ from repro.router.slo import SLOClass
 from repro.router.telemetry import Telemetry
 
 _EPS = 1e-9
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded failover redispatch, per SLO class.
+
+    The first redispatch after an eviction is immediate (a healthy
+    fleet should re-place displaced work the same tick); every further
+    attempt waits ``backoff_s * multiplier**(attempt-2)`` on the virtual
+    clock, capped at ``max_backoff_s``, so a flapping pool cannot spin
+    the router hot.  Past ``max_attempts`` the request drops with the
+    ``retry_exhausted`` reason code instead of retrying forever.
+    ``give_up_past_deadline`` optionally drops a queued retry whose
+    deadline already passed (``deadline`` reason) rather than serving it
+    best-effort."""
+    max_attempts: int = 5
+    backoff_s: float = 0.05
+    multiplier: float = 2.0
+    max_backoff_s: float = 2.0
+    give_up_past_deadline: bool = False
+
+    def delay_s(self, attempt: int) -> float:
+        """Backoff before redispatch ``attempt`` (2nd and later)."""
+        return min(self.backoff_s * self.multiplier ** max(attempt - 2, 0),
+                   self.max_backoff_s)
 
 
 class Router:
@@ -62,6 +89,13 @@ class Router:
         self._sched_kw = dict(batch=batch, max_segments=max_segments,
                               accuracy_penalty=accuracy_penalty,
                               cut_candidates=cut_candidates)
+        # bounded failover retries: per-SLO-class overrides on top of one
+        # default policy; queued (backed-off) retries wait on this heap
+        # and drain in step(now)
+        self.default_retry = RetryPolicy()
+        self.retry_policies: Dict[str, RetryPolicy] = {}
+        self._retries: List[Tuple[float, int, RouterRequest]] = []
+        self._retry_seq = 0
         self.all_profiles = sorted({prof for p in pools
                                     for prof in p.profiles})
         self.frontier: List[ScheduledPlan] = []
@@ -220,12 +254,35 @@ class Router:
         self.telemetry.admitted += 1
         return True
 
+    def retry_policy_for(self, slo_name: str) -> RetryPolicy:
+        return self.retry_policies.get(slo_name, self.default_retry)
+
     def redispatch(self, req: RouterRequest, now: float) -> None:
-        """Failover path: the request is already admitted, so it is never
-        re-rejected — if no surviving plan fits its SLO we still serve it
-        best-effort (fastest surviving estimate) and let completion record
-        the violation.  Only a total loss (nothing routable) drops it."""
+        """Failover path, under the request's class
+        :class:`RetryPolicy`: the first redispatch is immediate, later
+        ones wait out an exponential backoff on the virtual clock, and
+        the attempt budget is hard — a request that keeps getting
+        displaced drops with ``retry_exhausted`` instead of looping."""
         req.rerouted += 1
+        policy = self.retry_policy_for(req.slo.name)
+        if req.rerouted > policy.max_attempts:
+            self._drop(req, now, "retry_exhausted")
+            return
+        self.telemetry.retries += 1
+        if req.rerouted == 1:
+            self._redispatch_now(req, now)
+            return
+        heapq.heappush(self._retries,
+                       (now + policy.delay_s(req.rerouted),
+                        self._retry_seq, req))
+        self._retry_seq += 1
+
+    def _redispatch_now(self, req: RouterRequest, now: float) -> None:
+        """One redispatch attempt: the request is already admitted, so it
+        is never re-rejected — if no surviving plan fits its SLO we still
+        serve it best-effort (fastest surviving estimate) and let
+        completion record the violation.  Only a total loss (nothing
+        routable) drops it."""
         choice = self._choose(req.slo)
         if choice is None:
             cands = []
@@ -236,13 +293,17 @@ class Router:
                 est, _, plan, pool = min(cands, key=lambda c: c[:2])
                 choice = (plan, pool)
         if choice is None:
-            req.dropped = True
-            req.violated = True
-            self.telemetry.record_drop(req.slo.name)
-            self.telemetry.tracer.end_request(req.rid, now, "dropped",
-                                              rerouted=req.rerouted)
+            self._drop(req, now, "no_route")
             return
         self._dispatch(req, *choice, now)
+
+    def _drop(self, req: RouterRequest, now: float, reason: str) -> None:
+        req.dropped = True
+        req.violated = True
+        self.telemetry.record_drop(req.slo.name, reason)
+        self.telemetry.tracer.end_request(req.rid, now, "dropped",
+                                          rerouted=req.rerouted,
+                                          reason=reason)
 
     def _dispatch(self, req: RouterRequest, plan: ScheduledPlan,
                   pool: AcceleratorPool, now: float) -> None:
@@ -254,6 +315,13 @@ class Router:
     # ------------------------------------------------------------------
     def step(self, now: float) -> List[RouterRequest]:
         """Advance every pool one tick; record completions + violations."""
+        while self._retries and self._retries[0][0] <= now:
+            _, _, req = heapq.heappop(self._retries)
+            policy = self.retry_policy_for(req.slo.name)
+            if policy.give_up_past_deadline and now > req.deadline_s + _EPS:
+                self._drop(req, now, "deadline")
+                continue
+            self._redispatch_now(req, now)
         completed: List[RouterRequest] = []
         for pool in self.pools.values():
             completed.extend(pool.step(now))
@@ -269,4 +337,5 @@ class Router:
 
     @property
     def outstanding(self) -> int:
-        return sum(p.load for p in self.pools.values())
+        # backed-off retries are still live, owed work
+        return sum(p.load for p in self.pools.values()) + len(self._retries)

@@ -30,6 +30,11 @@ class FailoverController:
         self.injector = injector
         self.events: List[PoolFaultEvent] = []     # applied, for reports
         self.frontier_sizes: List[tuple] = []      # (t, |frontier|) trace
+        # data-plane faults (kv_bitflip / slot_stall / handoff_loss) act
+        # inside a pool's engine, not on the pool itself; the serving
+        # client registers this handler to deliver them — the router
+        # layer stays ignorant of engine internals
+        self.data_plane = None             # callable(event) or None
 
     def poll(self, now: float) -> List[RouterRequest]:
         """Apply every fault event due by ``now``; returns the requests
@@ -37,6 +42,10 @@ class FailoverController:
         displaced_total: List[RouterRequest] = []
         for ev in self.injector.poll(now):
             self.events.append(ev)
+            if ev.fault.kind != "pool":
+                if self.data_plane is not None:
+                    self.data_plane(ev)
+                continue
             pool = self.router.pools.get(ev.fault.pool)
             if pool is None:
                 continue

@@ -99,6 +99,10 @@ class PoolCounters:
     deferrals: int = 0                    # OutOfBlocks admission deferrals
     queue_depth_now: int = 0              # live queue depth (this instant)
     load_now: int = 0                     # live queued + in-flight
+    bitflips_detected: int = 0            # KV checksum mismatches caught
+    blocks_quarantined: int = 0           # KV blocks pulled from service
+    watchdog_trips: int = 0               # stalled slots evicted
+    handoffs_replayed: int = 0            # lost/corrupt handoffs re-run
     queue_depth: Histogram = field(default_factory=Histogram)
     batch_size: Histogram = field(default_factory=Histogram)
     slot_occupancy: Histogram = field(default_factory=Histogram)
@@ -130,6 +134,10 @@ class PoolCounters:
                 "deferrals": self.deferrals,
                 "queue_depth_now": self.queue_depth_now,
                 "load_now": self.load_now,
+                "bitflips_detected": self.bitflips_detected,
+                "blocks_quarantined": self.blocks_quarantined,
+                "watchdog_trips": self.watchdog_trips,
+                "handoffs_replayed": self.handoffs_replayed,
                 "queue_depth": self.queue_depth.summary(),
                 "batch_size": self.batch_size.summary(),
                 "slot_occupancy": self.slot_occupancy.summary()}
@@ -152,8 +160,15 @@ class Telemetry:
         self.completed = 0
         self.violations = 0
         self.dropped = 0                  # admitted but unservable (no pool)
+        # why admitted requests were dropped, zero-initialized so the
+        # snapshot schema is stable whether or not a reason ever fires
+        self.drops_by_reason: Dict[str, int] = {
+            "no_route": 0, "retry_exhausted": 0, "dry_battery": 0,
+            "deadline": 0}
         self.failovers = 0
         self.reschedules = 0
+        self.retries = 0                  # bounded redispatch attempts
+        self.watchdog_trips = 0           # client-level no-progress trips
         self.energy_deferred = 0          # parked by the orbit energy cap
         self.energy_rejected = 0          # rejected with the battery dry
         self.pools_added = 0              # autoscaler / live growth events
@@ -173,7 +188,17 @@ class Telemetry:
             self.violations += 1
             self.violations_by_class[slo_name] += 1
 
-    def record_drop(self, slo_name: str) -> None:
+    def record_drop(self, slo_name: str, reason: str = "no_route",
+                    admitted: bool = True) -> None:
+        """Count one dropped request under its reason code.  A drop at
+        the admission gate itself (``admitted=False`` — e.g. dry-battery
+        rejection) keeps the reason ledger without inflating the
+        admitted-request ``dropped`` counter the accounting invariant
+        (admitted == completed + dropped) is checked against."""
+        self.drops_by_reason[reason] = (
+            self.drops_by_reason.get(reason, 0) + 1)
+        if not admitted:
+            return
         self.dropped += 1
         self.violations += 1
         self.violations_by_class[slo_name] += 1
@@ -185,8 +210,19 @@ class Telemetry:
             "completed": self.completed,
             "violations": self.violations,
             "dropped": self.dropped,
+            "drops_by_reason": dict(sorted(self.drops_by_reason.items())),
             "failovers": self.failovers,
             "reschedules": self.reschedules,
+            "retries": self.retries,
+            "watchdog_trips": self.watchdog_trips,
+            # fleet-wide hardening aggregates (sums of the per-pool
+            # counters, so a dashboard needs one read)
+            "bitflips_detected": sum(p.bitflips_detected
+                                     for p in self.pools.values()),
+            "blocks_quarantined": sum(p.blocks_quarantined
+                                      for p in self.pools.values()),
+            "handoffs_replayed": sum(p.handoffs_replayed
+                                     for p in self.pools.values()),
             "energy_deferred": self.energy_deferred,
             "energy_rejected": self.energy_rejected,
             "pools_added": self.pools_added,

@@ -42,11 +42,27 @@ class FaultInjector:
 
 @dataclass(frozen=True)
 class PoolFault:
-    """One scheduled pool-level upset on the router's clock."""
+    """One scheduled upset on the router's clock.
+
+    ``kind`` picks the blast radius:
+
+    * ``"pool"`` (default, the original behaviour) — the named pool loses
+      ``lost_profiles`` (or everything) and in-flight work fails over.
+    * ``"kv_bitflip"`` — a single event upset flips one bit in a live
+      paged KV block of the pool's engine; ``seed`` picks the bit.
+    * ``"slot_stall"`` — engine slot ``slot`` latches up: the next
+      request admitted there makes no decode progress until the fault
+      recovers (the watchdog evicts and replays it meanwhile).
+    * ``"handoff_loss"`` — the next prefill->decode ``PrefillHandoff``
+      payload is dropped at the seam and must be re-requested.
+    """
     pool: str
     at_s: float
     lost_profiles: Tuple[str, ...] = ()     # () -> the whole pool drops out
     duration_s: float = math.inf            # finite -> transient (SEU scrub)
+    kind: str = "pool"
+    slot: int = 0                           # slot_stall target
+    seed: int = 0                           # kv_bitflip site selector
 
     @property
     def transient(self) -> bool:
@@ -117,20 +133,33 @@ class FaultTolerantRunner:
     def run(self, state: TrainState, data_fn, num_steps: int,
             on_step=None, log_every: int = 10):
         target = int(state.step) + num_steps
-        history = []
+        # Per-step metric records, keyed by step so a restarted segment's
+        # replay overwrites (bit-identically, by determinism) instead of
+        # duplicating.  The trainer's own segment history used to be the
+        # source, but a mid-segment fault discarded everything that
+        # segment had logged — steps completed before the last checkpoint
+        # silently vanished from the returned history.
+        records: dict = {}
+
+        def _observe(s, st, metrics):
+            records[s + 1] = {"step": s + 1,
+                              "loss": float(metrics["loss"]),
+                              "grad_norm": float(metrics["grad_norm"])}
+            if on_step is not None:
+                on_step(s, st, metrics)
+
         # always have a step-0 baseline to restart from
         if self.ckpt.latest_step() is None:
             self.ckpt.save(int(state.step), state, blocking=True)
         while int(state.step) < target:
             try:
-                state, h = self.trainer.run(
+                state, _ = self.trainer.run(
                     state, data_fn, target - int(state.step),
-                    ckpt=self.ckpt, on_step=on_step, log_every=log_every)
-                history.extend(h)
+                    ckpt=self.ckpt, on_step=_observe, log_every=log_every)
             except Exception as e:              # noqa: BLE001 — any step fault
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise RuntimeError(
                         f"exceeded {self.max_restarts} restarts") from e
                 state = self._restore()
-        return state, history
+        return state, [records[k] for k in sorted(records)]

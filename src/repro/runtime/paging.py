@@ -52,11 +52,26 @@ class PagedKVState(NamedTuple):
 
 
 class BlockAllocator:
-    """Host-side free-list over the shared pool."""
+    """Host-side free-list over the shared pool.
+
+    Radiation hardening adds a *quarantine* lane: a block a scrub pass
+    found corrupted is pulled out of service (``quarantine``) and never
+    re-enters the free list — ``release`` silently skips it, so every
+    existing teardown path stays exact without knowing about upsets.
+    The accounting invariant is ``free + live + quarantined ==
+    num_blocks`` with ``live`` derived, which the property tests pin
+    under random op interleavings.  ``on_release`` (optional) fires once
+    per block that actually returns to the free list — the serving
+    engine hooks it to retire stale integrity digests no matter which
+    path (finalize, shared-index refcount, release_sequence) freed the
+    block.
+    """
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self.free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.quarantined: set = set()
+        self.on_release = None            # callable(block) | None
 
     def alloc(self) -> int:
         if not self.free:
@@ -65,12 +80,30 @@ class BlockAllocator:
 
     def release(self, blocks) -> None:
         for b in blocks:
-            if b >= 0:
-                self.free.append(int(b))
+            b = int(b)
+            if b < 0 or b in self.quarantined:
+                continue
+            self.free.append(b)
+            if self.on_release is not None:
+                self.on_release(b)
+
+    def quarantine(self, block: int) -> bool:
+        """Take ``block`` out of service; True if newly quarantined."""
+        b = int(block)
+        if b < 0 or b in self.quarantined:
+            return False
+        self.quarantined.add(b)
+        if b in self.free:                # upset caught while block idle
+            self.free.remove(b)
+        return True
 
     @property
     def available(self) -> int:
         return len(self.free)
+
+    @property
+    def live(self) -> int:
+        return self.num_blocks - len(self.free) - len(self.quarantined)
 
 
 def init_paged_cache(batch: int, num_blocks: int, block_size: int,
@@ -256,6 +289,105 @@ def write_prefill_chunk(state: PagedKVState, k: jnp.ndarray, v: jnp.ndarray,
                         state.lengths.at[seq].set(start + c))
 
 
+def block_checksums(state: PagedKVState, rows: jnp.ndarray) -> jnp.ndarray:
+    """Integrity checksums for pool rows ``rows`` — jit-safe.
+
+    Bit-casts each block's K and V content to unsigned integers and sums
+    them mod 2**32, so any single-event upset (one flipped bit anywhere
+    in the block) changes the checksum.  Works on plain ``[NB+1, P, KVp,
+    hd]`` pools and on the engine's sublayer-stacked ``[S, NB+1, ...]``
+    pools; rows index the block axis either way.  Pass the trash row to
+    pad ``rows`` to a fixed width — its checksum comes back like any
+    other and callers just ignore it, keeping one compiled shape.
+    """
+    total = None
+    for pool in (state.k_pool, state.v_pool):
+        x = pool[:, rows] if pool.ndim == 5 else pool[rows]
+        nbits = jnp.dtype(pool.dtype).itemsize * 8
+        u = jax.lax.bitcast_convert_type(
+            x, jnp.uint16 if nbits == 16 else jnp.uint32).astype(jnp.uint32)
+        row_axis = 1 if pool.ndim == 5 else 0
+        s = jnp.sum(u, axis=tuple(a for a in range(u.ndim) if a != row_axis),
+                    dtype=jnp.uint32)
+        total = s if total is None else total + s
+    return total
+
+
+def pool_checksums(state: PagedKVState) -> jnp.ndarray:
+    """Integrity checksums for *every* block row of the pool at once
+    (trash row included) — jit-safe, shape ``[NB+1]``.
+
+    The gather-free sibling of :func:`block_checksums`: one straight
+    reduction over each pool with no row-index operand, so XLA emits a
+    single pass over memory it was going to read anyway instead of
+    materializing a gathered copy.  This is the decode hot path's fused
+    verify operand — the host indexes the result by the blocks it
+    actually has digests for.
+    """
+    total = None
+    for pool in (state.k_pool, state.v_pool):
+        nbits = jnp.dtype(pool.dtype).itemsize * 8
+        u = jax.lax.bitcast_convert_type(
+            pool, jnp.uint16 if nbits == 16 else jnp.uint32)
+        row_axis = 1 if pool.ndim == 5 else 0
+        # 16-bit pools accumulate mod 2**16 — a single-event upset flips
+        # one bit, shifting the sum by a nonzero power of two either
+        # way, and the native-width accumulate skips the elementwise
+        # upcast on the decode hot path
+        s = jnp.sum(u, axis=tuple(a for a in range(u.ndim) if a != row_axis),
+                    dtype=u.dtype).astype(jnp.uint32)
+        total = s if total is None else total + s
+    return total
+
+
+class BlockDigestStore:
+    """Host-side registry of *sealed* block checksums.
+
+    A block is sealed once its content is final — the tail block a
+    decode step is still appending into stays out until it fills, so
+    digests never churn on the hot path.  ``scrub_batch`` hands back up
+    to ``budget`` sealed blocks round-robin for a budgeted verify pass;
+    the engine wires ``BlockAllocator.on_release`` to :meth:`forget` so
+    a freed block's digest dies with it and a recycled block can never
+    false-positive against a stale seal.
+    """
+
+    def __init__(self):
+        self._sums: Dict[int, int] = {}
+        self._cursor = 0
+
+    def seal(self, block: int, checksum: int) -> None:
+        self._sums[int(block)] = int(checksum)
+
+    def forget(self, block: int) -> None:
+        self._sums.pop(int(block), None)
+
+    def get(self, block: int) -> Optional[int]:
+        return self._sums.get(int(block))
+
+    def items(self) -> List[Tuple[int, int]]:
+        """Snapshot of (block, sealed checksum) pairs — safe to iterate
+        while corruption handling forgets entries mid-walk."""
+        return list(self._sums.items())
+
+    def __contains__(self, block: int) -> bool:
+        return int(block) in self._sums
+
+    def __len__(self) -> int:
+        return len(self._sums)
+
+    def scrub_batch(self, budget: int) -> List[int]:
+        """Next ``budget`` sealed blocks to verify (round-robin)."""
+        if not self._sums or budget <= 0:
+            return []
+        keys = sorted(self._sums)
+        self._cursor %= len(keys)
+        out = [keys[(self._cursor + j) % len(keys)]
+               for j in range(min(budget, len(keys)))]
+        self._cursor = (self._cursor + len(out)) % len(keys)
+        return out
+
+
 class SharedBlockIndex:
     """Content-hashed prefix-block sharing over one allocator's pool.
 
@@ -326,6 +458,22 @@ class SharedBlockIndex:
                 self._by_digest.pop(self._digest_of.pop(b), None)
                 self.alloc.release([b])
         return untracked
+
+    def purge(self, block: int) -> None:
+        """Evict a corrupted block from the index unconditionally.
+
+        The block is headed for quarantine, not the free list, so all
+        outstanding references are dropped at once — future prompts with
+        the same prefix re-prefill a fresh copy instead of sharing the
+        upset one.  Refcounts cannot leak: the entry is gone, so every
+        holder's eventual ``release`` treats the block as untracked and
+        the allocator (already holding it in quarantine) skips it.
+        """
+        b = int(block)
+        if b not in self._refs:
+            return
+        del self._refs[b]
+        self._by_digest.pop(self._digest_of.pop(b), None)
 
 
 def gather_kv(state: PagedKVState, max_len: int

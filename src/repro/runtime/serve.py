@@ -221,6 +221,8 @@ def engine_or_windowed(params, cfg: ModelConfig,
                        max_len: int = 64, block_size: int = 8,
                        num_blocks: Optional[int] = None,
                        prefill_chunk: Optional[int] = None,
+                       harden: bool = False, watchdog_steps: int = 8,
+                       scrub_blocks: int = 2,
                        on_fallback=None):
     """The one engine-with-windowed-fallback policy.
 
@@ -237,7 +239,8 @@ def engine_or_windowed(params, cfg: ModelConfig,
                 params, cfg, plan=plan, tp=tp, max_slots=max_slots,
                 prompt_len=prompt_len, max_len=max_len,
                 block_size=block_size, num_blocks=num_blocks,
-                prefill_chunk=prefill_chunk)
+                prefill_chunk=prefill_chunk, harden=harden,
+                watchdog_steps=watchdog_steps, scrub_blocks=scrub_blocks)
         except ValueError as e:    # non-pageable: keep the windowed loop
             if on_fallback is not None:
                 on_fallback(e)
@@ -348,7 +351,9 @@ class ContinuousBatchingEngine:
                  max_slots: int = 8, prompt_len: int = 32,
                  max_len: int = 64, block_size: int = 8,
                  num_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 harden: bool = False, watchdog_steps: int = 8,
+                 scrub_blocks: int = 2):
         self.params, self.cfg, self.plan, self.tp = params, cfg, plan, tp
         self.max_slots, self.prompt_len = max_slots, prompt_len
         self.max_len, self.block_size = max_len, block_size
@@ -380,6 +385,33 @@ class ContinuousBatchingEngine:
         self.queue: List[Request] = []
         self.done: Dict[int, Request] = {}
         self._dirty = True                    # host table/lengths changed
+        # --- radiation hardening (SEU detection + recovery) -----------
+        # harden=True turns on per-block integrity digests: sealed (full)
+        # blocks are checksummed, the decode step recomputes every live
+        # row's checksum *inside the fused program* (detection lands the
+        # same step a corrupted block is read, before any token escapes),
+        # and scrub() gives idle pools a budgeted background pass.  The
+        # token path itself is untouched — hardened outputs with no
+        # faults are bit-identical to hardening-off.
+        self.harden = bool(harden)
+        self.watchdog_steps = int(watchdog_steps)
+        self.scrub_blocks = int(scrub_blocks)
+        self.digests = paging.BlockDigestStore()
+        # whoever frees a block (finalize, shared-index refcount drop,
+        # eviction) retires its seal with it — a recycled block can never
+        # false-positive against stale content
+        self.alloc.on_release = self.digests.forget
+        self.stalled: set = set()       # slots latched by a stall fault
+        self._tripped: set = set()      # stalled slots already evicted
+        self._stall_age = np.zeros(max_slots, np.int64)
+        self._restore_queue: List[tuple] = []   # (req, gen) to replay
+        self._armed_flips: List[int] = []       # kv_bitflip seeds pending
+        self.mute_rids: set = set()     # one-shot emission suppression
+        self._idle_steps = 0            # livelock guard
+        # a disaggregated decode engine must not self-restore: its KV
+        # came from a peer prefill engine under a different plan, so the
+        # seam owner re-runs the handoff instead (restore_import)
+        self.external_restore = False
         self.on_token: Optional[Callable[[int, int], None]] = None
         # flight-recorder hook: ``on_stage(stage, t0, t1, rids, attrs)``
         # with wall perf_counter endpoints; installed by EngineExecutor
@@ -424,6 +456,35 @@ class ContinuousBatchingEngine:
             return nxt, out.cache
         self._decode_with = jax.jit(_decode_sampled)
 
+        # hardened variants: the same decode, plus per-block integrity
+        # checksums of the *whole* pool fused into the dispatch — a
+        # straight [NB+1] reduction with no row-index operand, so XLA
+        # reads memory it already touches instead of materializing a
+        # gather (the gathered variant cost ~30% of decode throughput
+        # on small configs).  Checksums are computed *after* the step's
+        # KV append, so a just-filled tail block's value doubles as its
+        # seal — sealing on the decode hot path costs no extra device
+        # call.  The host compares only the blocks it holds seals for.
+
+        def _cache_checksums(caches):
+            total = None
+            for key in sorted(caches):
+                s = paging.pool_checksums(caches[key])
+                total = s if total is None else total + s
+            return total
+        self._checksum = jax.jit(_cache_checksums)
+
+        def _decode_greedy_h(p, toks, caches):
+            nxt, caches = _decode_greedy(p, toks, caches)
+            return nxt, caches, _cache_checksums(caches)
+        self._decode_h = jax.jit(_decode_greedy_h)
+
+        def _decode_sampled_h(p, toks, caches, temps, topks, seeds, steps):
+            nxt, caches = _decode_sampled(p, toks, caches, temps, topks,
+                                          seeds, steps)
+            return nxt, caches, _cache_checksums(caches)
+        self._decode_with_h = jax.jit(_decode_sampled_h)
+
     def reset_stats(self) -> None:
         """Zero the telemetry counters (post-jit-warmup)."""
         self.total_tokens = 0                 # real sampled tokens only
@@ -435,6 +496,11 @@ class ContinuousBatchingEngine:
         self.prefill_tokens = 0               # prompt tokens prefilled
         self.deferrals = 0                    # OutOfBlocks admission deferrals
         self.shared.hits = 0                  # prefix blocks served by index
+        self.bitflips_detected = 0            # checksum mismatches caught
+        self.blocks_quarantined = 0           # blocks pulled from service
+        self.watchdog_trips = 0               # stalled slots evicted
+        self.replays = 0                      # evicted requests rebuilt
+        self.scrubbed_blocks = 0              # blocks verified by scrub()
 
     # ------------------------------------------------------------------
     # public API (shared with WindowedBaselineServer)
@@ -464,8 +530,10 @@ class ContinuousBatchingEngine:
 
     @property
     def pending(self) -> int:
-        """Requests admitted but not yet completed (queued + in-slot)."""
-        return len(self.queue) + sum(s is not None for s in self.slots)
+        """Requests admitted but not yet completed (queued + in-slot +
+        evicted-awaiting-replay)."""
+        return (len(self.queue) + sum(s is not None for s in self.slots)
+                + len(self._restore_queue))
 
     @property
     def occupancy(self) -> float:
@@ -475,9 +543,35 @@ class ContinuousBatchingEngine:
     def step(self) -> List[Request]:
         """Admit into free slots, then run one decode step; returns the
         requests completed by either (admission completes ``max_new==1``
-        requests outright — their single token comes from prefill)."""
+        requests outright — their single token comes from prefill).
+
+        Hardening rides the same cadence: armed bit flips land first
+        (so detection sees them the very step their block is next
+        read), the watchdog ages stalled slots, and evicted requests
+        replay into free slots before new admissions (recovery has
+        priority over fresh work)."""
+        if self._armed_flips:
+            self._apply_armed_flips()
+        if self.stalled:
+            self._watchdog()
+        if self._restore_queue and not self.external_restore:
+            self._restore_pending()
         completed = self._admit()
         completed += self._decode_once()
+        # livelock guard: a permanently-stalled single slot (or a
+        # restore that can never fit) must fail loudly, not spin the
+        # drive loop forever
+        if (completed or any(s is not None for s in self.slots)
+                or not (self.queue or self._restore_queue)):
+            self._idle_steps = 0
+        else:
+            self._idle_steps += 1
+            if self._idle_steps > max(1000, 10 * self.watchdog_steps):
+                raise RuntimeError(
+                    f"engine livelock: {len(self.queue)} queued + "
+                    f"{len(self._restore_queue)} awaiting replay, but no "
+                    f"slot can make progress (stalled={sorted(self.stalled)},"
+                    f" quarantined={len(self.alloc.quarantined)} blocks)")
         return completed
 
     def flush(self) -> List[Request]:
@@ -499,7 +593,12 @@ class ContinuousBatchingEngine:
                 "admit_s": self.admit_s,
                 "prefill_tokens": self.prefill_tokens,
                 "shared_block_hits": self.shared.hits,
-                "deferrals": self.deferrals}
+                "deferrals": self.deferrals,
+                "bitflips_detected": self.bitflips_detected,
+                "blocks_quarantined": self.blocks_quarantined,
+                "watchdog_trips": self.watchdog_trips,
+                "replays": self.replays,
+                "scrubbed_blocks": self.scrubbed_blocks}
 
     # ------------------------------------------------------------------
     # internals
@@ -547,9 +646,15 @@ class ContinuousBatchingEngine:
             firsts = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return firsts, out.cache
 
-    def _push_tables(self) -> None:
-        tbl = jnp.asarray(self.table)
-        lens = jnp.asarray(self.lengths)
+    def _push_tables(self, table: Optional[np.ndarray] = None,
+                     lengths: Optional[np.ndarray] = None) -> None:
+        """Broadcast the host table/length mirrors into every sublayer
+        cache.  ``table``/``lengths`` override the mirrors for one push
+        — the replay path masks every row but the one being rebuilt, so
+        the fixed-shape decode program touches nothing else; the next
+        dirty push restores the true mirrors."""
+        tbl = jnp.asarray(self.table if table is None else table)
+        lens = jnp.asarray(self.lengths if lengths is None else lengths)
 
         def fix(st: paging.PagedKVState) -> paging.PagedKVState:
             return st._replace(
@@ -567,14 +672,345 @@ class ContinuousBatchingEngine:
         if self.on_stage is not None:
             self.on_stage(stage, t0, t1, list(rids), attrs)
 
+    # ------------------------------------------------------------------
+    # radiation hardening: injection, detection, recovery
+    # ------------------------------------------------------------------
+    def arm_bitflip(self, seed: int = 0) -> None:
+        """Arm one SEU: at the next step with sealed live KV, flip one
+        ``seed``-chosen bit in a live paged block.  Armed (not applied
+        immediately) because batches run wall-synchronously between
+        virtual ticks — the upset must land while KV is actually live,
+        exactly when a real particle strike would matter."""
+        self._armed_flips.append(int(seed))
+
+    def stall_slot(self, slot: int) -> None:
+        """Latch a slot-stall fault: the next request decoding in this
+        slot stops making progress (the scheduler cannot see the latent
+        upset, so admission still uses the slot) until the watchdog
+        evicts it; after the trip the slot is quarantined from admission
+        until :meth:`unstall_slot`."""
+        self.stalled.add(int(slot) % self.max_slots)
+
+    def unstall_slot(self, slot: int) -> None:
+        i = int(slot) % self.max_slots
+        self.stalled.discard(i)
+        self._tripped.discard(i)
+        self._stall_age[i] = 0
+
+    def scrub(self, budget: Optional[int] = None) -> int:
+        """Budgeted background integrity pass: verify up to ``budget``
+        sealed blocks (round-robin) against their digests; corrupted
+        blocks quarantine and their requests replay.  Costs nothing when
+        no blocks are sealed; the decode hot path carries its own fused
+        full verify, so this mainly covers blocks held while a pool sits
+        idle between batches.  Returns blocks verified."""
+        if not self.harden or len(self.digests) == 0:
+            return 0
+        blocks = self.digests.scrub_batch(
+            self.scrub_blocks if budget is None else budget)
+        if not blocks:
+            return 0
+        sums = self._row_checksums(blocks)
+        self.scrubbed_blocks += len(blocks)
+        bad_slots: set = set()
+        for b, s in zip(blocks, sums):
+            if self.digests.get(b) != int(s):
+                bad_slots |= self._on_corrupt_block(b)
+        for i in sorted(bad_slots):
+            self._evict_slot(i)
+        if bad_slots and not self.external_restore:
+            self._restore_pending()
+        return len(blocks)
+
+    def _row_checksums(self, blocks) -> np.ndarray:
+        """Checksums for ``blocks`` — index the one full-pool reduction,
+        so every call shape hits the same compiled program."""
+        sums = np.asarray(self._checksum(self.caches))
+        return sums[np.asarray(blocks, np.int32)]
+
+    def _seal_rows(self, blocks) -> None:
+        """Digest freshly-finalized (full, no-longer-written) blocks."""
+        if not self.harden:
+            return
+        bl = [int(b) for b in blocks if int(b) >= 0]
+        if not bl:
+            return
+        for b, s in zip(bl, self._row_checksums(bl)):
+            self.digests.seal(b, int(s))
+
+    def _apply_armed_flips(self) -> None:
+        """Land armed SEUs on sealed live blocks (deterministic per
+        seed).  Flips that cannot land yet (no sealed KV live) stay
+        armed — an upset in empty memory is harmless by definition."""
+        held = {int(b) for row in self.table for b in row if b >= 0}
+        targets = sorted(b for b in held if b in self.digests)
+        still_armed: List[int] = []
+        for seed in self._armed_flips:
+            if not targets:
+                still_armed.append(seed)
+                continue
+            rng = np.random.default_rng(seed)
+            b = int(targets[int(rng.integers(len(targets)))])
+            key = sorted(self.caches)[int(rng.integers(len(self.caches)))]
+            st = self.caches[key]
+            which = int(rng.integers(2))
+            pool = st.k_pool if which == 0 else st.v_pool
+            sh = pool.shape                  # [S, NB+1, P, KVp, hd]
+            coord = (int(rng.integers(sh[0])), b,
+                     int(rng.integers(sh[2])), int(rng.integers(sh[3])),
+                     int(rng.integers(sh[4])))
+            nbits = jnp.dtype(pool.dtype).itemsize * 8
+            bit = int(rng.integers(nbits))
+            u = jnp.uint16 if nbits == 16 else jnp.uint32
+            el = jax.lax.bitcast_convert_type(pool[coord], u)
+            el = jax.lax.bitcast_convert_type(el ^ u(1 << bit), pool.dtype)
+            pool = pool.at[coord].set(el)
+            self.caches[key] = (st._replace(k_pool=pool) if which == 0
+                                else st._replace(v_pool=pool))
+            t = time.perf_counter()
+            self._stage("seu_bitflip", t, t, [], block=b, bit=bit,
+                        seed=seed)
+        self._armed_flips = still_armed
+
+    def _watchdog(self) -> None:
+        """Age occupied stalled slots; past the threshold, evict the
+        request for replay and quarantine the slot from admission."""
+        for i in sorted(self.stalled):
+            s = self.slots[i]
+            if s is None or i in self._tripped:
+                continue
+            self._stall_age[i] += 1
+            if self._stall_age[i] < self.watchdog_steps:
+                continue
+            self.watchdog_trips += 1
+            self._tripped.add(i)
+            self._stall_age[i] = 0
+            t = time.perf_counter()
+            self._stage("watchdog_trip", t, t, [s.req.rid], slot=i,
+                        tokens=len(s.gen))
+            self._evict_slot(i)
+
+    def _evict_slot(self, i: int) -> None:
+        """Tear a slot down for replay: free its row exactly (shared
+        refcounts honored, quarantined blocks skipped by the allocator)
+        and queue (request, tokens-so-far) for restoration."""
+        s = self.slots[i]
+        self.alloc.release(
+            self.shared.release(self.table[i][self.table[i] >= 0]))
+        self.table[i] = -1
+        self.lengths[i] = 0
+        self._gen_counts[i] = 0
+        self.slots[i] = None
+        self._dirty = True
+        self._restore_queue.append((s.req, list(s.gen)))
+
+    def _on_corrupt_block(self, b: int) -> set:
+        """Account one detected upset: quarantine the block, purge it
+        from the shared index (sharers re-prefill fresh copies), drop
+        its seal; returns the occupied slots whose rows hold it."""
+        self.bitflips_detected += 1
+        if self.alloc.quarantine(b):
+            self.blocks_quarantined += 1
+        self.shared.purge(b)
+        self.digests.forget(b)
+        t = time.perf_counter()
+        self._stage("bitflip_detected", t, t, [], block=b)
+        return {i for i in range(self.max_slots)
+                if self.slots[i] is not None and b in self.table[i]}
+
+    def _restore_pending(self) -> None:
+        """Replay evicted requests into free, healthy slots (recovery
+        runs before new admissions; deferred under block pressure)."""
+        while self._restore_queue:
+            req, gen = self._restore_queue[0]
+            # only watchdog-proven slots are avoided — a latent stall the
+            # system has not detected yet can catch a replay too (it will
+            # trip and move on, same as fresh work)
+            free = [i for i in range(self.max_slots)
+                    if self.slots[i] is None and i not in self._tripped]
+            if not free:
+                break
+            try:
+                self._restore_slot(free[0], req, gen)
+            except OutOfBlocksError:
+                self.deferrals += 1
+                break
+            self._restore_queue.pop(0)
+            self.replays += 1
+
+    def _restore_slot(self, i: int, req: Request, gen: List[int]) -> None:
+        """Rebuild an evicted in-flight request bit-exactly in slot
+        ``i``: re-prefill its prompt (sharing prefix blocks via the
+        content-hash index when still live — else replaying from the
+        prompt), then replay the recorded generated tokens through the
+        decode program.  The same programs that produced the original
+        KV produce identical bits, and nothing is re-emitted, so the
+        stream continues exactly-once from where it stopped."""
+        s = int(req.prompt.shape[0])
+        sp = req.sampling or GREEDY
+        bs = self.block_size
+        if s <= self.prompt_len:
+            padded_len = self.prompt_len
+            need = self._held_blocks()
+            need[i] = -(-(self.prompt_len + req.max_new) // bs)
+            self.table = paging.plan_blocks(self.table, self.alloc, need)
+            self._push_tables()
+            self._dirty = False
+            toks = np.zeros((self.max_slots, self.prompt_len), np.int32)
+            toks[i, -s:] = req.prompt
+            admit = np.zeros(self.max_slots, bool)
+            admit[i] = True
+            self._temps[i], self._topks[i] = sp.temperature, sp.top_k
+            self._seeds[i] = sp.seed
+            self._knobs_dev = (jnp.asarray(self._temps),
+                               jnp.asarray(self._topks),
+                               jnp.asarray(self._seeds))
+            t0 = time.perf_counter()
+            _, self.caches = self._admit_step(
+                self.params, jnp.asarray(toks), self._prefill_cache,
+                self.caches, jnp.asarray(admit), *self._knobs_dev,
+                not sp.greedy)
+            self.admit_s += time.perf_counter() - t0
+            self.prefill_tokens += self.prompt_len
+            self.lengths[i] = self.prompt_len
+        else:
+            c = self.prefill_chunk
+            length = -(-s // c) * c
+            padded = np.zeros(length, np.int32)
+            padded[length - s:] = req.prompt
+            n_prompt_blocks = length // bs
+            per_chunk = c // bs
+            digests = []
+            d = paging.SharedBlockIndex.ROOT
+            for b in range(n_prompt_blocks):
+                d = self.shared.chain(d, padded[b * bs:(b + 1) * bs])
+                digests.append(d)
+            hit = 0
+            for b in range(n_prompt_blocks - per_chunk):
+                if self.shared.lookup(digests[b]) is None:
+                    break
+                hit = b + 1
+            shared_blocks = (hit // per_chunk) * per_chunk
+            acquired = [self.shared.acquire(digests[b])
+                        for b in range(shared_blocks)]
+            self.table[i, :shared_blocks] = acquired
+            need = self._held_blocks()
+            need[i] = -(-(length + req.max_new) // bs)
+            try:
+                self.table = paging.plan_blocks(self.table, self.alloc,
+                                                need)
+            except OutOfBlocksError:
+                self.shared.release(acquired)
+                self.shared.hits -= len(acquired)
+                self.table[i, :shared_blocks] = -1
+                raise
+            self._push_tables()
+            self._dirty = False
+            self._temps[i], self._topks[i] = sp.temperature, sp.top_k
+            self._seeds[i] = sp.seed
+            self._knobs_dev = (jnp.asarray(self._temps),
+                               jnp.asarray(self._topks),
+                               jnp.asarray(self._seeds))
+            self._run_chunks(i, padded, shared_blocks * bs // c, sp,
+                             rid=req.rid)
+            for b in range(shared_blocks, n_prompt_blocks):
+                self.shared.register(digests[b], int(self.table[i, b]))
+            padded_len = length
+            self.lengths[i] = length
+        self._replay_generation(i, req, gen, padded_len, sp)
+
+    def _replay_generation(self, i: int, req: Request, gen: List[int],
+                           padded_len: int, sp: SamplingParams) -> None:
+        """Replay recorded tokens ``gen[:-1]`` as decode inputs so the
+        KV the lost steps had written is regrown bit-identically; every
+        other row is masked off the device tables for the duration.
+        Outputs are recomputed and discarded — nothing re-emits."""
+        g = len(gen)
+        t0 = time.perf_counter()
+        if g > 1:
+            mask_tbl = -np.ones_like(self.table)
+            mask_tbl[i] = self.table[i]
+            mask_len = np.zeros_like(self.lengths)
+            mask_len[i] = padded_len
+            self._push_tables(mask_tbl, mask_len)
+            last = np.zeros((self.max_slots, 1), np.int32)
+            for j in range(g - 1):
+                last[i, 0] = gen[j]
+                if self.harden:      # reuse the compiled hardened program
+                    _, self.caches, _ = self._decode_h(
+                        self.params, jnp.asarray(last), self.caches)
+                else:
+                    _, self.caches = self._decode(
+                        self.params, jnp.asarray(last), self.caches)
+        self.admit_s += time.perf_counter() - t0
+        self.lengths[i] = padded_len + g - 1
+        self._gen_counts[i] = g
+        self.slots[i] = _Slot(req, list(gen), req.max_new - g,
+                              sampled=not sp.greedy)
+        self.last[i, 0] = gen[-1]
+        self._dirty = True
+        self._seal_rows(self.table[i][:self.lengths[i] // self.block_size])
+        t1 = time.perf_counter()
+        self._stage("replay", t0, t1, [req.rid], tokens=g,
+                    slot=i)
+
+    def restore_import(self, req: Request, gen: List[int],
+                       handoff: "PrefillHandoff") -> None:
+        """Disaggregated recovery: rebuild an evicted decode slot from a
+        *fresh handoff* (the imported KV must reproduce the prefill
+        engine's bits — the decode plan's own prefill might differ),
+        then replay the recorded tokens.  Raises ``OutOfBlocksError``
+        to defer under pressure; the caller parks the handoff payload so
+        prefill compute is never repeated."""
+        free = [j for j in range(self.max_slots)
+                if self.slots[j] is None and j not in self._tripped]
+        if not free:
+            raise OutOfBlocksError("decode engine has no healthy free slot")
+        i = free[0]
+        bs, length = self.block_size, handoff.length
+        need = self._held_blocks()
+        need[i] = -(-(length + req.max_new) // bs)
+        self.table = paging.plan_blocks(self.table, self.alloc, need)
+        rows = self.table[i][:length // bs]
+        self.caches = _paste_block_rows(self.caches, handoff.kv,
+                                        jnp.asarray(rows))
+        self._verify_import(i, req, handoff, rows)
+        self.lengths[i] = length
+        sp = req.sampling or GREEDY
+        self._temps[i], self._topks[i] = sp.temperature, sp.top_k
+        self._seeds[i] = sp.seed
+        self._knobs_dev = (jnp.asarray(self._temps),
+                           jnp.asarray(self._topks),
+                           jnp.asarray(self._seeds))
+        self._replay_generation(i, req, gen, length, sp)
+
+    def _verify_import(self, i: int, req: Request,
+                       handoff: "PrefillHandoff", rows) -> None:
+        """Always-verify at handoff import: recompute the pasted rows'
+        checksums against the digests stamped at gather time.  A
+        mismatch (payload upset in transit) frees the planned row and
+        raises — the seam re-requests the handoff.  Clean imports seal
+        the rows with the already-computed sums."""
+        if not self.harden or handoff.digests is None:
+            return
+        sums = self._row_checksums([int(b) for b in rows])
+        if any(int(a) != int(e) for a, e in zip(sums, handoff.digests)):
+            self.alloc.release(self.table[i][self.table[i] >= 0])
+            self.table[i] = -1
+            self._dirty = True
+            raise HandoffCorruptError(
+                f"handoff for request {req.rid} failed integrity verify")
+        for b, s in zip(rows, sums):
+            self.digests.seal(int(b), int(s))
+
     def _admit(self) -> List[Request]:
         admits: List[tuple] = []
         completed: List[Request] = []
         for i in range(self.max_slots):
             if not self.queue:
                 break
-            if self.slots[i] is not None:
-                continue
+            if self.slots[i] is not None or i in self._tripped:
+                continue               # occupied, or watchdog-proven bad
             req = self.queue[0]
             if req.prompt.shape[0] > self.prompt_len:
                 # over-bucket prompt: chunked paged prefill, one fused
@@ -628,10 +1064,15 @@ class ContinuousBatchingEngine:
         self.admit_s += t1 - t0
         self._stage("admit", t0, t1, [req.rid for _, req in admits],
                     tokens=self.prompt_len * len(admits))
+        seal: List[int] = []
         for i, req in admits:
             self.lengths[i] = self.prompt_len
             self._gen_counts[i] = 1
             self.prefill_tokens += self.prompt_len
+            if self.harden and req.max_new > 1:   # staying: seal the full
+                seal.extend(                      # prompt blocks now
+                    int(b) for b in
+                    self.table[i][:self.prompt_len // self.block_size])
             tok = int(firsts[i])
             if req.max_new >= 1:
                 # the admission token only counts when it is actually
@@ -647,6 +1088,7 @@ class ContinuousBatchingEngine:
                 self.slots[i] = _Slot(req, [tok], req.max_new - 1,
                                       sampled=not sp.greedy)
                 self.last[i, 0] = tok
+        self._seal_rows(seal)
         return completed
 
     def _run_chunks(self, i: int, padded: np.ndarray, first_chunk: int,
@@ -737,6 +1179,10 @@ class ContinuousBatchingEngine:
             self.shared.register(digests[b], int(self.table[i, b]))
         self.lengths[i] = length
         self._gen_counts[i] = 1
+        if self.harden and req.max_new > 1:
+            # freshly prefilled prompt blocks are full + read-only from
+            # here on (shared-index hits were sealed by their writer)
+            self._seal_rows(self.table[i][shared_blocks:n_prompt_blocks])
         if req.max_new >= 1:
             self.total_tokens += 1
             self._emit(req.rid, tok)
@@ -748,7 +1194,10 @@ class ContinuousBatchingEngine:
         return None
 
     def _decode_once(self) -> List[Request]:
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        # stalled slots occupy their row but make no progress — the
+        # latched fault is latent until the watchdog trips it
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and i not in self.stalled]
         if not active:
             return []
         if self._dirty:
@@ -756,7 +1205,23 @@ class ContinuousBatchingEngine:
             self._dirty = False
         any_sampled = any(s is not None and s.sampled for s in self.slots)
         t0 = time.perf_counter()
-        if any_sampled:
+        sums_np: Optional[np.ndarray] = None
+        if self.harden:
+            # hardened dispatch: the same decode plus a per-block
+            # checksum of the whole pool, fused — detection lands the
+            # same step a corrupted block is read, before any token of
+            # this step escapes to a stream
+            if any_sampled:
+                temps_d, topks_d, seeds_d = self._knobs_dev
+                nxt, self.caches, sums = self._decode_with_h(
+                    self.params, jnp.asarray(self.last), self.caches,
+                    temps_d, topks_d, seeds_d,
+                    jnp.asarray(self._gen_counts))
+            else:
+                nxt, self.caches, sums = self._decode_h(
+                    self.params, jnp.asarray(self.last), self.caches)
+            sums_np = np.asarray(sums)
+        elif any_sampled:
             temps_d, topks_d, seeds_d = self._knobs_dev
             nxt, self.caches = self._decode_with(
                 self.params, jnp.asarray(self.last), self.caches,
@@ -770,8 +1235,20 @@ class ContinuousBatchingEngine:
         self._stage("decode_step", t0, t1,
                     [self.slots[i].req.rid for i in active],
                     step=self.decode_steps, tokens=len(active))
+        bad_slots: set = set()
+        if sums_np is not None and len(self.digests):
+            # every sealed block is verified every step — the full-pool
+            # reduction makes idle sealed blocks free to check too
+            items = self.digests.items()
+            blks = np.fromiter((b for b, _ in items), np.int64, len(items))
+            seals = np.fromiter((d for _, d in items), np.int64, len(items))
+            for b in blks[sums_np[blks] != seals]:
+                bad_slots |= self._on_corrupt_block(int(b))
         completed: List[Request] = []
+        emitted = 0
         for i in active:
+            if i in bad_slots:
+                continue       # computed from corrupted KV: never emits
             self.lengths[i] += 1           # mirror device append_tokens
             self._gen_counts[i] += 1
             s = self.slots[i]
@@ -780,12 +1257,22 @@ class ContinuousBatchingEngine:
             s.remaining -= 1
             self.last[i, 0] = nxt[i]
             self._emit(s.req.rid, tok)
+            emitted += 1
+            if self.harden and self.lengths[i] % self.block_size == 0:
+                # this step's append just filled a block: its fused sum
+                # is the seal (no extra device call on the hot path)
+                b = int(self.table[i,
+                                   self.lengths[i] // self.block_size - 1])
+                if 0 <= b < self.alloc.num_blocks and sums_np is not None:
+                    self.digests.seal(b, int(sums_np[b]))
             if s.remaining <= 0:
                 completed.append(self._finalize(i, s.req, s.gen))
                 self.slots[i] = None
+        for i in sorted(bad_slots):
+            self._evict_slot(i)
         self.decode_steps += 1
-        self.total_tokens += len(active)
-        self.decode_tokens += len(active)
+        self.total_tokens += emitted
+        self.decode_tokens += emitted
         self.occupancy_sum += len(active) / self.max_slots
         return completed
 
@@ -819,7 +1306,8 @@ class ContinuousBatchingEngine:
         _require_prompt(req, "engine")
         bs, c = self.block_size, self.prefill_chunk
         length = -(-max(int(req.prompt.shape[0]), self.prompt_len) // c) * c
-        free = [j for j, sl in enumerate(self.slots) if sl is None]
+        free = [j for j, sl in enumerate(self.slots)
+                if sl is None and j not in self._tripped]
         if not free:
             raise OutOfBlocksError("prefill engine has no free slot")
         i = free[0]
@@ -832,19 +1320,31 @@ class ContinuousBatchingEngine:
         self._dirty = False
         sp = req.sampling or GREEDY
         tok = self._run_chunks(i, padded, 0, sp, rid=req.rid)
-        if req.max_new >= 1:
+        if req.rid in self.mute_rids:
+            # replayed handoff (the original was lost/corrupted after its
+            # first token already streamed): recompute deterministically,
+            # emit nothing — exactly-once delivery across the seam
+            self.mute_rids.discard(req.rid)
+        elif req.max_new >= 1:
             self.total_tokens += 1
             self._emit(req.rid, tok)
         rows = self.table[i][:length // bs].copy()
         g0 = time.perf_counter()
         kv = _gather_block_rows(self.caches, jnp.asarray(rows))
+        digests = None
+        if self.harden:
+            # stamp the payload's per-block checksums before the blocks
+            # free — the importer verifies the paste against them
+            digests = tuple(int(s) for s in
+                            self._row_checksums([int(b) for b in rows]))
         self._stage("handoff", g0, time.perf_counter(), [req.rid],
                     blocks=len(rows), tokens=length)
         self.alloc.release(self.shared.release(rows))
         self.table[i] = -1
         self.lengths[i] = 0
         self._dirty = True
-        return PrefillHandoff(req.rid, tok, length, self.block_size, kv)
+        return PrefillHandoff(req.rid, tok, length, self.block_size, kv,
+                              digests)
 
     def import_prefill(self, req: Request,
                        handoff: "PrefillHandoff") -> Optional[Request]:
@@ -859,7 +1359,8 @@ class ContinuousBatchingEngine:
             (f"mirrored pools must share block geometry: handoff wrote "
              f"{handoff.block_size}-token blocks, this pool holds "
              f"{self.block_size}-token blocks")
-        free = [j for j, sl in enumerate(self.slots) if sl is None]
+        free = [j for j, sl in enumerate(self.slots)
+                if sl is None and j not in self._tripped]
         if not free:
             raise OutOfBlocksError("decode engine has no free slot")
         i = free[0]
@@ -875,6 +1376,7 @@ class ContinuousBatchingEngine:
                                         jnp.asarray(rows))
         self._stage("import", p0, time.perf_counter(), [req.rid],
                     blocks=len(rows), tokens=length)
+        self._verify_import(i, req, handoff, rows)
         self.lengths[i] = length
         self._gen_counts[i] = 1
         self._dirty = True                # table + lengths push next step
@@ -896,6 +1398,13 @@ class ContinuousBatchingEngine:
 # ---------------------------------------------------------------------------
 # Prefill/decode disaggregation (MPAI co-processing)
 # ---------------------------------------------------------------------------
+class HandoffCorruptError(RuntimeError):
+    """A PrefillHandoff payload failed its integrity verify at import —
+    the seam re-requests the handoff (prefill is deterministic, so the
+    replacement carries identical bits and the already-streamed first
+    token stays valid)."""
+
+
 @dataclass
 class PrefillHandoff:
     """One prefilled prompt crossing the co-processing seam.
@@ -914,6 +1423,11 @@ class PrefillHandoff:
     length: int                        # padded prompt length (tokens)
     block_size: int
     kv: Dict[str, tuple]
+    # per-block integrity checksums stamped at gather time (hardened
+    # prefill engines only): the importer recomputes them after pasting
+    # and rejects the handoff on mismatch — an upset on the interconnect
+    # never becomes served tokens
+    digests: Optional[tuple] = None
 
 
 class CoProcServer:
@@ -951,6 +1465,15 @@ class CoProcServer:
         self.handoff_count = 0
         self._seam_deferrals = 0
         self._on_token: Optional[Callable[[int, int], None]] = None
+        # radiation hardening at the seam: the decode engine's evictions
+        # come back through a *fresh handoff* (its imported KV must carry
+        # the prefill engine's bits — replaying prefill under the decode
+        # plan would not), so the seam owns the decode restore queue
+        self.decode.external_restore = True
+        self._restore_parked: Optional[tuple] = None  # (req, gen, handoff)
+        self._lose_handoffs = 0        # armed handoff_loss faults
+        self.handoffs_lost = 0
+        self.handoffs_replayed = 0
 
     # --- token relay: both stages emit through one hook ---------------
     @property
@@ -983,7 +1506,53 @@ class CoProcServer:
     @property
     def pending(self) -> int:
         return (len(self.queue) + (self._parked is not None)
+                + (self._restore_parked is not None)
                 + self.decode.pending)
+
+    # --- radiation hardening: fault API + counters --------------------
+    @property
+    def harden(self) -> bool:
+        return self.decode.harden
+
+    def inject_handoff_loss(self) -> None:
+        """Arm one seam SEU: the next handoff payload vanishes between
+        gather and import and must be re-requested."""
+        self._lose_handoffs += 1
+
+    def arm_bitflip(self, seed: int = 0) -> None:
+        # live KV lives in the decode pool (prefill rows free at gather)
+        self.decode.arm_bitflip(seed)
+
+    def stall_slot(self, slot: int) -> None:
+        self.decode.stall_slot(slot)
+
+    def unstall_slot(self, slot: int) -> None:
+        self.decode.unstall_slot(slot)
+
+    def scrub(self, budget: Optional[int] = None) -> int:
+        return self.prefill.scrub(budget) + self.decode.scrub(budget)
+
+    @property
+    def bitflips_detected(self) -> int:
+        return (self.prefill.bitflips_detected
+                + self.decode.bitflips_detected)
+
+    @property
+    def blocks_quarantined(self) -> int:
+        return (self.prefill.blocks_quarantined
+                + self.decode.blocks_quarantined)
+
+    @property
+    def watchdog_trips(self) -> int:
+        return self.prefill.watchdog_trips + self.decode.watchdog_trips
+
+    @property
+    def replays(self) -> int:
+        return self.prefill.replays + self.decode.replays
+
+    @property
+    def scrubbed_blocks(self) -> int:
+        return self.prefill.scrubbed_blocks + self.decode.scrubbed_blocks
 
     @property
     def occupancy(self) -> float:
@@ -1043,19 +1612,40 @@ class CoProcServer:
         the seam (the first token streams from the prefill stage, the
         decode stage resumes at token index 1)."""
         completed: List[Request] = []
+        self._drain_restores()             # recovery before fresh work
         while True:
             if self._parked is None:
                 if not self.queue:
                     break
                 try:
                     ho = self.prefill.prefill_handoff(self.queue[0])
-                    self._parked = (self.queue.pop(0), ho)
                 except OutOfBlocksError:
                     self._seam_deferrals += 1
                     break
+                req = self.queue.pop(0)
+                if self._lose_handoffs > 0:
+                    # armed seam SEU: the payload vanishes in transit.
+                    # Its first token already streamed, so the re-request
+                    # is muted — prefill determinism makes the replacement
+                    # bit-identical and delivery stays exactly-once.
+                    self._lose_handoffs -= 1
+                    self.handoffs_lost += 1
+                    self.handoffs_replayed += 1
+                    self.prefill.mute_rids.add(req.rid)
+                    self.queue.insert(0, req)
+                    continue
+                self._parked = (req, ho)
             req, ho = self._parked
             try:
                 done = self.decode.import_prefill(req, ho)
+            except HandoffCorruptError:
+                # payload upset caught by the import verify: discard it
+                # and re-request, same exactly-once contract as a loss
+                self._parked = None
+                self.handoffs_replayed += 1
+                self.prefill.mute_rids.add(req.rid)
+                self.queue.insert(0, req)
+                continue
             except OutOfBlocksError:
                 self._seam_deferrals += 1
                 break
@@ -1065,6 +1655,39 @@ class CoProcServer:
                 completed.append(done)
         completed += self.decode.step()
         return completed
+
+    def _drain_restores(self) -> None:
+        """Replay decode-side evictions (watchdog trips, quarantined
+        blocks) across the seam: re-run the prefill handoff (muted — the
+        delivered prefix stays delivered exactly once), import it into a
+        healthy decode slot, and replay the recorded tokens.  Seam
+        backpressure holds: a restore that cannot place yet parks with
+        its handoff and retries next step without recomputing prefill."""
+        while self.decode._restore_queue or self._restore_parked is not None:
+            if self._restore_parked is None:
+                req, gen = self.decode._restore_queue[0]
+                self.prefill.mute_rids.add(req.rid)
+                try:
+                    ho = self.prefill.prefill_handoff(req)
+                except OutOfBlocksError:
+                    self.prefill.mute_rids.discard(req.rid)
+                    self._seam_deferrals += 1
+                    return
+                self.decode._restore_queue.pop(0)
+                self._restore_parked = (req, gen, ho)
+            req, gen, ho = self._restore_parked
+            try:
+                self.decode.restore_import(req, gen, ho)
+            except HandoffCorruptError:
+                self._restore_parked = None
+                self.handoffs_replayed += 1
+                self.decode._restore_queue.insert(0, (req, gen))
+                continue
+            except OutOfBlocksError:
+                self._seam_deferrals += 1
+                return
+            self._restore_parked = None
+            self.decode.replays += 1
 
     def flush(self) -> List[Request]:
         """Blocking form: run until at least one request completes."""
@@ -1085,6 +1708,11 @@ class CoProcServer:
                                   + d["shared_block_hits"])
         d["deferrals"] = self.deferrals
         d["handoffs"] = self.handoff_count
+        for key in ("bitflips_detected", "blocks_quarantined",
+                    "watchdog_trips", "replays", "scrubbed_blocks"):
+            d[key] = getattr(self, key)    # prefill + decode aggregate
+        d["handoffs_lost"] = self.handoffs_lost
+        d["handoffs_replayed"] = self.handoffs_replayed
         return d
 
     def reset_stats(self) -> None:
@@ -1092,3 +1720,5 @@ class CoProcServer:
         self.decode.reset_stats()
         self._seam_deferrals = 0
         self.handoff_count = 0
+        self.handoffs_lost = 0
+        self.handoffs_replayed = 0

@@ -55,20 +55,30 @@ class ResponseHandle:
         self._tokens: List[int] = []
         self._token_steps: List[Optional[int]] = []
         self._reroutes_seen = 0
+        self._epoch = 0            # bumps when a reroute clears the buffer
+
+    def _sync_reroute(self) -> None:
+        """An SEU destroyed the in-flight decode; the re-dispatched
+        request restarts its stream from token 0 on the new pool, so the
+        buffer resets before anything else reads or extends it.  Every
+        buffer access funnels through here: ``_backfill`` used to slice
+        ``output[len(self._tokens):]`` against the STALE pre-reroute
+        buffer, silently dropping the re-served stream's first tokens."""
+        if self._rreq.rerouted != self._reroutes_seen:
+            self._reroutes_seen = self._rreq.rerouted
+            self._epoch += 1
+            self._tokens.clear()
+            self._token_steps.clear()
 
     # fed by the engine's per-token callback, via the client
     def _push(self, tok: int, step: Optional[int]) -> None:
-        if self._rreq.rerouted != self._reroutes_seen:
-            # an SEU destroyed the in-flight decode; the re-dispatched
-            # request restarts its stream from token 0 on the new pool
-            self._reroutes_seen = self._rreq.rerouted
-            self._tokens.clear()
-            self._token_steps.clear()
+        self._sync_reroute()
         self._tokens.append(int(tok))
         self._token_steps.append(step)
 
     def _backfill(self) -> None:
         """Hook-less backends deliver tokens only at completion."""
+        self._sync_reroute()
         out = None if self._work is None else self._work.output
         if out is not None:
             for tok in np.asarray(out)[len(self._tokens):]:
@@ -84,8 +94,13 @@ class ResponseHandle:
                 or self._rreq.done_s is not None)
 
     @property
+    def dropped(self) -> bool:
+        return self._rreq.dropped
+
+    @property
     def tokens(self) -> List[int]:
         """Tokens received so far (does not advance the fleet)."""
+        self._sync_reroute()       # never expose a stale pre-reroute buffer
         if self.done:
             self._backfill()       # hook-less backends deliver at the end
         return list(self._tokens)
@@ -94,6 +109,7 @@ class ResponseHandle:
     def token_steps(self) -> List[Optional[int]]:
         """Engine decode-step stamp per received token (None = delivered
         at completion by a hook-less backend)."""
+        self._sync_reroute()
         if self.done:
             self._backfill()
         return list(self._token_steps)
@@ -114,9 +130,18 @@ class ResponseHandle:
                         violated=r.violated, dropped=r.dropped, pool=r.pool)
 
     def stream(self, max_s: float = 600.0) -> Iterator[int]:
-        """Yield tokens as they arrive, driving the fleet in between."""
+        """Yield tokens as they arrive, driving the fleet in between.
+
+        Exactly-once across recovery: the cursor counts tokens
+        *delivered to the consumer*, and a failover reroute clears the
+        buffer while the re-served decode regrows it bit-identically
+        (deterministic sampling), so delivery resumes at the first
+        not-yet-yielded token — the consumer never sees a duplicate of
+        the prefix it already consumed, and never skips a token of the
+        re-served tail."""
         i = 0
         while True:
+            self._sync_reroute()
             while i < len(self._tokens):
                 yield self._tokens[i]
                 i += 1
@@ -174,7 +199,8 @@ class ServingClient:
                  engines: Optional[Dict[str, object]] = None,
                  spec=None, dt: float = 0.002,
                  slo_map: Optional[Dict[str, SLOClass]] = None,
-                 model=None, layers=None):
+                 model=None, layers=None,
+                 watchdog_s: Optional[float] = None):
         self.router = router
         self.failover = failover
         self.engines = dict(engines or {})   # pool name -> LM server
@@ -195,6 +221,13 @@ class ServingClient:
         # enable_tracing) plus the always-on fleet time-series ring
         self.tracer = router.telemetry.tracer
         self.timeseries = FleetTimeSeries()
+        # radiation hardening: deliver data-plane fault events into the
+        # target pool's engine, and back-stop the engine watchdogs with a
+        # fleet-level no-progress check over live handles
+        if failover is not None:
+            failover.data_plane = self._apply_data_plane_fault
+        self.watchdog_s = watchdog_s         # None -> disabled
+        self._watch: Dict[int, list] = {}    # rid -> [tokens, since]
 
     # ------------------------------------------------------------------
     # submission
@@ -301,6 +334,10 @@ class ServingClient:
         else:                                # "reject"
             self.router.telemetry.rejected += 1
             self.router.telemetry.energy_rejected += 1
+            # reason ledger only (admitted=False): the request was never
+            # admitted, so the accounting invariant stays intact
+            self.router.telemetry.record_drop(rreq.slo.name, "dry_battery",
+                                              admitted=False)
             self.tracer.end_request(rreq.rid, self.now, "energy_rejected",
                                     slo=rreq.slo.name)
             admitted = False
@@ -314,6 +351,57 @@ class ServingClient:
             h._push(tok, step)
 
     # ------------------------------------------------------------------
+    # radiation hardening (data-plane faults + watchdog backstop)
+    # ------------------------------------------------------------------
+    def _apply_data_plane_fault(self, ev) -> None:
+        """Deliver one kv_bitflip / slot_stall / handoff_loss event into
+        the target pool's engine (registered as the failover
+        controller's ``data_plane`` handler)."""
+        f = ev.fault
+        eng = self.engines.get(f.pool)
+        if eng is None:
+            return                 # cost-model pool: nothing to corrupt
+        if f.kind == "kv_bitflip" and ev.kind == "degrade":
+            eng.arm_bitflip(f.seed)
+            self.tracer.event("kv_bitflip", self.now, pool=f.pool,
+                              seed=f.seed)
+        elif f.kind == "slot_stall":
+            if ev.kind == "degrade":
+                eng.stall_slot(f.slot)
+                self.tracer.event("slot_stall", self.now, pool=f.pool,
+                                  slot=f.slot)
+            else:                  # transient stall recovers on schedule
+                eng.unstall_slot(f.slot)
+                self.tracer.event("slot_unstall", self.now, pool=f.pool,
+                                  slot=f.slot)
+        elif f.kind == "handoff_loss" and ev.kind == "degrade":
+            inject = getattr(eng, "inject_handoff_loss", None)
+            if inject is not None:   # unified pools have no seam to cut
+                inject()
+                self.tracer.event("handoff_loss", self.now, pool=f.pool)
+
+    def _watchdog_tick(self) -> None:
+        """Fleet-level no-progress backstop: a live admitted handle whose
+        token count has not moved for ``watchdog_s`` of virtual time
+        counts a watchdog trip (the engine-level watchdog recovers the
+        slot; this one makes silent stalls visible even when it cannot)."""
+        for rid, h in list(self._watch.items()):
+            if rid not in self._handles or self._handles[rid].done:
+                self._watch.pop(rid, None)
+        for rid, h in self._handles.items():
+            if h.done or not h.admitted:
+                continue
+            n = len(h._tokens)
+            rec = self._watch.get(rid)
+            if rec is None or rec[0] != n:
+                self._watch[rid] = [n, self.now]
+            elif self.now - rec[1] > self.watchdog_s:
+                self.router.telemetry.watchdog_trips += 1
+                self.tracer.event("client_watchdog", self.now, rid=rid,
+                                  tokens=n)
+                rec[1] = self.now  # re-arm; one trip per stall window
+
+    # ------------------------------------------------------------------
     # clock
     # ------------------------------------------------------------------
     def advance(self, dt: Optional[float] = None) -> None:
@@ -325,6 +413,26 @@ class ServingClient:
             self.failover.poll(self.now)
         if self.controller is not None:
             self.controller.step(self.now)
+        # hardened engines get their budgeted background scrub pass each
+        # tick (the decode hot path carries its own fused verify; this
+        # covers blocks held while a pool idles between batches).  Scrub
+        # findings land outside any executor batch window, so their
+        # telemetry deltas are charged here.
+        for name, eng in self.engines.items():
+            if not getattr(eng, "harden", False):
+                continue
+            b0 = (eng.bitflips_detected, eng.blocks_quarantined)
+            eng.scrub()
+            b1 = (eng.bitflips_detected, eng.blocks_quarantined)
+            if b1 != b0:
+                pc = self.router.telemetry.pools.get(name)
+                if pc is not None:
+                    pc.bitflips_detected += b1[0] - b0[0]
+                    pc.blocks_quarantined += b1[1] - b0[1]
+                self.tracer.event("scrub_hit", self.now, pool=name,
+                                  found=b1[0] - b0[0])
+        if self.watchdog_s is not None:
+            self._watchdog_tick()
         self.timeseries.observe(self, self.now)
 
     def pump(self) -> List[RouterRequest]:

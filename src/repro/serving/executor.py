@@ -99,6 +99,14 @@ class EngineExecutor:
                 getattr(s, "prefill_tokens", 0),
                 getattr(s, "admit_s", 0.0))
 
+    def _hstats(self) -> Tuple[int, int, int, int]:
+        """Hardening counters (zero on servers without the layer)."""
+        s = self.server
+        return (getattr(s, "bitflips_detected", 0),
+                getattr(s, "blocks_quarantined", 0),
+                getattr(s, "watchdog_trips", 0),
+                getattr(s, "handoffs_replayed", 0))
+
     def _install_stage_relay(self, plan: ScheduledPlan, now: float,
                              wall0: float) -> bool:
         """While this batch runs, forward the engine's ``on_stage``
@@ -123,7 +131,10 @@ class EngineExecutor:
 
         def relay(stage, w0, w1, rids, attrs):
             vt0, vt1 = now + (w0 - wall0), now + (w1 - wall0)
-            if stage in ("admit", "decode_step"):
+            if stage in ("admit", "decode_step",
+                         "seu_bitflip", "bitflip_detected"):
+                # batch-wide (or block-level, rid-less) events live on
+                # the pool lane
                 tr.add(None, stage, vt0, vt1, pool=decode_pool,
                        rids=len(rids), **attrs)
                 return
@@ -143,6 +154,7 @@ class EngineExecutor:
         t0 = time.perf_counter()
         traced = self._install_stage_relay(plan, now, t0)
         tok0, dec0, def0, pre0, adm0 = self._stats()
+        h0 = self._hstats()
         want = {}
         for r in requests:
             work = (r.payload if isinstance(r.payload, LMWork)
@@ -188,12 +200,17 @@ class EngineExecutor:
         for rid, work in want.items():
             work.output = self.server.done[rid].output
         tok1, dec1, def1, pre1, adm1 = self._stats()
+        h1 = self._hstats()
         if self.counters is not None:
             self.counters.tokens_generated += sum(
                 int(w.output.shape[0]) for w in want.values())
             self.counters.decode_tokens += tok1 - tok0
             self.counters.decode_s += dec1 - dec0
             self.counters.deferrals += def1 - def0
+            self.counters.bitflips_detected += h1[0] - h0[0]
+            self.counters.blocks_quarantined += h1[1] - h0[1]
+            self.counters.watchdog_trips += h1[2] - h0[2]
+            self.counters.handoffs_replayed += h1[3] - h0[3]
             if self.prefill_counters is None:
                 self.counters.prefill_tokens += pre1 - pre0
         if self.prefill_counters is not None:

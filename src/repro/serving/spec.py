@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import math
 import warnings
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 from repro.router.slo import SLOClass
@@ -78,6 +78,16 @@ class PoolSpec:
     prefill_backend: Optional[str] = None     # None | "engine"
     prefill_plan: Optional[str] = None        # None/"bf16" | "mpai"
     prefill_energy_scale: float = 0.5         # DPU-vs-VPU per-token energy
+    # radiation hardening (engine backends): per-block KV integrity
+    # digests + fused decode-path verification + no-progress watchdog.
+    # Off by default — hardened output with no faults is bit-identical
+    # to hardening-off, but the checksum adds a small decode cost.
+    # ``build()`` flips it on automatically for pools targeted by a
+    # data-plane FaultSpec (kind != "pool").
+    harden: bool = False
+    scrub_blocks: int = 2                # background scrub budget / tick
+    watchdog_steps: int = 8              # decode steps before a stalled
+                                         # slot is evicted and replayed
 
     def __post_init__(self):
         if self.backend not in ("costmodel", "engine", "windowed"):
@@ -122,14 +132,32 @@ class PoolSpec:
 
 @dataclass
 class FaultSpec:
-    """A scheduled pool upset (SEU) on the fleet's clock."""
+    """A scheduled upset (SEU) on the fleet's clock.
+
+    ``kind`` picks the blast radius (see
+    :class:`~repro.runtime.fault.PoolFault`): ``"pool"`` (default) is
+    the control-plane fault — the pool loses profiles and in-flight
+    work fails over; ``"kv_bitflip"`` / ``"slot_stall"`` /
+    ``"handoff_loss"`` are data-plane faults delivered inside the
+    pool's engine (``seed`` picks the bitflip site, ``slot`` the
+    stalled slot) and require a hardened engine pool to be detected —
+    ``build()`` hardens the target pool automatically.
+    """
     pool: str
     at_s: float
     duration_s: float = math.inf
     lost_profiles: Tuple[str, ...] = ()
+    kind: str = "pool"
+    slot: int = 0                        # slot_stall target
+    seed: int = 0                        # kv_bitflip site selector
+
+    _KINDS = ("pool", "kv_bitflip", "slot_stall", "handoff_loss")
 
     def __post_init__(self):
         self.lost_profiles = tuple(self.lost_profiles)
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {self._KINDS})")
 
     def to_dict(self) -> Dict:
         d = asdict(self)
@@ -157,6 +185,12 @@ class FleetSpec:
     dt: float = 0.002                    # clock tick for drive loops
     latency_headroom: float = 0.6
     trace: bool = False                  # flight recorder on from tick 0
+    # bounded redispatch: RetryPolicy kwargs per SLO class name; the
+    # "default" key replaces the router's fleet-wide default policy
+    retry: Dict[str, Dict] = field(default_factory=dict)
+    # client-side no-progress watchdog window (virtual seconds a
+    # streaming request may go without a new token); None -> disabled
+    watchdog_s: Optional[float] = None
 
     # ------------------------------------------------------------------
     # serialization
@@ -176,6 +210,8 @@ class FleetSpec:
             "dt": self.dt,
             "latency_headroom": self.latency_headroom,
             "trace": self.trace,
+            "retry": {k: dict(v) for k, v in self.retry.items()},
+            "watchdog_s": self.watchdog_s,
         }
 
     @classmethod
@@ -240,8 +276,14 @@ class FleetSpec:
         layers = self._layer_costs(cfg)
         model = None if cfg is None else (cfg, params)
 
+        # data-plane faults act inside an engine; detection needs the
+        # hardening layer, so harden any targeted pool (a local replace
+        # — the spec the caller holds is untouched)
+        hardened_targets = {f.pool for f in self.faults if f.kind != "pool"}
         pools, engines, executors = [], {}, []
         for ps in self.pools:
+            if ps.name in hardened_targets and not ps.harden:
+                ps = replace(ps, harden=True)
             pool, engine, ex = build_pool(ps, layers, model=model, warm=warm)
             pools.append(pool)
             if engine is not None:
@@ -257,13 +299,23 @@ class FleetSpec:
                 # bind back: a reused stage name continues its history
                 ex.prefill_counters = router.register_stage_pool(
                     ex.prefill_pool, ex.prefill_counters)
+        if self.retry:
+            from repro.router.dispatch import RetryPolicy
+            for slo_name, kw in self.retry.items():
+                policy = RetryPolicy(**kw)
+                if slo_name == "default":
+                    router.default_retry = policy
+                else:
+                    router.retry_policies[slo_name] = policy
         injector = PoolFaultInjector([
             PoolFault(f.pool, at_s=f.at_s, duration_s=f.duration_s,
-                      lost_profiles=f.lost_profiles) for f in self.faults])
+                      lost_profiles=f.lost_profiles, kind=f.kind,
+                      slot=f.slot, seed=f.seed) for f in self.faults])
         failover = FailoverController(router, injector)
         client = ServingClient(router, failover, engines=engines, spec=self,
                                dt=self.dt, slo_map=self.slo_classes(),
-                               model=model, layers=layers)
+                               model=model, layers=layers,
+                               watchdog_s=self.watchdog_s)
         for ex in executors:
             ex.on_token = client._on_token
         if self.trace:
@@ -334,6 +386,8 @@ def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
                                      Request, WindowedBaselineServer,
                                      engine_or_windowed)
     plan = _resolve_plan(spec, cfg, spec.plan)
+    hkw = dict(harden=spec.harden, watchdog_steps=spec.watchdog_steps,
+               scrub_blocks=spec.scrub_blocks)
     if spec.backend == "engine" and spec.prefill_backend == "engine":
         # MPAI co-processing split: a prefill-class engine under its own
         # (typically cheaper) precision plan fills paged blocks, the
@@ -344,18 +398,19 @@ def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
         prefill = ContinuousBatchingEngine(
             params, cfg, plan=_resolve_plan(spec, cfg, spec.prefill_plan),
             max_slots=1, prompt_len=spec.prompt_len, max_len=spec.max_len,
-            block_size=spec.block_size, prefill_chunk=spec.prefill_chunk)
+            block_size=spec.block_size, prefill_chunk=spec.prefill_chunk,
+            **hkw)
         decode = ContinuousBatchingEngine(
             params, cfg, plan=plan, max_slots=spec.max_slots,
             prompt_len=spec.prompt_len, max_len=spec.max_len,
-            block_size=spec.block_size, num_blocks=spec.num_blocks)
+            block_size=spec.block_size, num_blocks=spec.num_blocks, **hkw)
         srv = CoProcServer(prefill, decode)
     elif spec.backend == "engine":
         srv = engine_or_windowed(
             params, cfg, plan=plan, max_slots=spec.max_slots,
             prompt_len=spec.prompt_len, max_len=spec.max_len,
             block_size=spec.block_size, num_blocks=spec.num_blocks,
-            prefill_chunk=spec.prefill_chunk,
+            prefill_chunk=spec.prefill_chunk, **hkw,
             on_fallback=lambda e: warnings.warn(
                 f"pool {spec.name!r}: paged decode unavailable ({e}); "
                 f"falling back to the windowed baseline"))

@@ -438,16 +438,20 @@ def test_histogram_percentile_cache_invalidates_on_record():
 # ---------------------------------------------------------------------------
 FLEET_KEYS = {
     "admitted", "rejected", "completed", "violations", "dropped",
-    "failovers", "reschedules", "energy_deferred", "energy_rejected",
+    "drops_by_reason", "failovers", "reschedules", "retries",
+    "watchdog_trips", "bitflips_detected", "blocks_quarantined",
+    "handoffs_replayed", "energy_deferred", "energy_rejected",
     "pools_added", "pools_retired", "energy_j", "queue_depth", "pools",
     "latency_by_class", "violations_by_class",
 }
+DROP_REASONS = {"no_route", "retry_exhausted", "dry_battery", "deadline"}
 POOL_KEYS = {
     "dispatched", "completed", "evicted", "batches", "energy_j", "busy_s",
     "tokens_generated", "tokens_per_s", "decode_tokens", "decode_s",
     "decode_tokens_per_s", "prefill_tokens", "deferrals",
-    "queue_depth_now", "load_now", "queue_depth", "batch_size",
-    "slot_occupancy",
+    "queue_depth_now", "load_now", "bitflips_detected",
+    "blocks_quarantined", "watchdog_trips", "handoffs_replayed",
+    "queue_depth", "batch_size", "slot_occupancy",
 }
 HIST_KEYS = {"count", "mean", "p50", "p99", "dropped"}
 
@@ -463,6 +467,8 @@ def test_telemetry_snapshot_schema_golden():
     client.drain()
     snap = client.telemetry
     assert set(snap) == FLEET_KEYS
+    # reason codes are zero-initialized so the schema is traffic-stable
+    assert set(snap["drops_by_reason"]) >= DROP_REASONS
     pool = snap["pools"]["board"]
     assert set(pool) == POOL_KEYS
     for hist_key in ("queue_depth", "batch_size", "slot_occupancy"):

@@ -199,6 +199,37 @@ def test_orbit_spec_validates_thresholds():
     with pytest.raises(ValueError, match="critical_frac"):
         OrbitSpec(phases=[PhaseSpec("s", 1.0, 1.0)], bucket_j=1.0,
                   conserve_frac=0.2, critical_frac=0.5)
+    with pytest.raises(ValueError, match="storm_decay"):
+        OrbitSpec(phases=[PhaseSpec("s", 1.0, 1.0)], bucket_j=1.0,
+                  storm_decay=1.0)
+
+
+# ---------------------------------------------------------------------------
+# radiation-storm ladder: hardening-event pressure floors the mode
+# ---------------------------------------------------------------------------
+def test_storm_pressure_floors_mode_at_conserve():
+    """A burst of hardening events (failover retries, watchdog trips,
+    bitflips) floors the dispatch mode at conserve even on a full
+    battery — and decays back to nominal once the storm passes."""
+    client = vision_fleet_spec().build()
+    ospec = OrbitSpec(phases=[PhaseSpec("sunlit", 100.0, 1000.0)],
+                      bucket_j=100.0, storm_events=1, storm_decay=0.8)
+    ctrl = ospec.attach(client)
+    assert ctrl.mode == "nominal"
+    client.router.telemetry.retries += 3         # storm: retry burst
+    client.step()
+    assert ctrl.storm and ctrl.mode == "conserve"
+    assert client.router.energy_mode == "conserve"
+    assert ctrl.report()["storm_pressure"] > 0
+    for _ in range(50):                          # no new events: decay out
+        client.step()
+        if ctrl.mode == "nominal":
+            break
+    assert ctrl.mode == "nominal" and not ctrl.storm
+    # the storm knobs round-trip like every other orbit field
+    d = ospec.to_dict()
+    assert OrbitSpec.from_dict(json.loads(json.dumps(d))).to_dict() == d
+    assert d["storm_events"] == 1 and d["storm_decay"] == 0.8
 
 
 # ---------------------------------------------------------------------------

@@ -12,8 +12,8 @@ from repro.core.scheduler import (ScheduledPlan, pareto_frontier,
                                   reschedule_over_subset, schedule)
 from repro.models.cnn import ursonet_table1_layers
 from repro.router import (AcceleratorPool, CostModelExecutor,
-                          FailoverController, PoolState, Router,
-                          RouterRequest, SLOClass, select_plan)
+                          FailoverController, PoolState, RetryPolicy,
+                          Router, RouterRequest, SLOClass, select_plan)
 from repro.runtime.fault import PoolFault, PoolFaultInjector
 
 from conftest import tiny_dense
@@ -277,6 +277,100 @@ def test_pool_fault_injector_orders_events():
     assert [(e.kind, e.fault.pool) for e in evs] == [("degrade", "b"),
                                                      ("recover", "b")]
     assert inj.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded failover retries: backoff on the virtual clock + reason codes
+# ---------------------------------------------------------------------------
+def test_retry_policy_backoff_schedule():
+    p = RetryPolicy(max_attempts=4, backoff_s=0.05, multiplier=2.0,
+                    max_backoff_s=0.15)
+    assert p.delay_s(2) == pytest.approx(0.05)   # first backed-off attempt
+    assert p.delay_s(3) == pytest.approx(0.10)   # doubles
+    assert p.delay_s(4) == pytest.approx(0.15)   # capped
+
+
+def _evict_everywhere(router, req):
+    """Displace ``req`` wherever it landed (the failover controller's
+    degrade step, by hand), leaving every pool healthy again."""
+    displaced = [r for p in router.pools.values() for r in p.degrade(())]
+    assert displaced == [req]
+    for p in router.pools.values():
+        p.recover(())
+
+
+def test_redispatch_backoff_waits_on_virtual_clock():
+    """The first redispatch is immediate; the second waits out the
+    policy backoff on the router's clock — a flapping pool cannot spin
+    the router hot — but the request stays owed work throughout."""
+    layers = _layers()
+    router = Router(layers, [_pool("a", ("mpsoc_dpu",), layers),
+                             _pool("b", ("mpsoc_dpu",), layers)])
+    router.default_retry = RetryPolicy(max_attempts=5, backoff_s=0.05)
+    req = RouterRequest(0, RELAXED, 0.0)
+    assert router.submit(req, 0.0)
+    _evict_everywhere(router, req)
+    router.redispatch(req, 0.1)                  # attempt 1: immediate
+    assert req.rerouted == 1 and not req.dropped
+    assert sum(p.load for p in router.pools.values()) == 1
+    _evict_everywhere(router, req)
+    router.redispatch(req, 0.2)                  # attempt 2: heaped
+    assert all(p.load == 0 for p in router.pools.values())
+    assert router.outstanding == 1               # owed, waiting out backoff
+    router.step(0.249)                           # 0.2 + 0.05 not yet due
+    assert all(p.load == 0 for p in router.pools.values())
+    router.step(0.251)                           # due: re-placed
+    assert sum(p.load for p in router.pools.values()) == 1
+    assert router.telemetry.retries == 2
+    assert not req.dropped
+
+
+def test_retry_exhaustion_and_no_route_reason_codes():
+    """Exceeding the attempt budget drops with ``retry_exhausted``; a
+    redispatch with nothing routable anywhere drops with ``no_route`` —
+    both visible in the snapshot's reason ledger."""
+    layers = _layers()
+    router = Router(layers, [_pool("only", ("mpsoc_dpu",), layers)])
+    router.retry_policies["relaxed"] = RetryPolicy(max_attempts=1)
+    r0 = RouterRequest(0, RELAXED, 0.0)
+    r1 = RouterRequest(1, RELAXED, 0.0)
+    assert router.submit(r0, 0.0) and router.submit(r1, 0.0)
+    # r0: first redispatch lands (budget 1), second exhausts the budget
+    [p.degrade(()) for p in router.pools.values()]
+    [p.recover(()) for p in router.pools.values()]
+    router.redispatch(r0, 0.01)
+    assert not r0.dropped
+    router.redispatch(r0, 0.02)
+    assert r0.dropped
+    # r1: the whole fleet is dead at its redispatch -> total loss
+    router.pools["only"].degrade(())
+    router.redispatch(r1, 0.03)
+    assert r1.dropped
+    snap = router.telemetry.snapshot()
+    assert snap["drops_by_reason"]["retry_exhausted"] == 1
+    assert snap["drops_by_reason"]["no_route"] == 1
+    assert snap["dropped"] == 2 and snap["retries"] >= 2
+
+
+def test_backed_off_retry_past_deadline_drops_when_policy_says():
+    """give_up_past_deadline: a queued retry whose deadline elapsed
+    while it waited drops with the ``deadline`` reason instead of being
+    served best-effort."""
+    layers = _layers()
+    router = Router(layers, [_pool("only", ("mpsoc_dpu",), layers)])
+    router.default_retry = RetryPolicy(max_attempts=5, backoff_s=10.0,
+                                       give_up_past_deadline=True)
+    tight = SLOClass("tight", max_latency_s=0.5)
+    req = RouterRequest(0, tight, 0.0)
+    assert router.submit(req, 0.0)
+    _evict_everywhere(router, req)
+    router.redispatch(req, 0.1)                  # attempt 1: immediate
+    _evict_everywhere(router, req)
+    router.redispatch(req, 0.2)                  # attempt 2: due at 10.2
+    router.step(20.0)                            # deadline (0.5) long gone
+    assert req.dropped
+    snap = router.telemetry.snapshot()
+    assert snap["drops_by_reason"]["deadline"] == 1
 
 
 # ---------------------------------------------------------------------------

@@ -432,3 +432,122 @@ def test_disaggregated_pool_retire_and_readd_continues_stage_history(
     client.submit(p, max_new=3).result()
     e1 = client.telemetry["pools"]["lm.prefill"]["energy_j"]
     assert e1 > e0                               # history continued
+
+
+# ---------------------------------------------------------------------------
+# radiation hardening: SEU injection -> detection -> exactly-once recovery
+# ---------------------------------------------------------------------------
+def _run_hardening(spec, model, n=4, seed=9):
+    client = spec.build(model=model)
+    handles = [client.submit(p, slo="offline", max_new=MAX_NEW)
+               for p in prompts(n, seed=seed)]
+    client.drain()
+    return client, [tuple(h.tokens) for h in handles]
+
+
+def test_fault_spec_round_trips_hardening_fields():
+    spec = lm_spec(harden=True, watchdog_steps=4, scrub_blocks=1)
+    spec.faults = [FaultSpec("lm", at_s=0.01, duration_s=0.5,
+                             kind="slot_stall", slot=2),
+                   FaultSpec("lm", at_s=0.02, kind="kv_bitflip", seed=11)]
+    spec.retry = {"default": dict(max_attempts=3, backoff_s=0.01),
+                  "offline": dict(max_attempts=2)}
+    spec.watchdog_s = 1.5
+    d = spec.to_dict()
+    restored = FleetSpec.from_dict(json.loads(json.dumps(d)))
+    assert restored.to_dict() == d
+    assert restored.faults[0].kind == "slot_stall"
+    assert restored.faults[0].slot == 2
+    assert restored.faults[1].seed == 11
+    assert restored.pools[0].harden
+    assert restored.pools[0].watchdog_steps == 4
+    with pytest.raises(ValueError, match="fault kind"):
+        FaultSpec("lm", at_s=0.0, kind="cosmic_ray")
+
+
+def test_hardened_no_faults_is_bit_identical_and_quiet(model):
+    """Hardening on, no faults: same bits as hardening off, and every
+    hardening counter stays zero — the layer is pure overhead-free
+    observation until something actually upsets."""
+    _, base = _run_hardening(lm_spec(), model)
+    client, hard = _run_hardening(lm_spec(harden=True), model)
+    assert hard == base
+    pool = client.telemetry["pools"]["lm"]
+    assert pool["bitflips_detected"] == 0
+    assert pool["blocks_quarantined"] == 0
+    assert pool["watchdog_trips"] == 0
+
+
+def test_kv_bitflip_detected_quarantined_recovered_bit_exact(model):
+    """A scheduled SEU flips one bit in a sealed KV block: the fused
+    decode-path verify catches it the same step, the block quarantines
+    with exact allocator accounting, and the evicted request replays to
+    the same bits an unfaulted run produces."""
+    _, base = _run_hardening(lm_spec(), model)
+    spec = lm_spec()          # harden auto-enabled by the data-plane fault
+    spec.faults = [FaultSpec("lm", at_s=0.001, kind="kv_bitflip", seed=3)]
+    client, out = _run_hardening(spec, model)
+    engine = client.engines["lm"]
+    assert engine.harden                         # build() hardened it
+    assert out == base                           # recovery is bit-exact
+    pool = client.telemetry["pools"]["lm"]
+    assert pool["bitflips_detected"] >= 1
+    assert pool["blocks_quarantined"] >= 1
+    # quarantined blocks stay out of service; everything else came home
+    alloc = engine.alloc
+    assert alloc.available + len(alloc.quarantined) == alloc.num_blocks
+    snap = client.telemetry
+    assert snap["completed"] == snap["admitted"]  # nobody dropped
+
+
+def test_slot_stall_watchdog_evicts_and_replays_bit_exact(model):
+    """A latched-up slot makes no decode progress: the engine watchdog
+    trips after watchdog_steps, evicts, and replays elsewhere — final
+    tokens bit-match the unfaulted run."""
+    _, base = _run_hardening(lm_spec(), model)
+    spec = lm_spec(watchdog_steps=3)
+    spec.faults = [FaultSpec("lm", at_s=0.001, duration_s=0.5,
+                             kind="slot_stall", slot=0)]
+    client, out = _run_hardening(spec, model)
+    assert out == base
+    pool = client.telemetry["pools"]["lm"]
+    assert pool["watchdog_trips"] >= 1
+
+
+def test_handoff_loss_is_replayed_exactly_once(model):
+    """A dropped prefill->decode handoff is re-requested at the seam;
+    the replacement regenerates identical KV bits and the stream never
+    sees a duplicated or missing token."""
+    _, base = _run_hardening(_disagg_spec(), model)
+    spec = _disagg_spec()
+    spec.faults = [FaultSpec("lm", at_s=0.001, kind="handoff_loss")]
+    client = spec.build(model=model)
+    handles = [client.submit(p, slo="offline", max_new=MAX_NEW)
+               for p in prompts(4, seed=9)]
+    streamed = {h.rid: list(h.stream()) for h in handles}
+    client.drain()
+    assert [tuple(h.tokens) for h in handles] == base
+    pool = client.telemetry["pools"]["lm"]
+    assert pool["handoffs_replayed"] >= 1
+    for h in handles:        # exactly-once delivery on the stream
+        assert streamed[h.rid] == list(h.result().tokens)
+
+
+def test_stream_cursor_survives_midstream_reroute(model):
+    """stream() across a mid-decode failover: the re-served request's
+    tokens arrive exactly once, in order (regression: the backfill
+    cursor used to re-deliver the pre-fault prefix after a reroute)."""
+    import math
+    spec = lm_spec()
+    spec.pools.append(PoolSpec("lm-b", ("tpu_v5e_bf16",),
+                               backend="engine", capacity=1, max_window=4,
+                               max_wait_s=0.0, max_slots=3,
+                               prompt_len=PROMPT_LEN, max_new=MAX_NEW))
+    spec.faults = [FaultSpec("lm", at_s=0.003, duration_s=math.inf)]
+    client = spec.build(model=model)
+    h = client.submit(prompts(1, seed=6)[0], slo="offline",
+                      max_new=MAX_NEW)
+    toks = list(h.stream())
+    assert h.telemetry["rerouted"] >= 1          # the fault really hit
+    assert toks == list(h.result().tokens)       # no dupes, no holes
+    assert len(toks) == MAX_NEW
