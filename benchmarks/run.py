@@ -35,6 +35,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                    accounting
 
 ``--check`` turns invariants into failures across the serving benches:
+fleetlint static findings (wall clocks in virtual-clock code, host
+syncs in jitted functions, allocator bypasses — see
+``src/repro/analysis/``) abort before any bench runs, and
 truncated open-loop traces (the ``max_s`` safety net fired, so the
 trace silently shrank), chunked-prefill output mismatches, token loss
 at the co-processing handoff, mis-attributed per-stage energy, orphan
@@ -70,6 +73,24 @@ def main() -> None:
                             roofline_bench, router_bench, table1_ursonet)
 
     if args.check:
+        # fleetlint first: a benchmark number measured on a tree with a
+        # wall-clock read in virtual-clock code or a host sync in the
+        # fused dispatch is already fiction, so static findings abort
+        # before any bench spends minutes producing it
+        from repro.analysis import run_lint
+        report = run_lint()
+        if not report.clean:
+            for f in report.findings:
+                print(f"fleetlint: {f.path}:{f.line}: {f.code} "
+                      f"{f.message}")
+            for key in report.stale_suppressions:
+                print(f"fleetlint: stale suppression {key!r}")
+            for path, err in report.parse_errors:
+                print(f"fleetlint: {path}: parse error: {err}")
+            raise SystemExit(
+                f"--check: {len(report.findings)} fleetlint finding(s); "
+                f"fix or reason-suppress in "
+                f"src/repro/analysis/baseline.json before benchmarking")
         # any open_loop truncation inside a bench is a hard failure:
         # a trace cut by the max_s safety net undercounts the offered
         # load, so every ratio gated downstream would be fiction

@@ -1,0 +1,15 @@
+"""fleetlint: static invariant analysis for the serving stack.
+
+Pure-``ast`` passes over ``src/repro`` that keep the repo's tested
+invariants from regressing silently: virtual-clock purity, jit-boundary
+hygiene, allocator-accounting encapsulation, kernel contracts, and
+exception/telemetry-schema hygiene.  See ``analysis/README.md``.
+"""
+from repro.analysis.core import (BaselineError, DEFAULT_BASELINE,  # noqa: F401
+                                 FILE_PASSES, Finding, PROJECT_PASSES,
+                                 Report, lint_file, load_baseline,
+                                 run_lint)
+
+__all__ = ["BaselineError", "DEFAULT_BASELINE", "FILE_PASSES", "Finding",
+           "PROJECT_PASSES", "Report", "lint_file", "load_baseline",
+           "run_lint"]

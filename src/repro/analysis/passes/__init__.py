@@ -1,0 +1,1 @@
+"""fleetlint passes — importing a module registers its pass."""

@@ -1,0 +1,479 @@
+"""Pass 2 — jit-boundary hygiene (JIT).
+
+The fused decode dispatch is fast *because* nothing inside it touches
+the host: an accidental ``bool(traced)``, ``.item()``, or ``np.`` call
+inside a jitted program forces a device sync per step (or a tracer
+error at best), and a dict-valued static arg or a closure-captured
+mutable recompiles the program on every call.  This pass finds jitted
+contexts statically — ``@jax.jit`` / ``@functools.partial(jax.jit,
+...)`` decorators, ``jax.jit(fn)`` / ``jax.jit(self._method)`` /
+``jax.jit(lambda ...)`` call sites — and flags inside them:
+
+* ``JIT001`` — host conversion of a traced value: ``bool()`` /
+  ``int()`` / ``float()`` over an expression mentioning a traced
+  parameter, or any ``.item()`` / ``.tolist()`` call.
+* ``JIT002`` — host-library call: any use of the ``numpy`` module (the
+  host ``np``, not ``jnp``) inside a jitted body.
+* ``JIT003`` — Python control flow on a traced argument: ``if`` /
+  ``while`` whose test mentions a traced parameter.  Parameters named
+  in ``static_argnums`` / ``static_argnames`` and names derived from
+  ``.shape`` / ``.ndim`` / ``.dtype`` are known static and exempt.
+* ``JIT004`` — recompile hazard: a static arg whose default is a
+  dict/list/set (unhashable — every call is a cache miss).
+* ``JIT005`` — recompile hazard: a jitted closure capturing a mutable
+  (list/dict/set) binding from its enclosing function scope.
+
+``assert`` statements are exempt (shape checks on static values are
+idiomatic), as are reads through ``self.`` (bound configuration).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import FileContext, Finding, file_pass
+
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                    ast.DictComp, ast.SetComp)
+MUTABLE_CTORS = frozenset({"list", "dict", "set", "defaultdict",
+                           "OrderedDict", "deque"})
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "itemsize"})
+
+
+class _Aliases:
+    def __init__(self, tree: ast.AST):
+        self.jax: Set[str] = set()
+        self.jit: Set[str] = set()           # from jax import jit
+        self.partial: Set[str] = set()       # partial / functools.partial
+        self.functools: Set[str] = set()
+        self.np: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    alias = a.asname or a.name
+                    if a.name == "jax":
+                        self.jax.add(alias)
+                    elif a.name == "functools":
+                        self.functools.add(alias)
+                    elif a.name == "numpy":
+                        self.np.add(alias)
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    alias = a.asname or a.name
+                    if node.module == "jax" and a.name == "jit":
+                        self.jit.add(alias)
+                    elif (node.module == "functools"
+                          and a.name == "partial"):
+                        self.partial.add(alias)
+                    elif node.module == "numpy" and a.name is not None:
+                        pass                 # from numpy import X: ignore
+
+    def is_jit(self, fn: ast.AST) -> bool:
+        """Is ``fn`` an expression naming ``jax.jit``?"""
+        if isinstance(fn, ast.Name):
+            return fn.id in self.jit
+        return (isinstance(fn, ast.Attribute) and fn.attr == "jit"
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id in self.jax)
+
+    def is_partial(self, fn: ast.AST) -> bool:
+        if isinstance(fn, ast.Name):
+            return fn.id in self.partial
+        return (isinstance(fn, ast.Attribute) and fn.attr == "partial"
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id in self.functools)
+
+
+def _static_info(call: ast.Call) -> Tuple[List[int], List[str]]:
+    """Extract static_argnums / static_argnames from a jit(...) call."""
+    nums: List[int] = []
+    names: List[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            nums.extend(_const_ints(kw.value))
+        elif kw.arg == "static_argnames":
+            names.extend(_const_strs(kw.value))
+    return nums, names
+
+
+def _const_ints(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            out.extend(_const_ints(el))
+        return out
+    return []
+
+
+def _const_strs(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for el in node.elts:
+            out.extend(_const_strs(el))
+        return out
+    return []
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    names += [p.arg for p in a.kwonlyargs]
+    return names
+
+
+def _param_defaults(fn: ast.AST) -> Dict[str, ast.AST]:
+    """Map param name -> default expression (positional + kwonly)."""
+    a = fn.args
+    pos = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    out: Dict[str, ast.AST] = {}
+    for name, default in zip(reversed(pos), reversed(a.defaults)):
+        out[name] = default
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            out[p.arg] = d
+    return out
+
+
+class _Scopes(ast.NodeVisitor):
+    """Local defs / simple assignments per function scope, class methods
+    per class — the resolution tables for ``jax.jit(<name>)`` and
+    ``jax.jit(self.<method>)`` call sites."""
+
+    def __init__(self, tree: ast.AST):
+        self.defs: Dict[int, Dict[str, ast.AST]] = {}       # scope -> defs
+        self.assigns: Dict[int, Dict[str, ast.AST]] = {}    # scope -> exprs
+        self.methods: Dict[int, Dict[str, ast.AST]] = {}    # class -> defs
+        self.parent_scope: Dict[int, Optional[ast.AST]] = {}
+        self.enclosing_class: Dict[int, Optional[ast.AST]] = {}
+        self._stack: List[ast.AST] = [tree]
+        self._class: List[Optional[ast.AST]] = [None]
+        self.defs[id(tree)] = {}
+        self.assigns[id(tree)] = {}
+        self.generic_visit(tree)
+
+    def _record(self, name: str, node: ast.AST) -> None:
+        self.defs[id(self._stack[-1])][name] = node
+        if self._class[-1] is not None and self._stack[-1] is self._class[-1]:
+            self.methods.setdefault(id(self._class[-1]), {})[name] = node
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._record(node.name, node)
+        self.methods.setdefault(id(node), {})
+        self.parent_scope[id(node)] = self._stack[-1]
+        self._stack.append(node)
+        self._class.append(node)
+        self.defs[id(node)] = {}
+        self.assigns[id(node)] = {}
+        self.generic_visit(node)
+        self._stack.pop()
+        self._class.pop()
+
+    def _visit_fn(self, node) -> None:
+        self._record(node.name, node)
+        self.parent_scope[id(node)] = self._stack[-1]
+        self.enclosing_class[id(node)] = self._class[-1]
+        self._stack.append(node)
+        self._class.append(None)       # methods of nested classes re-push
+        self.defs[id(node)] = {}
+        self.assigns[id(node)] = {}
+        self.generic_visit(node)
+        self._stack.pop()
+        self._class.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        # lambdas hold no assignments, but their enclosing scope matters
+        # for closure-capture analysis (JIT005)
+        self.parent_scope[id(node)] = self._stack[-1]
+        self.enclosing_class[id(node)] = None
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name):
+                self.assigns[id(self._stack[-1])][tgt.id] = node.value
+        self.generic_visit(node)
+
+    def resolve(self, scope: ast.AST, name: str) -> Optional[ast.AST]:
+        """Find a def named ``name`` walking scopes outward."""
+        cur: Optional[ast.AST] = scope
+        while cur is not None:
+            d = self.defs.get(id(cur), {})
+            if name in d:
+                return d[name]
+            cur = self.parent_scope.get(id(cur))
+        return None
+
+
+@file_pass("jit")
+def jit_pass(ctx: FileContext) -> List[Finding]:
+    aliases = _Aliases(ctx.tree)
+    if not (aliases.jax or aliases.jit):
+        return []
+    scopes = _Scopes(ctx.tree)
+
+    # ---- discover jit contexts --------------------------------------
+    # context: (fn_node, traced_param_names, is_bound_method)
+    contexts: Dict[int, Tuple[ast.AST, List[str]]] = {}
+    findings: List[Finding] = []
+
+    def add_context(fn: ast.AST, static_nums: Sequence[int],
+                    static_names: Sequence[str], bound: bool) -> None:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Lambda)):
+            return
+        params = _param_names(fn)
+        if params and params[0] == "self" and (
+                bound or scopes.enclosing_class.get(id(fn)) is not None):
+            params = params[1:]
+        static = {params[i] for i in static_nums if 0 <= i < len(params)}
+        static.update(static_names)
+        traced = [p for p in params if p not in static]
+        contexts[id(fn)] = (fn, traced)
+        # JIT004: unhashable static defaults
+        defaults = _param_defaults(fn)
+        for name in sorted(static):
+            d = defaults.get(name)
+            if d is not None and (isinstance(d, MUTABLE_LITERALS) or (
+                    isinstance(d, ast.Call) and isinstance(d.func, ast.Name)
+                    and d.func.id in MUTABLE_CTORS)):
+                findings.append(ctx.finding(
+                    "jit", "JIT004", fn,
+                    f"static arg {name!r} defaults to an unhashable "
+                    f"container — every jit call is a cache miss "
+                    f"(recompile); use a hashable static or close over "
+                    f"it"))
+
+    def jit_decorator(dec: ast.AST):
+        """Return (static_nums, static_names) if ``dec`` is jit-like."""
+        if aliases.is_jit(dec):
+            return [], []
+        if isinstance(dec, ast.Call):
+            if aliases.is_jit(dec.func):
+                return _static_info(dec)
+            if (aliases.is_partial(dec.func) and dec.args
+                    and aliases.is_jit(dec.args[0])):
+                return _static_info(dec)
+        return None
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                info = jit_decorator(dec)
+                if info is not None:
+                    add_context(node, info[0], info[1], bound=False)
+        elif isinstance(node, ast.Call) and aliases.is_jit(node.func):
+            if not node.args:
+                continue
+            target = node.args[0]
+            nums, names = _static_info(node)
+            if isinstance(target, ast.Lambda):
+                add_context(target, nums, names, bound=False)
+            elif isinstance(target, ast.Name):
+                scope = _scope_of(node, scopes, ctx)
+                fn = scopes.resolve(scope, target.id) if scope else None
+                if fn is not None:
+                    add_context(fn, nums, names, bound=False)
+            elif (isinstance(target, ast.Attribute)
+                  and isinstance(target.value, ast.Name)
+                  and target.value.id == "self"):
+                cls = _enclosing_class_of(node, scopes, ctx)
+                fn = (scopes.methods.get(id(cls), {}).get(target.attr)
+                      if cls is not None else None)
+                if fn is not None:
+                    add_context(fn, nums, names, bound=True)
+
+    # ---- analyze each context ---------------------------------------
+    for fn, traced in contexts.values():
+        findings.extend(_check_body(ctx, aliases, scopes, fn, traced))
+    return findings
+
+
+def _scope_of(node: ast.AST, scopes: _Scopes,
+              ctx: FileContext) -> Optional[ast.AST]:
+    """Innermost function/module scope a call site sits in, recovered
+    from the qualname annotation (class scopes resolve to their
+    parent)."""
+    qual = ctx.symbol(node)
+    cur: ast.AST = ctx.tree
+    if qual:
+        for part in qual.split("."):
+            d = scopes.defs.get(id(cur), {})
+            nxt = d.get(part)
+            if nxt is None:
+                break
+            cur = nxt
+    if isinstance(cur, ast.ClassDef):
+        return scopes.parent_scope.get(id(cur), ctx.tree)
+    return cur
+
+
+def _enclosing_class_of(node: ast.AST, scopes: _Scopes,
+                        ctx: FileContext) -> Optional[ast.AST]:
+    qual = ctx.symbol(node)
+    cur: ast.AST = ctx.tree
+    cls: Optional[ast.AST] = None
+    if qual:
+        for part in qual.split("."):
+            d = scopes.defs.get(id(cur), {})
+            nxt = d.get(part)
+            if nxt is None:
+                break
+            if isinstance(nxt, ast.ClassDef):
+                cls = nxt
+            cur = nxt
+    return cls
+
+
+def _body_nodes(fn: ast.AST):
+    return fn.body if isinstance(fn.body, list) else [fn.body]
+
+
+def _check_body(ctx: FileContext, aliases: _Aliases, scopes: _Scopes,
+                fn: ast.AST, traced: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    static_names: Set[str] = set()
+    traced_set = set(traced)
+
+    # names derived from shapes/dtypes are static: iterate to fixpoint
+    assigns = [n for n in ast.walk(fn) if isinstance(n, ast.Assign)]
+    for _ in range(3):
+        grew = False
+        for a in assigns:
+            if _is_static_expr(a.value, static_names, traced_set):
+                for tgt in a.targets:
+                    for name in _target_names(tgt):
+                        if name not in static_names:
+                            static_names.add(name)
+                            grew = True
+        if not grew:
+            break
+    traced_set -= static_names
+
+    def mentions_traced(expr: ast.AST) -> bool:
+        return any(isinstance(n, ast.Name) and n.id in traced_set
+                   for n in ast.walk(expr))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assert):
+            continue
+        if isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if _shape_guarded(test) or not mentions_traced(test):
+                continue
+            kind = "while" if isinstance(node, ast.While) else "if"
+            findings.append(ctx.finding(
+                "jit", "JIT003", node,
+                f"Python `{kind}` on a traced argument inside a jitted "
+                f"function — forces a host sync (TracerBoolConversion); "
+                f"use jnp.where / lax.cond, or declare the arg static"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Name) and f.id in ("bool", "int", "float")
+                    and node.args and mentions_traced(node.args[0])):
+                findings.append(ctx.finding(
+                    "jit", "JIT001", node,
+                    f"host conversion {f.id}() of a traced value inside "
+                    f"a jitted function — implicit device sync"))
+            elif (isinstance(f, ast.Attribute)
+                  and f.attr in ("item", "tolist")):
+                findings.append(ctx.finding(
+                    "jit", "JIT001", node,
+                    f".{f.attr}() inside a jitted function — implicit "
+                    f"device sync on every call"))
+        elif (isinstance(node, ast.Name) and node.id in aliases.np
+              and isinstance(node.ctx, ast.Load)):
+            findings.append(ctx.finding(
+                "jit", "JIT002", node,
+                "host numpy call inside a jitted function — runs at "
+                "trace time or forces a sync; use jnp"))
+
+    # JIT005: closure-captured mutables (nested contexts only)
+    parent = scopes.parent_scope.get(id(fn))
+    if parent is not None and not isinstance(parent, ast.Module):
+        local = set(traced) | static_names | {"self"}
+        for a in assigns:
+            for tgt in a.targets:
+                local.update(_target_names(tgt))
+        for n in ast.walk(fn):
+            if isinstance(n, (ast.FunctionDef, ast.Lambda)):
+                local.update(_param_names(n))
+            if isinstance(n, ast.FunctionDef):
+                local.add(n.name)
+        seen: Set[str] = set()
+        for n in ast.walk(fn):
+            if (isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                    and n.id not in local and n.id not in seen):
+                seen.add(n.id)
+                enc = scopes.assigns.get(id(parent), {}).get(n.id)
+                if enc is not None and (
+                        isinstance(enc, MUTABLE_LITERALS)
+                        or (isinstance(enc, ast.Call)
+                            and isinstance(enc.func, ast.Name)
+                            and enc.func.id in MUTABLE_CTORS)):
+                    findings.append(ctx.finding(
+                        "jit", "JIT005", n,
+                        f"jitted closure captures mutable {n.id!r} from "
+                        f"the enclosing scope — mutation after trace is "
+                        f"silently ignored and identity changes "
+                        f"recompile; pass it as an argument"))
+    return findings
+
+
+def _target_names(tgt: ast.AST) -> List[str]:
+    if isinstance(tgt, ast.Name):
+        return [tgt.id]
+    if isinstance(tgt, (ast.Tuple, ast.List)):
+        out = []
+        for el in tgt.elts:
+            out.extend(_target_names(el))
+        return out
+    return []
+
+
+def _shape_guarded(test: ast.AST) -> bool:
+    """Tests that only touch `.shape`-ish metadata are trace-static."""
+    names = [n for n in ast.walk(test) if isinstance(n, ast.Name)]
+    attrs = [n for n in ast.walk(test) if isinstance(n, ast.Attribute)]
+    return bool(attrs) and all(a.attr in STATIC_ATTRS for a in attrs) \
+        and all(any(isinstance(p, ast.Attribute) for p in ast.walk(test))
+                for _ in names)
+
+
+def _is_static_expr(expr: ast.AST, static: Set[str],
+                    traced: Set[str]) -> bool:
+    """Conservatively true when ``expr`` is shape/constant-derived."""
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Name):
+        return expr.id in static
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in STATIC_ATTRS:
+            return True
+        return False
+    if isinstance(expr, ast.Subscript):
+        return _is_static_expr(expr.value, static, traced)
+    if isinstance(expr, ast.BinOp):
+        return (_is_static_expr(expr.left, static, traced)
+                and _is_static_expr(expr.right, static, traced))
+    if isinstance(expr, ast.UnaryOp):
+        return _is_static_expr(expr.operand, static, traced)
+    if isinstance(expr, ast.Tuple):
+        return all(_is_static_expr(e, static, traced) for e in expr.elts)
+    if isinstance(expr, ast.Call):
+        fname = None
+        if isinstance(expr.func, ast.Name):
+            fname = expr.func.id
+        elif isinstance(expr.func, ast.Attribute):
+            fname = expr.func.attr
+        if fname in ("len", "min", "max", "sqrt", "ceil", "floor", "abs",
+                     "round", "int", "float"):
+            return all(_is_static_expr(a, static, traced)
+                       for a in expr.args)
+    return False

@@ -1,0 +1,359 @@
+"""Pass 4 — kernel contracts (KRN), a project pass over ``kernels/``.
+
+Checks every ``pl.pallas_call`` site in ``src/repro/kernels`` against
+the declarative table in :mod:`repro.analysis.passes.contracts` without
+compiling anything.  The checks mirror the ways a Pallas kernel breaks
+silently (garbage DMA) or loudly at trace time:
+
+* ``KRN001`` — pallas_call in a wrapper with no contract entry;
+  ``KRN002`` — contract entry whose wrapper no longer exists (stale).
+* ``KRN003`` — grid rank differs from the contract;
+  ``KRN004`` — ``num_scalar_prefetch`` differs.
+* ``KRN005`` — index-map arity != grid_rank + num_scalar_prefetch (the
+  map would be called with the wrong number of program ids);
+  ``KRN006`` — index-map return rank != BlockSpec block-shape rank.
+* ``KRN007`` — index-map component reads a prefetched table by
+  subscript without clamping (``jnp.maximum``/``minimum``/``clip``):
+  a ``-1`` dead-entry sentinel would DMA out of bounds.
+* ``KRN008`` — kernel body missing the contracted ``pl.when`` tail
+  guard; uninitialized accumulators / dead-block MXU work.
+* ``KRN009`` — ``dimension_semantics`` length or content differs from
+  the contract.
+* ``KRN010`` — wrapper missing the contracted divisibility ``assert``
+  (`% block == 0`) ahead of the call.
+* ``KRN011`` — ``out_shape`` dtype source differs from the contract
+  (e.g. an int8 matmul silently widened to f32 accumulation output).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.core import FileContext, Finding, project_pass
+from repro.analysis.passes.contracts import KERNEL_CONTRACTS, KernelContract
+
+KERNELS_DIR = "src/repro/kernels"
+
+CLAMP_FNS = frozenset({"maximum", "minimum", "clip", "clamp"})
+
+
+def _mk(ctx: FileContext, code: str, node: ast.AST, msg: str,
+        symbol: str = "") -> Finding:
+    f = ctx.finding("kernel", code, node, msg)
+    if symbol:
+        f = Finding(f.pass_id, f.code, f.path, f.line, f.message,
+                    symbol=symbol)
+    return f
+
+
+class _Wrapper:
+    """One enclosing function that issues a pl.pallas_call."""
+
+    def __init__(self, fn: ast.FunctionDef, call: ast.Call):
+        self.fn = fn
+        self.call = call
+        self.assigns: Dict[str, ast.AST] = {}
+        self.defs: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.assigns[tgt.id] = node.value
+            elif isinstance(node, ast.FunctionDef) and node is not fn:
+                self.defs[node.name] = node
+
+    def resolve(self, node: ast.AST) -> ast.AST:
+        """Follow one level of local Name indirection."""
+        if isinstance(node, ast.Name) and node.id in self.assigns:
+            return self.assigns[node.id]
+        return node
+
+    def kw(self, call: ast.Call, name: str) -> Optional[ast.AST]:
+        for k in call.keywords:
+            if k.arg == name:
+                return self.resolve(k.value)
+        return None
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "pallas_call"
+            and isinstance(f.value, ast.Name) and f.value.id == "pl")
+
+
+def _index_maps(spec_call: ast.AST, w: _Wrapper):
+    """Yield (block_shape_node, index_map_node) from a BlockSpec call."""
+    spec_call = w.resolve(spec_call)
+    if not isinstance(spec_call, ast.Call):
+        return None
+    args = list(spec_call.args)
+    shape = args[0] if args else None
+    imap = args[1] if len(args) > 1 else None
+    for k in spec_call.keywords:
+        if k.arg in ("block_shape",):
+            shape = k.value
+        elif k.arg in ("index_map",):
+            imap = k.value
+    return shape, imap
+
+
+def _tuple_len(node: ast.AST) -> Optional[int]:
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    return None
+
+
+def _map_fn(node: ast.AST, w: _Wrapper):
+    """Resolve an index-map expression to (params, return_expr)."""
+    node = w.resolve(node)
+    if isinstance(node, ast.Lambda):
+        return [a.arg for a in node.args.args], node.body
+    if isinstance(node, ast.Name) and node.id in w.defs:
+        fn = w.defs[node.id]
+        rets = [n for n in ast.walk(fn) if isinstance(n, ast.Return)]
+        ret = rets[0].value if rets else None
+        return [a.arg for a in fn.args.args], ret
+    return None, None
+
+
+def _uses_pl_when(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "when"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "pl"):
+            return True
+    return False
+
+
+def _has_mod_assert(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assert):
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod):
+                    return True
+    return False
+
+
+def _semantics_tuple(call: ast.Call, w: _Wrapper):
+    """Find dimension_semantics=(...) anywhere in the call's keywords."""
+    for kw in call.keywords:
+        for node in ast.walk(kw.value):
+            if (isinstance(node, ast.keyword)
+                    and node.arg == "dimension_semantics"):
+                v = w.resolve(node.value)
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    return tuple(e.value for e in v.elts
+                                 if isinstance(e, ast.Constant))
+    return None
+
+
+def _out_dtype_texts(call: ast.Call, w: _Wrapper) -> List[str]:
+    out_shape = w.kw(call, "out_shape")
+    if out_shape is None:
+        return []
+    structs = (out_shape.elts
+               if isinstance(out_shape, (ast.Tuple, ast.List))
+               else [out_shape])
+    texts = []
+    for s in structs:
+        s = w.resolve(s)
+        if isinstance(s, ast.Call) and len(s.args) >= 2:
+            texts.append(ast.unparse(s.args[1]))
+    return texts
+
+
+def _check_site(ctx: FileContext, w: _Wrapper, name: str,
+                c: KernelContract) -> List[Finding]:
+    out: List[Finding] = []
+    call = w.call
+
+    def flag(code: str, node: ast.AST, msg: str) -> None:
+        out.append(_mk(ctx, code, node, msg, symbol=name))
+
+    # ---- grid / scalar prefetch -------------------------------------
+    grid = w.kw(call, "grid")
+    nsp = 0
+    grid_spec = w.kw(call, "grid_spec")
+    if grid_spec is not None and isinstance(grid_spec, ast.Call):
+        g = None
+        for k in grid_spec.keywords:
+            if k.arg == "grid":
+                g = w.resolve(k.value)
+            elif k.arg == "num_scalar_prefetch":
+                if isinstance(k.value, ast.Constant):
+                    nsp = int(k.value.value)
+        grid = g if g is not None else grid
+    rank = _tuple_len(grid) if grid is not None else None
+    if rank is not None and rank != c.grid_rank:
+        flag("KRN003", call,
+             f"grid rank {rank} != contracted {c.grid_rank} for {name}")
+        rank = c.grid_rank          # keep arity checks anchored to contract
+    if nsp != c.num_scalar_prefetch:
+        flag("KRN004", call,
+             f"num_scalar_prefetch {nsp} != contracted "
+             f"{c.num_scalar_prefetch} for {name}")
+    want_arity = c.grid_rank + c.num_scalar_prefetch
+
+    # ---- index maps --------------------------------------------------
+    specs: List[ast.AST] = []
+    for src in ("in_specs", "out_specs"):
+        v = w.kw(call, src)
+        if v is None and grid_spec is not None and isinstance(grid_spec,
+                                                             ast.Call):
+            for k in grid_spec.keywords:
+                if k.arg == src:
+                    v = w.resolve(k.value)
+        if v is None:
+            continue
+        if isinstance(v, (ast.Tuple, ast.List)):
+            specs.extend(v.elts)
+        else:
+            specs.append(v)
+    for spec in specs:
+        pair = _index_maps(spec, w)
+        if pair is None:
+            continue
+        shape, imap = pair
+        if imap is None:
+            continue
+        params, ret = _map_fn(imap, w)
+        if params is not None and len(params) != want_arity:
+            flag("KRN005", spec,
+                 f"index map takes {len(params)} args; grid supplies "
+                 f"{want_arity} (grid_rank {c.grid_rank} + "
+                 f"{c.num_scalar_prefetch} scalar-prefetch refs)")
+        if ret is not None and shape is not None:
+            rrank = _tuple_len(ret)
+            srank = _tuple_len(w.resolve(shape))
+            if rrank is not None and srank is not None and rrank != srank:
+                flag("KRN006", spec,
+                     f"index map returns {rrank} coords for a rank-"
+                     f"{srank} block shape")
+            if isinstance(ret, (ast.Tuple, ast.List)):
+                for comp in ret.elts:
+                    if _unclamped_subscript(comp):
+                        flag("KRN007", spec,
+                             "index-map component subscripts a prefetched "
+                             "table without clamping — a -1 dead-entry "
+                             "sentinel DMAs out of bounds; wrap in "
+                             "jnp.maximum(..., 0)")
+
+    # ---- kernel body guard ------------------------------------------
+    body = _resolve_kernel_body(call, w)
+    if body is not None:
+        has_when = _uses_pl_when(body)
+        if c.tail_guard and not has_when:
+            flag("KRN008", call,
+                 f"kernel body {body.name} has no pl.when guard but the "
+                 f"contract requires tail/init predication")
+
+    # ---- semantics / divisibility / dtype ---------------------------
+    sem = _semantics_tuple(call, w)
+    if c.dimension_semantics and sem is not None and \
+            tuple(sem) != tuple(c.dimension_semantics):
+        flag("KRN009", call,
+             f"dimension_semantics {sem} != contracted "
+             f"{c.dimension_semantics}")
+    if c.divisibility_assert and not _has_mod_assert(w.fn):
+        flag("KRN010", call,
+             f"wrapper {name} missing the contracted divisibility "
+             f"assert (% block == 0) ahead of pallas_call")
+    texts = _out_dtype_texts(call, w)
+    if c.out_dtypes and texts and tuple(texts) != tuple(c.out_dtypes):
+        flag("KRN011", call,
+             f"out_shape dtypes {texts} != contracted "
+             f"{list(c.out_dtypes)}")
+    return out
+
+
+def _unclamped_subscript(comp: ast.AST) -> bool:
+    """A bare table subscript (not wrapped in a clamp call)."""
+    if isinstance(comp, ast.Subscript):
+        return True
+    if isinstance(comp, ast.Call):
+        f = comp.func
+        fname = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else None)
+        if fname in CLAMP_FNS:
+            return False
+        return any(isinstance(n, ast.Subscript) for a in comp.args
+                   for n in ast.walk(a))
+    if isinstance(comp, (ast.BinOp, ast.UnaryOp)):
+        return any(_unclamped_subscript(n) for n in ast.iter_child_nodes(comp)
+                   if not isinstance(n, ast.operator))
+    return False
+
+
+def _resolve_kernel_body(call: ast.Call, w: _Wrapper):
+    if not call.args:
+        return None
+    target = w.resolve(call.args[0])
+    # functools.partial(_kernel, ...) -> _kernel
+    if isinstance(target, ast.Call) and target.args:
+        inner = target.args[0]
+        if isinstance(inner, ast.Name):
+            target = inner
+    if isinstance(target, ast.Name):
+        return _MODULE_DEFS.get(target.id)
+    return None
+
+
+_MODULE_DEFS: Dict[str, ast.FunctionDef] = {}
+
+
+@project_pass("kernel")
+def kernel_pass(root: str) -> List[Finding]:
+    findings: List[Finding] = []
+    seen_wrappers: Dict[str, str] = {}      # wrapper name -> rel path
+
+    base = os.path.join(root, *KERNELS_DIR.split("/"))
+    if not os.path.isdir(base):
+        return findings
+    for fname in sorted(os.listdir(base)):
+        if not fname.endswith(".py"):
+            continue
+        rel = f"{KERNELS_DIR}/{fname}"
+        with open(os.path.join(base, fname)) as f:
+            source = f.read()
+        try:
+            ctx = FileContext(root, rel, source)
+        except SyntaxError:
+            continue        # surfaced by the file-pass driver as a parse error
+
+        _MODULE_DEFS.clear()
+        for node in ast.iter_child_nodes(ctx.tree):
+            if isinstance(node, ast.FunctionDef):
+                _MODULE_DEFS[node.name] = node
+
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.FunctionDef)):
+                continue
+            calls = [n for n in ast.walk(node)
+                     if isinstance(n, ast.Call) and _is_pallas_call(n)]
+            if not calls:
+                continue
+            seen_wrappers[node.name] = rel
+            contract = KERNEL_CONTRACTS.get(node.name)
+            for call in calls:
+                w = _Wrapper(node, call)
+                if contract is None:
+                    findings.append(_mk(
+                        ctx, "KRN001", call,
+                        f"pallas_call in {node.name} has no entry in "
+                        f"analysis/passes/contracts.py — every kernel "
+                        f"needs a declared contract", symbol=node.name))
+                else:
+                    findings.extend(_check_site(ctx, w, node.name,
+                                                contract))
+
+    for name, c in sorted(KERNEL_CONTRACTS.items()):
+        if name not in seen_wrappers:
+            findings.append(Finding(
+                "kernel", "KRN002",
+                "src/repro/analysis/passes/contracts.py", 0,
+                f"stale kernel contract {name!r}: no pallas_call wrapper "
+                f"of that name exists under {KERNELS_DIR}", symbol=name))
+    return findings

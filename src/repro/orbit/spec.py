@@ -41,6 +41,11 @@ class PhaseSpec:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "PhaseSpec":
+        unknown = sorted(set(d) - {"name", "duration_s", "power_w"})
+        if unknown:
+            raise ValueError(
+                f"PhaseSpec.from_dict: unknown key(s) {unknown}; valid "
+                f"keys are ['duration_s', 'name', 'power_w']")
         return cls(**d)
 
 
@@ -97,10 +102,44 @@ class OrbitSpec:
     @classmethod
     def from_dict(cls, d: Dict) -> "OrbitSpec":
         d = dict(d)
+        valid = {f for f in cls.__dataclass_fields__}
+        unknown = sorted(set(d) - valid)
+        if unknown:
+            raise ValueError(
+                f"OrbitSpec.from_dict: unknown key(s) {unknown}; valid "
+                f"keys are {sorted(valid)}")
         d["phases"] = [PhaseSpec.from_dict(p) for p in d["phases"]]
         sc = d.get("scaling")
         d["scaling"] = None if sc is None else ScalingPolicy.from_dict(sc)
         return cls(**d)
+
+    # ------------------------------------------------------------------
+    # validation
+    # ------------------------------------------------------------------
+    def validate(self) -> "OrbitSpec":
+        """Fail fast before the controller goes live.  ``__post_init__``
+        already pins the mode-threshold ordering; this checks the parts
+        a JSON round-trip can still get wrong — the power profile and
+        battery sizing.  Called by ``attach()``."""
+        if not self.phases:
+            raise ValueError("OrbitSpec needs at least one PhaseSpec — "
+                             "the power profile cannot be empty")
+        for p in self.phases:
+            if p.duration_s <= 0:
+                raise ValueError(f"phase {p.name!r}: duration_s must be "
+                                 f"> 0 (got {p.duration_s})")
+            if p.power_w < 0:
+                raise ValueError(f"phase {p.name!r}: power_w must be "
+                                 f">= 0 (got {p.power_w})")
+        if self.bucket_j <= 0:
+            raise ValueError(f"bucket_j must be > 0 (got {self.bucket_j})")
+        if not 0.0 <= self.initial_frac <= 1.0:
+            raise ValueError(f"initial_frac must be in [0, 1] "
+                             f"(got {self.initial_frac})")
+        if self.storm_events < 0:
+            raise ValueError(f"storm_events must be >= 0 "
+                             f"(got {self.storm_events})")
+        return self
 
     # ------------------------------------------------------------------
     # assembly
@@ -120,6 +159,7 @@ class OrbitSpec:
         autoscaler clones; defaults to the entry in the client's
         ``FleetSpec`` whose name matches ``scaling.template``.
         """
+        self.validate()
         scaler = None
         if self.scaling is not None:
             if template is None:

@@ -31,6 +31,17 @@ DEFAULT_SLOS: Dict[str, SLOClass] = {
 }
 
 
+def _reject_unknown_keys(cls, d: Dict, label: str) -> None:
+    """from_dict guard: a typo'd key must not silently vanish into a
+    TypeError traceback deep in dataclass __init__."""
+    valid = {f.name for f in cls.__dataclass_fields__.values()}
+    unknown = sorted(set(d) - valid)
+    if unknown:
+        raise ValueError(
+            f"{label}.from_dict: unknown key(s) {unknown}; valid keys "
+            f"are {sorted(valid)}")
+
+
 @dataclass
 class PoolSpec:
     """One accelerator pool: capability, batching window, and backend.
@@ -101,6 +112,57 @@ class PoolSpec:
                 f"backend='engine' (got {self.backend!r})")
         self.profiles = tuple(self.profiles)
 
+    def validate(self) -> "PoolSpec":
+        """Fail fast on values ``build()`` would only trip over deep in
+        engine assembly (or worse, serve wrong).  Raises ``ValueError``
+        with the pool name and the offending field; returns self so
+        call sites can chain."""
+        def bad(msg: str) -> ValueError:
+            return ValueError(f"pool {self.name!r}: {msg}")
+        if not self.name:
+            raise ValueError("pool name must be non-empty")
+        if not self.profiles:
+            raise bad("profiles must be non-empty — the router can "
+                      "never route to a pool that serves nothing")
+        if self.capacity < 1:
+            raise bad(f"capacity must be >= 1 (got {self.capacity})")
+        if self.max_window < 1:
+            raise bad(f"max_window must be >= 1 (got {self.max_window})")
+        if self.max_wait_s < 0:
+            raise bad(f"max_wait_s must be >= 0 (got {self.max_wait_s})")
+        if self.max_slots < 1:
+            raise bad(f"max_slots must be >= 1 (got {self.max_slots})")
+        if self.prompt_len < 1:
+            raise bad(f"prompt_len must be >= 1 (got {self.prompt_len})")
+        if self.max_new < 1:
+            raise bad(f"max_new must be >= 1 (got {self.max_new})")
+        if self.block_size < 1:
+            raise bad(f"block_size must be >= 1 (got {self.block_size})")
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk < 1:
+                raise bad(f"prefill_chunk must be positive "
+                          f"(got {self.prefill_chunk})")
+            if self.prefill_chunk % self.block_size != 0:
+                raise bad(
+                    f"prefill_chunk={self.prefill_chunk} must be a "
+                    f"multiple of block_size={self.block_size} — chunked "
+                    f"prefill writes whole KV blocks")
+        if self.num_blocks is not None and self.num_blocks < 1:
+            raise bad(f"num_blocks must be >= 1 (got {self.num_blocks})")
+        if self.max_prompt_len is not None and self.max_prompt_len < 1:
+            raise bad(f"max_prompt_len must be >= 1 "
+                      f"(got {self.max_prompt_len})")
+        if self.prefill_energy_scale < 0:
+            raise bad(f"prefill_energy_scale must be >= 0 "
+                      f"(got {self.prefill_energy_scale})")
+        if self.scrub_blocks < 0:
+            raise bad(f"scrub_blocks must be >= 0 (got "
+                      f"{self.scrub_blocks}); 0 disables background scrub")
+        if self.watchdog_steps < 1:
+            raise bad(f"watchdog_steps must be >= 1 "
+                      f"(got {self.watchdog_steps})")
+        return self
+
     @property
     def chunk(self) -> int:
         """The prefill chunk grid (block-aligned; prompts pad to it)."""
@@ -127,6 +189,7 @@ class PoolSpec:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "PoolSpec":
+        _reject_unknown_keys(cls, d, "PoolSpec")
         return cls(**{**d, "profiles": tuple(d["profiles"])})
 
 
@@ -166,6 +229,7 @@ class FaultSpec:
 
     @classmethod
     def from_dict(cls, d: Dict) -> "FaultSpec":
+        _reject_unknown_keys(cls, d, "FaultSpec")
         return cls(**{**d, "lost_profiles": tuple(d.get("lost_profiles",
                                                         ()))})
 
@@ -217,9 +281,64 @@ class FleetSpec:
     @classmethod
     def from_dict(cls, d: Dict) -> "FleetSpec":
         d = dict(d)
+        _reject_unknown_keys(cls, d, "FleetSpec")
         d["pools"] = [PoolSpec.from_dict(p) for p in d["pools"]]
         d["faults"] = [FaultSpec.from_dict(f) for f in d.get("faults", [])]
         return cls(**d)
+
+    # ------------------------------------------------------------------
+    # validation
+    # ------------------------------------------------------------------
+    def validate(self) -> "FleetSpec":
+        """Fail fast before any engine compiles.  Checks every pool,
+        fleet-level clock/retry settings, and cross-references (fault
+        targets, duplicate pool names).  Called by ``build()``."""
+        if not self.pools:
+            raise ValueError("FleetSpec needs at least one pool")
+        names = [p.name for p in self.pools]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        if dupes:
+            raise ValueError(f"duplicate pool name(s) {dupes} — telemetry "
+                             f"and routing key pools by name")
+        for p in self.pools:
+            p.validate()
+        if self.dt <= 0:
+            raise ValueError(f"dt must be > 0 (got {self.dt})")
+        if self.latency_headroom <= 0:
+            raise ValueError(f"latency_headroom must be > 0 "
+                             f"(got {self.latency_headroom})")
+        if self.watchdog_s is not None and self.watchdog_s <= 0:
+            raise ValueError(f"watchdog_s must be > 0 when set "
+                             f"(got {self.watchdog_s})")
+        from repro.router.dispatch import RetryPolicy
+        retry_fields = {f.name for f in
+                        RetryPolicy.__dataclass_fields__.values()}
+        for slo_name, kw in self.retry.items():
+            unknown = sorted(set(kw) - retry_fields)
+            if unknown:
+                raise ValueError(
+                    f"retry[{slo_name!r}]: unknown RetryPolicy key(s) "
+                    f"{unknown}; valid keys are {sorted(retry_fields)}")
+            if kw.get("max_attempts", 1) < 1:
+                raise ValueError(
+                    f"retry[{slo_name!r}]: max_attempts must be >= 1 "
+                    f"(got {kw['max_attempts']})")
+            for k in ("backoff_s", "multiplier", "max_backoff_s"):
+                if k in kw and kw[k] <= 0:
+                    raise ValueError(
+                        f"retry[{slo_name!r}]: {k} must be > 0 "
+                        f"(got {kw[k]})")
+        pool_names = set(names)
+        for f in self.faults:
+            if f.pool not in pool_names:
+                raise ValueError(
+                    f"fault targets unknown pool {f.pool!r}; fleet pools "
+                    f"are {sorted(pool_names)}")
+            if f.duration_s <= 0:
+                raise ValueError(
+                    f"fault on {f.pool!r}: duration_s must be > 0 "
+                    f"(got {f.duration_s})")
+        return self
 
     # ------------------------------------------------------------------
     # assembly
@@ -264,6 +383,7 @@ class FleetSpec:
         from repro.runtime.fault import PoolFault, PoolFaultInjector
         from repro.serving.client import ServingClient
 
+        self.validate()
         cfg = params = None
         if any(p.backend != "costmodel" for p in self.pools):
             if model is not None:
@@ -340,6 +460,7 @@ def build_pool(ps: PoolSpec, layers, model=None, warm: bool = True):
     from repro.router.telemetry import PoolCounters
     from repro.serving.executor import EngineExecutor
 
+    ps.validate()          # live fleet growth skips FleetSpec.validate()
     engine = engine_ex = None
     if ps.backend == "costmodel":
         ex = CostModelExecutor(layers)

@@ -1,0 +1,17 @@
+"""fleetlint fixture: allocator-accounting violations (ALC001)."""
+
+
+def steal_block(alloc):
+    return alloc.free.pop()                  # ALC001 (bypasses accounting)
+
+
+def hide_block(engine, blk):
+    engine.alloc.quarantined.add(blk)        # ALC001 (no on_release hook)
+
+
+def forge_refcount(shared, blk):
+    shared._refs[blk] = 99                   # ALC001 (private state)
+
+
+def drop_digest(digests, blk):
+    del digests._sums[blk]                   # ALC001 (private state)

@@ -1,0 +1,25 @@
+"""fleetlint fixture: clean twin of alloc_bad — sanctioned methods only."""
+
+
+def take_block(alloc):
+    return alloc.alloc(1)[0]                 # sanctioned allocation
+
+
+def quarantine_block(engine, blk):
+    engine.alloc.quarantine(blk)             # sanctioned (keeps the books)
+
+
+def scrub_budget(engine):
+    return len(engine.alloc.quarantined)     # reads are fine
+
+
+def release_ref(shared, blk):
+    shared.release(blk)                      # sanctioned refcount decrement
+
+
+def forget_digest(digests, blk):
+    digests.forget(blk)                      # sanctioned digest retirement
+
+
+def free_worklist(freelist):
+    freelist.free.pop()                      # '.free' on a non-allocator

@@ -1,0 +1,30 @@
+"""fleetlint fixture: virtual-clock purity violations (VCP001/VCP002)."""
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def stamp():
+    return time.time()                       # VCP001
+
+
+def measure():
+    return time.perf_counter()               # VCP001
+
+
+def when():
+    return datetime.now()                    # VCP001
+
+
+def jitter():
+    return random.random()                   # VCP002 (module-global RNG)
+
+
+def rng():
+    return np.random.default_rng()           # VCP002 (unseeded)
+
+
+def legacy_draw():
+    return np.random.uniform()               # VCP002 (global state)

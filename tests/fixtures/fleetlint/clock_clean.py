@@ -1,0 +1,16 @@
+"""fleetlint fixture: clean twin of clock_bad — virtual clock + seeded RNG."""
+import random
+
+import numpy as np
+
+
+def stamp(clock):
+    return clock.now()                       # virtual clock injection
+
+
+def jitter(seed: int):
+    return random.Random(seed).random()      # seeded instance RNG
+
+
+def rng(seed: int):
+    return np.random.default_rng(seed)       # seeded generator

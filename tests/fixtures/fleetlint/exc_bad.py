@@ -1,0 +1,15 @@
+"""fleetlint fixture: exception-swallowing violations (EXC001/EXC002)."""
+
+
+def swallow_everything(fn):
+    try:
+        return fn()
+    except:                                  # EXC001 (bare)
+        return None
+
+
+def swallow_broad(fn):
+    try:
+        return fn()
+    except Exception:                        # EXC002 (reason discarded)
+        return None

@@ -1,0 +1,27 @@
+"""fleetlint fixture: clean twin of exc_bad — reasons survive."""
+
+
+class TransientError(RuntimeError):
+    pass
+
+
+def narrow(fn):
+    try:
+        return fn()
+    except TransientError:                   # specific type: reason intact
+        return None
+
+
+def accounted(fn, counters):
+    try:
+        return fn()
+    except Exception as e:                   # broad but the reason is kept
+        counters.record_drop(reason=type(e).__name__)
+        return None
+
+
+def rewrapped(fn):
+    try:
+        return fn()
+    except Exception as e:                   # broad but re-raised
+        raise RuntimeError("fixture") from e

@@ -1,0 +1,36 @@
+"""fleetlint fixture: jit-boundary hazards (JIT001-JIT005)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def host_convert(x):
+    return bool(x)                           # JIT001
+
+
+@jax.jit
+def host_numpy(x):
+    return np.sum(x)                         # JIT002
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def traced_branch(x, y, flag=False):
+    if flag:                                 # static — fine
+        y = y * 2
+    if x > 0:                                # JIT003 (traced branch)
+        return y
+    return -y
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def unhashable_static(x, cfg={}):            # JIT004
+    return x
+
+
+def make_step():
+    table = []                               # mutated after trace -> stale
+    step = jax.jit(lambda x: x + len(table))  # JIT005
+    return step

@@ -1,0 +1,35 @@
+"""fleetlint fixture: clean twin of jit_bad — same shapes, no hazards."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def device_convert(x):
+    return x.astype(jnp.bool_)               # stays on device
+
+
+@jax.jit
+def device_numpy(x):
+    return jnp.sum(x)                        # jnp, not host numpy
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def static_branch(x, y, flag=False):
+    if flag:                                 # static arg: trace-time branch
+        y = y * 2
+    return jnp.where(x > 0, y, -y)           # traced select on device
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def hashable_static(x, width=128):           # int static: hashable, cached
+    b, d = x.shape
+    if d > width:                            # shape-derived: static too
+        x = x[:, :width]
+    return x
+
+
+def make_step(offset: int):
+    step = jax.jit(lambda x: x + offset)     # captures an immutable int
+    return step

@@ -1,0 +1,342 @@
+"""fleetlint: the analyzer's own test gate.
+
+Fixture files under ``tests/fixtures/fleetlint`` carry one known
+violation per pass (true-positive guard) next to a clean twin
+(false-positive guard); scratch trees exercise the project passes,
+suppression round-trip, and the CLI; and the meta-test pins the live
+``src/repro`` tree lint-clean against the checked-in baseline — the
+same gate CI runs, so a PR that introduces a wall-clock read or a host
+sync fails here first.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (BaselineError, DEFAULT_BASELINE, run_lint,
+                            load_baseline)
+from repro.analysis.core import default_root
+
+REPO = default_root()
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "fleetlint")
+
+
+def scratch_tree(tmp_path, files):
+    """Materialize ``{relpath: content}`` under tmp_path as a repo."""
+    for rel, content in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content)
+    return str(tmp_path)
+
+
+def fixture(name: str) -> str:
+    with open(os.path.join(FIXTURES, name)) as f:
+        return f.read()
+
+
+def lint_fixture(tmp_path, name: str, rel="src/repro/fx/mod.py"):
+    root = scratch_tree(tmp_path, {rel: fixture(name)})
+    report = run_lint(root=root, baseline_path=None)
+    return [f for f in report.findings if f.path == rel]
+
+
+# ---------------------------------------------------------------------------
+# file passes: one true-positive fixture + one clean twin each
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,codes", [
+    ("clock_bad.py", {"VCP001", "VCP002"}),
+    ("jit_bad.py", {"JIT001", "JIT002", "JIT003", "JIT004", "JIT005"}),
+    ("alloc_bad.py", {"ALC001"}),
+    ("exc_bad.py", {"EXC001", "EXC002"}),
+])
+def test_fixture_violations_all_detected(tmp_path, name, codes):
+    found = {f.code for f in lint_fixture(tmp_path, name)}
+    assert codes <= found, f"{name}: wanted {codes}, got {found}"
+
+
+@pytest.mark.parametrize("name", ["clock_clean.py", "jit_clean.py",
+                                  "alloc_clean.py", "exc_clean.py"])
+def test_clean_twins_produce_no_findings(tmp_path, name):
+    assert lint_fixture(tmp_path, name) == []
+
+
+def test_exc_hot_path_rejects_even_accounted_broad_except(tmp_path):
+    # the same broad-except shapes the clean twin allows off the hot
+    # path are EXC003 findings on router/ modules
+    rel = "src/repro/router/worker.py"
+    findings = lint_fixture(tmp_path, "exc_clean.py", rel=rel)
+    assert {f.code for f in findings} == {"EXC003"}
+    assert len(findings) == 2            # `accounted` and `rewrapped`
+
+
+# ---------------------------------------------------------------------------
+# acceptance injections: the exact regressions the issue names
+# ---------------------------------------------------------------------------
+def test_injected_wall_clock_in_router_dispatch_is_caught(tmp_path):
+    with open(os.path.join(REPO, "src/repro/router/dispatch.py")) as f:
+        src = f.read()
+    assert "import time" not in src
+    src = src.replace(
+        "from __future__ import annotations",
+        "from __future__ import annotations\nimport time", 1)
+    src += "\n\ndef _leak():\n    return time.time()\n"
+    rel = "src/repro/router/dispatch.py"
+    root = scratch_tree(tmp_path, {rel: src})
+    report = run_lint(root=root, baseline_path=None)
+    hits = [f for f in report.findings if f.code == "VCP001"]
+    assert hits and hits[0].symbol == "_leak"
+
+
+def test_injected_host_bool_in_fused_decode_is_caught(tmp_path):
+    with open(os.path.join(REPO, "src/repro/runtime/serve.py")) as f:
+        src = f.read()
+    marker = "def _decode_greedy(p, toks, caches):"
+    assert marker in src
+    src = src.replace(
+        marker, marker + "\n            _sync = bool(toks)", 1)
+    rel = "src/repro/runtime/serve.py"
+    root = scratch_tree(tmp_path, {rel: src})
+    report = run_lint(root=root, baseline_path=None, passes=["jit"])
+    hits = [f for f in report.findings if f.code == "JIT001"]
+    assert hits, "traced-value bool() in the fused decode path missed"
+    assert any("_decode_greedy" in f.symbol for f in hits)
+
+
+# ---------------------------------------------------------------------------
+# project passes: kernel contracts + telemetry schema
+# ---------------------------------------------------------------------------
+def _mutated_quant(transform):
+    with open(os.path.join(REPO, "src/repro/kernels/quant.py")) as f:
+        return transform(f.read())
+
+
+def _kernel_findings(tmp_path, src):
+    root = scratch_tree(tmp_path, {"src/repro/kernels/quant.py": src})
+    report = run_lint(root=root, baseline_path=None, passes=["kernel"])
+    return report.findings
+
+
+def test_kernel_contract_clean_on_real_kernel(tmp_path):
+    src = _mutated_quant(lambda s: s)
+    findings = [f for f in _kernel_findings(tmp_path, src)
+                if f.code != "KRN002"]   # other contracts stale in scratch
+    assert findings == []
+
+
+def test_kernel_contract_stale_entries_reported(tmp_path):
+    codes = {f.code for f in _kernel_findings(tmp_path,
+                                              _mutated_quant(lambda s: s))}
+    assert "KRN002" in codes             # 5 absent wrappers -> stale
+
+
+def test_kernel_contract_catches_dropped_divisibility_assert(tmp_path):
+    src = _mutated_quant(
+        lambda s: s.replace("assert m % bm == 0, (m, bm)", "pass"))
+    assert "KRN010" in {f.code for f in _kernel_findings(tmp_path, src)}
+
+
+def test_kernel_contract_catches_dtype_drift(tmp_path):
+    src = _mutated_quant(lambda s: s.replace(
+        "jax.ShapeDtypeStruct((m, k), jnp.int8)",
+        "jax.ShapeDtypeStruct((m, k), jnp.float32)"))
+    assert "KRN011" in {f.code for f in _kernel_findings(tmp_path, src)}
+
+
+def test_kernel_contract_catches_grid_rank_change(tmp_path):
+    src = _mutated_quant(
+        lambda s: s.replace("grid = (m // bm,)", "grid = (m // bm, 1)"))
+    assert "KRN003" in {f.code for f in _kernel_findings(tmp_path, src)}
+
+
+def test_kernel_contract_catches_unknown_wrapper(tmp_path):
+    src = _mutated_quant(lambda s: s.replace(
+        "def rowwise_quant_pallas(", "def rogue_quant_pallas("))
+    assert "KRN001" in {f.code for f in _kernel_findings(tmp_path, src)}
+
+
+TEL_SRC = '''\
+class Histogram:
+    def summary(self):
+        return {"count": 0, "mean": 0.0, "p50": 0.0, "p99": 0.0,
+                "dropped": 0}
+
+
+class PoolCounters:
+    def summary(self):
+        return {"dispatched": 0}
+
+
+class Telemetry:
+    def __init__(self):
+        self.drops_by_reason = {"no_route": 0}
+
+    def snapshot(self):
+        return {"admitted": 0}
+'''
+
+TEL_GOLDEN = '''\
+FLEET_KEYS = {"admitted"}
+DROP_REASONS = {"no_route"}
+POOL_KEYS = {"dispatched"}
+HIST_KEYS = {"count", "mean", "p50", "p99", "dropped"}
+'''
+
+
+def _tel_findings(tmp_path, tel_src=TEL_SRC, golden=TEL_GOLDEN):
+    root = scratch_tree(tmp_path, {
+        "src/repro/router/telemetry.py": tel_src,
+        "tests/test_obs.py": golden,
+    })
+    report = run_lint(root=root, baseline_path=None, passes=["telemetry"])
+    return report.findings
+
+
+def test_telemetry_schema_in_sync_is_clean(tmp_path):
+    assert _tel_findings(tmp_path) == []
+
+
+def test_telemetry_written_key_missing_from_golden(tmp_path):
+    src = TEL_SRC.replace('return {"admitted": 0}',
+                          'return {"admitted": 0, "new_counter": 0}')
+    findings = _tel_findings(tmp_path, tel_src=src)
+    assert [f.code for f in findings] == ["TEL001"]
+    assert "new_counter" in findings[0].message
+
+
+def test_telemetry_golden_key_without_writer(tmp_path):
+    golden = TEL_GOLDEN.replace('{"admitted"}', '{"admitted", "renamed"}')
+    findings = _tel_findings(tmp_path, golden=golden)
+    assert [f.code for f in findings] == ["TEL002"]
+    assert "renamed" in findings[0].message
+
+
+def test_telemetry_drop_reason_drift_both_directions(tmp_path):
+    src = TEL_SRC.replace('{"no_route": 0}', '{"other": 0}')
+    codes = sorted(f.code for f in _tel_findings(tmp_path, tel_src=src))
+    assert codes == ["TEL001", "TEL002"]
+
+
+# ---------------------------------------------------------------------------
+# suppression baseline round-trip
+# ---------------------------------------------------------------------------
+def test_suppression_round_trip(tmp_path):
+    rel = "src/repro/fx/mod.py"
+    root = scratch_tree(tmp_path, {rel: fixture("clock_bad.py")})
+    report = run_lint(root=root, baseline_path=None)
+    keys = sorted({f.key for f in report.findings})
+    assert keys, "fixture produced no findings to suppress"
+
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"suppressions": [
+        {"key": k, "reason": "fixture: sanctioned for the round-trip test"}
+        for k in keys]}))
+    report = run_lint(root=root, baseline_path=str(baseline))
+    assert report.findings == [] and report.clean
+    assert {f.key for f, _ in report.suppressed} == set(keys)
+
+
+def test_baseline_entry_without_reason_is_rejected(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"suppressions": [{"key": "a::VCP001::b",
+                                               "reason": "  "}]}))
+    with pytest.raises(BaselineError, match="no reason"):
+        load_baseline(str(p))
+
+
+def test_baseline_duplicate_key_is_rejected(tmp_path):
+    entry = {"key": "a::VCP001::b", "reason": "x"}
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"suppressions": [entry, entry]}))
+    with pytest.raises(BaselineError, match="duplicate"):
+        load_baseline(str(p))
+
+
+def test_stale_suppression_fails_full_run_but_not_diff_slice(tmp_path):
+    rel = "src/repro/fx/clean.py"
+    root = scratch_tree(tmp_path, {rel: fixture("clock_clean.py")})
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"suppressions": [
+        {"key": f"{rel}::VCP001::gone", "reason": "no longer exists"}]}))
+    full = run_lint(root=root, baseline_path=str(baseline))
+    assert full.stale_suppressions == [f"{rel}::VCP001::gone"]
+    assert not full.clean
+    sliced = run_lint(root=root, files=[rel], baseline_path=str(baseline))
+    assert sliced.stale_suppressions == [] and sliced.clean
+
+
+def test_suppression_key_survives_line_churn(tmp_path):
+    rel = "src/repro/fx/mod.py"
+    root = scratch_tree(tmp_path, {rel: fixture("clock_bad.py")})
+    before = {f.key for f in run_lint(root=root,
+                                      baseline_path=None).findings}
+    # prepend 5 lines: every lineno shifts, no key changes
+    shifted = "# pad\n" * 5 + fixture("clock_bad.py")
+    root = scratch_tree(tmp_path, {rel: shifted})
+    after = {f.key for f in run_lint(root=root,
+                                     baseline_path=None).findings}
+    assert before == after
+
+
+# ---------------------------------------------------------------------------
+# the meta-test: the live tree ships lint-clean
+# ---------------------------------------------------------------------------
+def test_live_tree_is_lint_clean_against_baseline():
+    report = run_lint(root=REPO)
+    assert report.parse_errors == []
+    assert report.stale_suppressions == []
+    assert report.findings == [], (
+        "live src/repro tree has unsuppressed fleetlint findings:\n"
+        + "\n".join(f"{f.path}:{f.line}: {f.code} {f.message}"
+                    for f in report.findings))
+    # every suppression is load-bearing and justified
+    assert report.suppressed, "baseline should cover the sanctioned sites"
+    for _, reason in report.suppressed:
+        assert reason.strip()
+
+
+def test_live_baseline_file_is_well_formed():
+    entries = load_baseline(os.path.join(REPO, DEFAULT_BASELINE))
+    for key, reason in entries.items():
+        assert key.count("::") == 2, key
+        assert reason.strip(), key
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def _cli(args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-m", "repro.analysis"] + args,
+                          capture_output=True, text=True, env=env, cwd=cwd)
+
+
+def test_cli_exits_zero_on_live_tree():
+    res = _cli([])
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_exits_nonzero_per_fixture_violation(tmp_path):
+    root = scratch_tree(tmp_path, {
+        "src/repro/fx/mod.py": fixture("clock_bad.py")})
+    res = _cli(["--root", str(root), "--no-baseline", "--json"])
+    assert res.returncode == 1
+    payload = json.loads(res.stdout)
+    assert payload["clean"] is False
+    assert payload["counts"]["by_pass"]["clock"] >= 2
+    assert all(f["key"].count("::") == 2 for f in payload["findings"])
+
+
+def test_cli_json_report_written_to_output(tmp_path):
+    out = tmp_path / "LINT_report.json"
+    res = _cli(["--output", str(out)])
+    assert res.returncode == 0
+    payload = json.loads(out.read_text())
+    assert payload["clean"] is True and payload["files_scanned"] > 50
+
+
+def test_cli_rejects_unknown_pass():
+    assert _cli(["--pass", "nope"]).returncode == 2

@@ -484,3 +484,48 @@ def test_snapshot_surfaces_fleet_energy_and_live_queues():
                 "pools_retired"):
         assert key in snap
     json.dumps(snap)                                 # stays serializable
+
+
+# ---------------------------------------------------------------------------
+# fail-fast OrbitSpec validation (fleetlint PR)
+# ---------------------------------------------------------------------------
+def test_orbit_validate_rejects_empty_phases():
+    spec = OrbitSpec(phases=[], bucket_j=100.0)
+    with pytest.raises(ValueError, match="at least one PhaseSpec"):
+        spec.validate()
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(phases=[PhaseSpec("sunlit", 0.0, 8.0)], bucket_j=10.0),
+     "duration_s"),
+    (dict(phases=[PhaseSpec("sunlit", 60.0, -1.0)], bucket_j=10.0),
+     "power_w"),
+    (dict(phases=[PhaseSpec("sunlit", 60.0, 8.0)], bucket_j=0.0),
+     "bucket_j"),
+    (dict(phases=[PhaseSpec("sunlit", 60.0, 8.0)], bucket_j=10.0,
+          initial_frac=1.5), "initial_frac"),
+])
+def test_orbit_validate_rejects_bad_field(kw, match):
+    with pytest.raises(ValueError, match=match):
+        OrbitSpec(**kw).validate()
+
+
+def test_orbit_attach_validates():
+    client = vision_fleet_spec().build()
+    bad = OrbitSpec(phases=[PhaseSpec("sunlit", 60.0, 8.0)], bucket_j=-5.0)
+    with pytest.raises(ValueError, match="bucket_j"):
+        bad.attach(client)
+
+
+def test_orbit_from_dict_rejects_unknown_keys():
+    spec = OrbitSpec(phases=[PhaseSpec("sunlit", 60.0, 8.0)],
+                     bucket_j=120.0)
+    d = spec.to_dict()
+    d["bucket_joules"] = 1.0
+    with pytest.raises(ValueError, match=r"OrbitSpec.*bucket_joules"):
+        OrbitSpec.from_dict(d)
+    d = spec.to_dict()
+    d["phases"][0]["duration"] = 60.0
+    with pytest.raises(ValueError, match=r"PhaseSpec.*duration"):
+        OrbitSpec.from_dict(d)
+    assert OrbitSpec.from_dict(spec.to_dict()).to_dict() == spec.to_dict()

@@ -551,3 +551,89 @@ def test_stream_cursor_survives_midstream_reroute(model):
     assert h.telemetry["rerouted"] >= 1          # the fault really hit
     assert toks == list(h.result().tokens)       # no dupes, no holes
     assert len(toks) == MAX_NEW
+
+
+# ---------------------------------------------------------------------------
+# fail-fast spec validation (fleetlint PR): bad specs die at build
+# time with the field named, never deep inside engine assembly
+# ---------------------------------------------------------------------------
+def _cost_pool(**kw):
+    base = dict(name="p", profiles=("cpu_bf16",), backend="costmodel")
+    return PoolSpec(**{**base, **kw})
+
+
+def test_pool_validate_rejects_unaligned_prefill_chunk():
+    ps = _cost_pool(backend="engine", block_size=8, prefill_chunk=12)
+    with pytest.raises(ValueError, match="multiple of block_size"):
+        ps.validate()
+    # aligned chunk is fine
+    _cost_pool(backend="engine", block_size=8, prefill_chunk=16).validate()
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(profiles=()), "profiles"),
+    (dict(capacity=0), "capacity"),
+    (dict(max_window=0), "max_window"),
+    (dict(max_slots=0), "max_slots"),
+    (dict(prompt_len=0), "prompt_len"),
+    (dict(max_new=0), "max_new"),
+    (dict(block_size=0), "block_size"),
+    (dict(num_blocks=0), "num_blocks"),
+    (dict(scrub_blocks=-1), "scrub_blocks"),
+    (dict(watchdog_steps=0), "watchdog_steps"),
+    (dict(prefill_energy_scale=-0.5), "prefill_energy_scale"),
+])
+def test_pool_validate_rejects_bad_field(kw, match):
+    with pytest.raises(ValueError, match=match):
+        _cost_pool(**kw).validate()
+
+
+def test_fleet_validate_runs_from_build():
+    # validation fires before any model/engine work, so a costmodel
+    # fleet with a bad dt raises immediately
+    spec = FleetSpec(pools=[_cost_pool()], dt=0.0)
+    with pytest.raises(ValueError, match="dt must be > 0"):
+        spec.build()
+
+
+def test_fleet_validate_rejects_duplicate_pool_names():
+    spec = FleetSpec(pools=[_cost_pool(), _cost_pool()])
+    with pytest.raises(ValueError, match="duplicate pool name"):
+        spec.validate()
+
+
+def test_fleet_validate_rejects_bad_retry_policy():
+    with pytest.raises(ValueError, match="backoff_s must be > 0"):
+        FleetSpec(pools=[_cost_pool()],
+                  retry={"default": {"backoff_s": 0.0}}).validate()
+    with pytest.raises(ValueError, match="unknown RetryPolicy key"):
+        FleetSpec(pools=[_cost_pool()],
+                  retry={"default": {"backof_s": 0.1}}).validate()
+    with pytest.raises(ValueError, match="max_attempts"):
+        FleetSpec(pools=[_cost_pool()],
+                  retry={"bulk": {"max_attempts": 0}}).validate()
+
+
+def test_fleet_validate_rejects_fault_on_unknown_pool():
+    spec = FleetSpec(pools=[_cost_pool()],
+                     faults=[FaultSpec("ghost", at_s=1.0)])
+    with pytest.raises(ValueError, match="unknown pool 'ghost'"):
+        spec.validate()
+
+
+def test_from_dict_rejects_unknown_keys():
+    good = FleetSpec(pools=[_cost_pool()])
+    d = good.to_dict()
+    d["pools"][0]["blok_size"] = 8
+    with pytest.raises(ValueError, match=r"PoolSpec.*blok_size"):
+        FleetSpec.from_dict(d)
+    d = good.to_dict()
+    d["watchdogs"] = 1.0
+    with pytest.raises(ValueError, match=r"FleetSpec.*watchdogs"):
+        FleetSpec.from_dict(d)
+    d = good.to_dict()
+    d["faults"] = [{"pool": "p", "at_s": 1.0, "kindd": "pool"}]
+    with pytest.raises(ValueError, match=r"FaultSpec.*kindd"):
+        FleetSpec.from_dict(d)
+    # the round-trip itself stays lossless
+    assert FleetSpec.from_dict(good.to_dict()).to_dict() == good.to_dict()
