@@ -4,17 +4,21 @@
         [--out BENCH_obs.json] [--trace-out trace.json] [--spans-out s.jsonl]
 
 One scenario, ``obs_overhead``: the same engine-backed fleet serves the
-same seeded workload twice — flight recorder off and on — interleaved
-best-of-N on a process-CPU basis (the same noise policy as
-``decode_bench`` / ``coproc_bench``).  The traced arm records the full
-span chain of every request (root request span, queue, serve, engine
-admit/decode-step lane spans) plus the per-tick fleet time-series;
-overhead is ``1 - on_tokens_per_s / off_tokens_per_s``.
+same seeded workload three times — flight recorder off, recorder on,
+and SLO metrics plane on (SLI registry + burn-rate engine attached,
+recorder off) — interleaved best-of-N on a process-CPU basis (the same
+noise policy as ``decode_bench`` / ``coproc_bench``).  The traced arm
+records the full span chain of every request (root request span, queue,
+serve, engine admit/decode-step lane spans) plus the per-tick fleet
+time-series; each arm's overhead is ``1 - arm_tokens_per_s /
+off_tokens_per_s``.
 
 Under ``--check`` the run fails when:
 
-  * overhead exceeds ``--max-overhead`` (default 3% — the recorder must
-    be cheap enough to leave on in flight);
+  * tracing or SLO-engine overhead exceeds ``--max-overhead`` (default
+    3% — both planes must be cheap enough to leave on in flight);
+  * the SLO arm fired any alert, or its SLI completion count disagrees
+    with the admission count (a clean run must score clean);
   * the untraced arm recorded any span at all (tracing-off must be
     zero-record, not just cheap);
   * any traced request's span chain is left open or unterminated (the
@@ -25,7 +29,8 @@ Under ``--check`` the run fails when:
 With ``--trace-out`` / ``--spans-out`` the traced arm's Chrome
 ``trace_event`` JSON and span JSONL are written as artifacts (CI uploads
 them next to ``BENCH_obs.json``); the Chrome file opens directly in
-Perfetto / ``chrome://tracing``.
+Perfetto / ``chrome://tracing``.  ``--slo-report`` writes the SLO arm's
+``SLO_report.json`` judgment (spec, objectives, burns, budgets, SLIs).
 """
 from __future__ import annotations
 
@@ -93,17 +98,31 @@ def _validate_chrome(trace: dict) -> int:
     return len(evs)
 
 
+def _bench_slo_spec():
+    """Loose objectives for the clean bench workload: wide latency
+    bounds and a fat budget, so the arm measures the metrics plane's
+    cost, never an alert storm."""
+    from repro.obs import SLOObjective, SLOSpec
+    return SLOSpec(objectives=[
+        SLOObjective("offline", p99_ttft_s=60.0, p99_e2e_s=120.0,
+                     availability=0.5)])
+
+
 def run_overhead(n_requests: int = 24, repeats: int = 5, slots: int = 4,
                  seed: int = 0, check: bool = False,
                  max_overhead: float = 0.03, trace_out: str | None = None,
-                 spans_out: str | None = None) -> dict:
+                 spans_out: str | None = None,
+                 slo_report_out: str | None = None) -> dict:
     cfg, params = _model()
     clients = {}
-    for kind in ("off", "on"):
-        clients[kind] = _fleet(slots).build(model=(cfg, params))
+    for kind in ("off", "on", "slo"):
+        spec = _fleet(slots)
+        if kind == "slo":
+            spec.slo = _bench_slo_spec()
+        clients[kind] = spec.build(model=(cfg, params))
         if kind == "on":
             clients[kind].enable_tracing()
-    best = {"off": 0.0, "on": 0.0}
+    best = {"off": 0.0, "on": 0.0, "slo": 0.0}
     # interleave the repeats so co-tenant drift on a shared box hits
     # both arms alike (best-of-N per arm, process-CPU basis)
     for rep in range(repeats):
@@ -111,8 +130,10 @@ def run_overhead(n_requests: int = 24, repeats: int = 5, slots: int = 4,
             tps, _ = _serve_once(client, n_requests, seed + rep)
             best[kind] = max(best[kind], tps)
     overhead = 1.0 - best["on"] / max(best["off"], 1e-9)
+    slo_overhead = 1.0 - best["slo"] / max(best["off"], 1e-9)
 
     on = clients["on"]
+    slo = clients["slo"]
     tr = on.tracer
     out = {
         "scenario": "obs_overhead",
@@ -120,11 +141,19 @@ def run_overhead(n_requests: int = 24, repeats: int = 5, slots: int = 4,
         "slots": slots, "max_new": MAX_NEW,
         "off_tokens_per_cpu_s": round(best["off"], 1),
         "on_tokens_per_cpu_s": round(best["on"], 1),
+        "slo_tokens_per_cpu_s": round(best["slo"], 1),
         "overhead": round(overhead, 4),
+        "slo_overhead": round(slo_overhead, 4),
         "max_overhead": max_overhead,
         "tracer": tr.summary(),
         "timeseries": on.timeseries.summary(),
+        "slo_alerts": slo.telemetry["alerts"],
+        "slo_completed": slo.telemetry["slis"]["fleet"]["completed"],
     }
+    if slo_report_out:
+        from repro.obs import export_slo_report
+        export_slo_report(slo, slo_report_out)
+        out["slo_report_path"] = str(slo_report_out)
     if trace_out:
         from repro.obs import export_chrome_trace
         trace = export_chrome_trace(on, trace_out)
@@ -150,18 +179,30 @@ def run_overhead(n_requests: int = 24, repeats: int = 5, slots: int = 4,
             f"flight-recorder overhead {overhead:.1%} exceeds the "
             f"{max_overhead:.0%} gate "
             f"(off {best['off']:.0f} vs on {best['on']:.0f} tok/cpu-s)")
+        assert slo_overhead <= max_overhead, (
+            f"SLO metrics-plane overhead {slo_overhead:.1%} exceeds the "
+            f"{max_overhead:.0%} gate "
+            f"(off {best['off']:.0f} vs slo {best['slo']:.0f} tok/cpu-s)")
+        n_chains = repeats * n_requests
+        assert out["slo_completed"] == n_chains, \
+            (out["slo_completed"], n_chains)
+        tally = out["slo_alerts"]
+        assert tally["pages_fired"] == 0 and tally["warns_fired"] == 0, (
+            f"the clean bench workload fired alerts: {tally}")
     return out
 
 
 def main(csv: bool = True, out: str | None = None, smoke: bool = False,
          check: bool = False, max_overhead: float = 0.03,
-         trace_out: str | None = None, spans_out: str | None = None):
+         trace_out: str | None = None, spans_out: str | None = None,
+         slo_report_out: str | None = None):
     results = [
         # keep 5 repeats even in smoke: the overhead gate is a
         # best-of-N CPU-time ratio and needs the samples against noise
         run_overhead(n_requests=16 if smoke else 32, repeats=5,
                      check=check, max_overhead=max_overhead,
-                     trace_out=trace_out, spans_out=spans_out),
+                     trace_out=trace_out, spans_out=spans_out,
+                     slo_report_out=slo_report_out),
     ]
     if csv:
         r = results[0]
@@ -169,7 +210,9 @@ def main(csv: bool = True, out: str | None = None, smoke: bool = False,
         print(f"{r['scenario']},{us:.1f},"
               f"off_tps={r['off_tokens_per_cpu_s']};"
               f"on_tps={r['on_tokens_per_cpu_s']};"
+              f"slo_tps={r['slo_tokens_per_cpu_s']};"
               f"overhead={r['overhead']};"
+              f"slo_overhead={r['slo_overhead']};"
               f"spans={r['tracer']['spans']};"
               f"open={r['tracer']['open']}")
     if out:
@@ -192,7 +235,9 @@ if __name__ == "__main__":
                     help="write the traced arm's Chrome trace JSON here")
     ap.add_argument("--spans-out", default=None,
                     help="write the traced arm's span JSONL here")
+    ap.add_argument("--slo-report", default=None,
+                    help="write the SLO arm's SLO_report.json here")
     args = ap.parse_args()
     main(out=args.out, smoke=args.smoke, check=args.check,
          max_overhead=args.max_overhead, trace_out=args.trace_out,
-         spans_out=args.spans_out)
+         spans_out=args.spans_out, slo_report_out=args.slo_report)

@@ -1,16 +1,19 @@
 """Pass 5b — telemetry-schema drift (TEL), a project pass.
 
 ``tests/test_obs.py`` pins the snapshot schema as golden set literals
-(``FLEET_KEYS`` / ``POOL_KEYS`` / ``HIST_KEYS`` / ``DROP_REASONS``) —
-the contract the orbit controller, benches, and CI gates read.  But the
-golden test only fails at *test time* on a traffic shape that exercises
-the key; this pass closes the gap statically by diffing the dict
-literals in ``router/telemetry.py`` against the golden sets:
+(``FLEET_KEYS`` / ``POOL_KEYS`` / ``HIST_KEYS`` / ``DROP_REASONS`` /
+``SLI_KEYS`` / ``SLI_SCOPES`` / ``ALERT_KEYS``) — the contract the
+orbit controller, benches, and CI gates read.  But the golden test only
+fails at *test time* on a traffic shape that exercises the key; this
+pass closes the gap statically by diffing the dict literals in
+``router/telemetry.py`` and ``obs/slo.py`` against the golden sets:
 
 * ``TEL001`` — key written by ``Telemetry.snapshot()`` /
-  ``PoolCounters.summary()`` / ``Histogram.summary()`` / the
-  ``drops_by_reason`` zero-init that is **absent** from the golden set
-  (schema grew without updating the contract).
+  ``PoolCounters.summary()`` / ``Histogram.summary()`` /
+  ``SLIScope.summary()`` / ``SLIRegistry.summary()`` /
+  ``AlertBus.snapshot()`` / the ``drops_by_reason`` zero-init that is
+  **absent** from the golden set (schema grew without updating the
+  contract).
 * ``TEL002`` — golden key no monitored writer produces (schema
   shrank / key renamed — every dashboard reading it now KeyErrors).
 * ``TEL003`` — a monitored writer or golden set could not be located
@@ -25,13 +28,17 @@ from typing import Dict, List, Optional, Set
 from repro.analysis.core import FileContext, Finding, project_pass
 
 TELEMETRY_FILE = "src/repro/router/telemetry.py"
+SLO_FILE = "src/repro/obs/slo.py"
 GOLDEN_FILE = "tests/test_obs.py"
 
-#: (class, method) -> golden set-literal name in the test file
+#: (file, class, method) -> golden set-literal name in the test file
 WRITERS = {
-    ("Telemetry", "snapshot"): "FLEET_KEYS",
-    ("PoolCounters", "summary"): "POOL_KEYS",
-    ("Histogram", "summary"): "HIST_KEYS",
+    (TELEMETRY_FILE, "Telemetry", "snapshot"): "FLEET_KEYS",
+    (TELEMETRY_FILE, "PoolCounters", "summary"): "POOL_KEYS",
+    (TELEMETRY_FILE, "Histogram", "summary"): "HIST_KEYS",
+    (SLO_FILE, "SLIScope", "summary"): "SLI_KEYS",
+    (SLO_FILE, "SLIRegistry", "summary"): "SLI_SCOPES",
+    (SLO_FILE, "AlertBus", "snapshot"): "ALERT_KEYS",
 }
 #: the zero-init reason dict must cover at least the golden reasons
 DROPS_ATTR = "drops_by_reason"
@@ -93,22 +100,34 @@ def telemetry_pass(root: str) -> List[Finding]:
                         f"telemetry pass anchor {missing} not found")]
     golden = _golden_sets(gctx.tree)
 
-    # class -> method defs
-    methods: Dict[str, Dict[str, ast.FunctionDef]] = {}
-    for node in ast.walk(tctx.tree):
-        if isinstance(node, ast.ClassDef):
-            methods[node.name] = {
-                n.name: n for n in node.body
-                if isinstance(n, ast.FunctionDef)}
+    # file -> class -> method defs, for every monitored writer file
+    writer_files = sorted({f for f, _, _ in WRITERS})
+    methods: Dict[str, Dict[str, Dict[str, ast.FunctionDef]]] = {}
+    for rel in writer_files:
+        ctx = tctx if rel == TELEMETRY_FILE else read(rel)
+        if ctx is None:
+            findings.append(Finding(
+                "telemetry", "TEL003", rel, 0,
+                f"telemetry pass anchor {rel} not found — re-anchor the "
+                f"WRITERS table in passes/telemetry.py"))
+            continue
+        methods[rel] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                methods[rel][node.name] = {
+                    n.name: n for n in node.body
+                    if isinstance(n, ast.FunctionDef)}
 
-    for (cls, meth), golden_name in WRITERS.items():
-        fn = methods.get(cls, {}).get(meth)
+    for (rel, cls, meth), golden_name in WRITERS.items():
+        if rel not in methods:
+            continue                  # missing file already reported
+        fn = methods[rel].get(cls, {}).get(meth)
         want = golden.get(golden_name)
         if fn is None or want is None:
             where = (f"{cls}.{meth}" if fn is None
                      else f"{GOLDEN_FILE}:{golden_name}")
             findings.append(Finding(
-                "telemetry", "TEL003", TELEMETRY_FILE, 0,
+                "telemetry", "TEL003", rel, 0,
                 f"telemetry pass anchor {where} not found — re-anchor "
                 f"the WRITERS table in passes/telemetry.py",
                 symbol=f"{cls}.{meth}"))
@@ -118,13 +137,13 @@ def telemetry_pass(root: str) -> List[Finding]:
             continue                  # non-literal return: golden test covers it
         for key in sorted(got - want):
             findings.append(Finding(
-                "telemetry", "TEL001", TELEMETRY_FILE, fn.lineno,
+                "telemetry", "TEL001", rel, fn.lineno,
                 f"{cls}.{meth}() writes key {key!r} that is missing from "
                 f"{golden_name} in {GOLDEN_FILE} — add it to the golden "
                 f"schema in the same change", symbol=f"{cls}.{meth}"))
         for key in sorted(want - got):
             findings.append(Finding(
-                "telemetry", "TEL002", TELEMETRY_FILE, fn.lineno,
+                "telemetry", "TEL002", rel, fn.lineno,
                 f"golden key {key!r} in {golden_name} has no writer in "
                 f"{cls}.{meth}() — consumers reading it will KeyError",
                 symbol=f"{cls}.{meth}"))

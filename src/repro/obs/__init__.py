@@ -1,6 +1,6 @@
-"""repro.obs — the flight recorder over the serving stack.
+"""repro.obs — the flight recorder and SLO plane over the serving stack.
 
-Three layers, one subsystem:
+Five layers, one subsystem:
 
 * :mod:`repro.obs.trace` — per-request span trees on the fleet's
   virtual clock (``submit -> queue -> admit/prefill -> handoff ->
@@ -10,26 +10,46 @@ Three layers, one subsystem:
   Read one back with ``ResponseHandle.trace()``.
 * :mod:`repro.obs.timeseries` — a bounded ring buffer of per-tick
   fleet samples (tokens/s, queue depth, occupancy, bucket level, pool
-  count, mode), replacing the final-snapshot-only view; the orbit
-  report embeds its summary.
+  count, mode, firing alerts), replacing the final-snapshot-only view;
+  the orbit report embeds its summary.
+* :mod:`repro.obs.slo` — golden-signal SLIs (TTFT, inter-token latency,
+  queue wait, e2e latency, drop/retry rates; per pool and per SLO
+  class), declarative :class:`SLOSpec` objectives with error budgets,
+  multi-window burn-rate alerting, and the :class:`AlertBus` the orbit
+  controller consumes.
+* :mod:`repro.obs.metrics` — Prometheus text-format dump and the
+  ``SLO_report.json`` judgment artifact.
 * :mod:`repro.obs.export` — spans to JSONL and to Chrome
   ``trace_event`` JSON (one lane per pool/stage, orbit phases as async
-  spans), viewable in Perfetto.
+  spans, SLI/alert counter tracks), viewable in Perfetto.
 
 Quickstart::
 
-    client = spec.build()                   # or FleetSpec(..., trace=True)
-    client.enable_tracing()
-    h = client.submit(prompt, max_new=8)
-    h.result()
-    print(h.trace())                        # the span tree
-    from repro.obs import export_chrome_trace
-    export_chrome_trace(client, "trace.json")   # open in Perfetto
+    from repro.obs import SLOObjective, SLOSpec
+    spec = FleetSpec(..., slo=SLOSpec(objectives=[
+        SLOObjective("realtime-tracking", p99_ttft_s=0.1,
+                     availability=0.999)]))
+    client = spec.build()                   # engine attached + stepping
+    ...
+    client.telemetry["alerts"]              # firing burn alerts
+    from repro.obs import export_slo_report
+    export_slo_report(client, "SLO_report.json")
+
+See ``src/repro/obs/README.md`` for the full tour (reason codes,
+``python -m repro.launch.top``, benchstat).
 """
 from repro.obs.export import (chrome_trace, export_chrome_trace,
                               export_spans_jsonl)
+from repro.obs.metrics import (export_prometheus, export_slo_report,
+                               prometheus_text, slo_report)
+from repro.obs.slo import (REASON_CODES, Alert, AlertBus, SLIRegistry,
+                           SLIScope, SLOEngine, SLOObjective, SLOSpec)
 from repro.obs.timeseries import FleetTimeSeries, Sample
 from repro.obs.trace import OUTCOMES, Span, Tracer
 
-__all__ = ["FleetTimeSeries", "OUTCOMES", "Sample", "Span", "Tracer",
-           "chrome_trace", "export_chrome_trace", "export_spans_jsonl"]
+__all__ = ["Alert", "AlertBus", "FleetTimeSeries", "OUTCOMES",
+           "REASON_CODES", "SLIRegistry", "SLIScope", "SLOEngine",
+           "SLOObjective", "SLOSpec", "Sample", "Span", "Tracer",
+           "chrome_trace", "export_chrome_trace", "export_prometheus",
+           "export_slo_report", "export_spans_jsonl", "prometheus_text",
+           "slo_report"]

@@ -36,10 +36,11 @@ def _lane_ids(tracer) -> Dict[str, int]:
 
 
 def chrome_trace(tracer, timeseries=None, profile=None,
-                 t_end: Optional[float] = None) -> Dict:
+                 t_end: Optional[float] = None, slo=None) -> Dict:
     """Build the Chrome ``trace_event`` dict from a
     :class:`~repro.obs.trace.Tracer` (plus, optionally, the fleet
-    time-series and the orbit power profile for phase lanes)."""
+    time-series and the orbit power profile for phase lanes, and the
+    :class:`~repro.obs.slo.SLOEngine` for burn-rate counter tracks)."""
     lanes = _lane_ids(tracer)
     events: List[Dict] = []
     tids: Dict[tuple, int] = {}
@@ -111,6 +112,21 @@ def chrome_trace(tracer, timeseries=None, profile=None,
                 events.append({"ph": "C", "pid": 0, "tid": 0, "ts": ts,
                                "name": "bucket_frac",
                                "args": {"frac": round(s.bucket_frac, 4)}})
+            events.append({"ph": "C", "pid": 0, "tid": 0, "ts": ts,
+                           "name": "alerts_firing",
+                           "args": {"firing": getattr(s, "alerts", 0)}})
+
+    if slo is not None:
+        # SLO engine counter tracks: worst fast-window burn rate and the
+        # tightest objective's budget remaining, from the per-tick ring
+        for t, worst_burn, _, budget_min in slo.history:
+            ts = round(t * 1e6, 3)
+            events.append({"ph": "C", "pid": 0, "tid": 0, "ts": ts,
+                           "name": "slo_burn_fast",
+                           "args": {"burn": round(worst_burn, 3)}})
+            events.append({"ph": "C", "pid": 0, "tid": 0, "ts": ts,
+                           "name": "slo_budget_min",
+                           "args": {"frac": round(budget_min, 4)}})
 
     return {"traceEvents": events, "displayTimeUnit": "ms",
             "otherData": {"source": "repro.obs flight recorder",
@@ -131,7 +147,8 @@ def export_chrome_trace(client, path, t_end: Optional[float] = None) -> Dict:
         profile = prof_fn() if callable(prof_fn) else None
     trace = chrome_trace(client.tracer, timeseries=client.timeseries,
                          profile=profile,
-                         t_end=client.now if t_end is None else t_end)
+                         t_end=client.now if t_end is None else t_end,
+                         slo=getattr(client, "slo_engine", None))
     with open(path, "w") as f:
         json.dump(trace, f)
     return trace

@@ -20,6 +20,12 @@ Each sample is one small tuple-backed row::
     bucket_frac  orbit battery fraction (None when no controller)
     pools        live pool count (autoscaler growth/retirement visible)
     mode         dispatch mode ("nominal"/"conserve"/"critical")
+    alerts       SLO alerts firing at sample time (repro.obs.slo)
+
+``decode_tokens`` is a *sanitized* cumulative: per-pool counters are
+differentiated before summing, so counters leaving ``telemetry.pools``
+(retirement history compaction) can never step the fleet total backward
+and spike ``tokens_per_s`` negative.
 """
 from __future__ import annotations
 
@@ -38,6 +44,7 @@ class Sample:
     bucket_frac: Optional[float]
     pools: int
     mode: str
+    alerts: int = 0                      # SLO alerts firing at sample time
 
     def to_dict(self) -> Dict:
         return {"t": round(self.t, 6), "decode_tokens": self.decode_tokens,
@@ -45,7 +52,8 @@ class Sample:
                 "occupancy": round(self.occupancy, 4),
                 "bucket_frac": (None if self.bucket_frac is None
                                 else round(self.bucket_frac, 4)),
-                "pools": self.pools, "mode": self.mode}
+                "pools": self.pools, "mode": self.mode,
+                "alerts": self.alerts}
 
 
 class FleetTimeSeries:
@@ -57,6 +65,12 @@ class FleetTimeSeries:
         self.samples: deque = deque(maxlen=maxlen)
         self.total_samples = 0           # including ones the ring aged out
         self._last_t = -float("inf")
+        # per-pool decode counters at the last sample: the fleet rate is
+        # differentiated per pool *before* summing, so a retired pool's
+        # counters leaving telemetry (history compaction) can never make
+        # the summed cumulative step backward and spike the rate negative
+        self._pool_seen: Dict[str, int] = {}
+        self._decode_cum = 0             # sanitized monotone cumulative
 
     # ------------------------------------------------------------------
     # write side (ServingClient.advance)
@@ -72,16 +86,21 @@ class FleetTimeSeries:
         for p in client.router.pools.values():
             queued += p.queue_depth
             load += p.load
-        decode = sum(c.decode_tokens for c in tel.pools.values())
+        current = {name: c.decode_tokens for name, c in tel.pools.items()}
+        self._decode_cum += sum(
+            max(0, v - self._pool_seen.get(name, 0))
+            for name, v in current.items())
+        self._pool_seen = current
         engines = client.engines
         occ = (sum(e.occupancy for e in engines.values()) / len(engines)
                if engines else 0.0)
         ctrl = client.controller
         self.samples.append(Sample(
-            now, decode, queued, load, occ,
+            now, self._decode_cum, queued, load, occ,
             None if ctrl is None else ctrl.bucket.frac,
             len(client.router.pools),
-            "nominal" if ctrl is None else ctrl.mode))
+            "nominal" if ctrl is None else ctrl.mode,
+            tel.alerts.firing_count))
         self.total_samples += 1
         return True
 
@@ -98,14 +117,15 @@ class FleetTimeSeries:
 
     def tokens_per_s(self) -> List[float]:
         """Decode-token rate between consecutive retained samples (the
-        cumulative counter differentiates cleanly even when the ring
-        decimated or aged out samples)."""
+        sanitized cumulative counter differentiates cleanly even when
+        the ring decimated or aged out samples, and the clamp guarantees
+        no negative rate survives whatever the counters did)."""
         out = []
         prev = None
         for s in self.samples:
             if prev is not None and s.t > prev.t:
-                out.append((s.decode_tokens - prev.decode_tokens)
-                           / (s.t - prev.t))
+                out.append(max(0.0, (s.decode_tokens - prev.decode_tokens)
+                               / (s.t - prev.t)))
             elif prev is not None:
                 out.append(0.0)
             prev = s
@@ -134,6 +154,7 @@ class FleetTimeSeries:
             "bucket_frac_min": (round(min(fracs), 4) if fracs else None),
             "bucket_frac_last": (round(fracs[-1], 4) if fracs else None),
             "mode_last": last.mode,
+            "alerts_peak": max(s.alerts for s in self.samples),
         }
 
     def to_dict(self) -> Dict:

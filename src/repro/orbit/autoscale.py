@@ -131,11 +131,13 @@ class Autoscaler:
     # ------------------------------------------------------------------
     # control step
     # ------------------------------------------------------------------
-    def step(self, client, now: float,
-             mode: str = "nominal") -> Optional[Dict]:
+    def step(self, client, now: float, mode: str = "nominal",
+             hold_scale_down: bool = False) -> Optional[Dict]:
         """Evaluate the policy once; apply and return at most one action
         (None when nothing fires).  Called by the FleetController on the
-        fleet clock."""
+        fleet clock.  ``hold_scale_down`` suppresses the shrink branches
+        (the controller sets it while any SLO alert fires — retiring
+        capacity mid-burn would feed the regression it alerts on)."""
         p = self.policy
         if now - self._last_action_s < p.cooldown_s:
             return None
@@ -155,7 +157,8 @@ class Autoscaler:
                 client.set_capacity(p.template, cap)
                 act = {"op": "set_capacity", "pool": p.template,
                        "capacity": cap, "t": round(now, 4)}
-            elif idle and base.capacity > p.min_capacity:
+            elif idle and not hold_scale_down \
+                    and base.capacity > p.min_capacity:
                 cap = max(p.min_capacity, base.capacity - p.capacity_step)
                 client.set_capacity(p.template, cap)
                 act = {"op": "set_capacity", "pool": p.template,
@@ -166,7 +169,7 @@ class Autoscaler:
                 self._seq += 1
                 client.add_pool(replace(self.template_spec, name=name))
                 act = {"op": "add", "pool": name, "t": round(now, 4)}
-            elif idle and len(pools) > p.min_pools:
+            elif idle and not hold_scale_down and len(pools) > p.min_pools:
                 clones = [f.name for f in pools
                           if f.name != p.template]
                 if clones:

@@ -78,9 +78,11 @@ class FleetController:
 
     def _hardening_events(self) -> int:
         """Cumulative count of every hardening event the fleet has
-        recorded — the storm ladder's raw signal."""
+        recorded — the storm ladder's raw signal.  Fired SLO pages join
+        it: a burning error budget is evidence of environmental stress
+        exactly like retries and bitflips are."""
         t = self.client.router.telemetry
-        return (t.retries + t.watchdog_trips
+        return (t.retries + t.watchdog_trips + t.alerts.pages_fired
                 + sum(c.bitflips_detected + c.blocks_quarantined
                       + c.watchdog_trips + c.handoffs_replayed
                       for c in t.pools.values()))
@@ -137,7 +139,11 @@ class FleetController:
         if self.mode == "nominal" and self.deferred:
             self._release(now)
         if self.autoscaler is not None:
-            self.autoscaler.step(self.client, now, mode=self.mode)
+            # never retire capacity while any SLO alert fires: scale-down
+            # during a burn converts a latency regression into a spiral
+            hold = self.client.router.telemetry.alerts.firing_count > 0
+            self.autoscaler.step(self.client, now, mode=self.mode,
+                                 hold_scale_down=hold)
 
     def _set_mode(self, now: float) -> None:
         """Threshold the bucket level with hysteresis: dropping a mode
@@ -153,17 +159,19 @@ class FleetController:
             mode = "conserve"
         else:
             mode = "nominal"
-        if mode == "nominal" and self.storm:
-            # storm ladder: retry pressure floors the mode at conserve
-            # even on a healthy battery (scale-ups are suppressed for
-            # free — the autoscaler already gates on mode)
+        paging = self.client.router.telemetry.alerts.paging
+        if mode == "nominal" and (self.storm or paging):
+            # storm ladder / SLO burn: retry pressure or a firing page
+            # alert floors the mode at conserve even on a healthy
+            # battery (scale-ups are suppressed for free — the
+            # autoscaler already gates on mode)
             mode = "conserve"
         if mode != self.mode or not self.transitions:
             self.mode = mode
             self.transitions.append((round(now, 4), mode))
             self.client.router.telemetry.tracer.event(
                 "mode", now, mode=mode, bucket_frac=round(f, 4),
-                storm=self.storm)
+                storm=self.storm, paging=paging)
         self.client.router.energy_mode = ("nominal" if mode == "nominal"
                                           else "conserve")
 
@@ -202,6 +210,7 @@ class FleetController:
             "mode": self.mode,
             "deferred_waiting": self.deferred_count,
             "storm_pressure": round(self.storm_pressure, 4),
+            "alerts": self.client.router.telemetry.alerts.snapshot(),
             "bucket": self.bucket.summary(),
             # per-pool spend the bucket drained against — disaggregated
             # pools show their co-processing split here (the `.prefill`

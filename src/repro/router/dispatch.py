@@ -246,7 +246,7 @@ class Router:
         plan can meet the request's SLO budgets at current load."""
         choice = self._choose(req.slo)
         if choice is None:
-            self.telemetry.rejected += 1
+            self.telemetry.record_rejection(req.slo.name, now)
             self.telemetry.tracer.end_request(req.rid, now, "rejected",
                                               slo=req.slo.name)
             return False
@@ -269,6 +269,7 @@ class Router:
             self._drop(req, now, "retry_exhausted")
             return
         self.telemetry.retries += 1
+        self.telemetry.slis.observe_retry(now, req.slo.name, req.pool)
         if req.rerouted == 1:
             self._redispatch_now(req, now)
             return
@@ -300,7 +301,8 @@ class Router:
     def _drop(self, req: RouterRequest, now: float, reason: str) -> None:
         req.dropped = True
         req.violated = True
-        self.telemetry.record_drop(req.slo.name, reason)
+        self.telemetry.record_drop(req.slo.name, reason, t=now,
+                                   pool=req.pool)
         self.telemetry.tracer.end_request(req.rid, now, "dropped",
                                           rerouted=req.rerouted,
                                           reason=reason)
@@ -328,9 +330,22 @@ class Router:
         tracer = self.telemetry.tracer
         for r in completed:
             r.violated = r.done_s > r.deadline_s + _EPS
+            if r.first_out_s is None:
+                # hook-less (cost-model) pools deliver everything at
+                # completion, so TTFT degenerates to the e2e latency
+                r.first_out_s = r.done_s
+            out = getattr(r.payload, "output", None)
+            n_out = 0 if out is None else len(out)
+            itl = ((r.done_s - r.first_out_s) / (n_out - 1)
+                   if n_out > 1 else None)
             self.telemetry.record_completion(r.slo.name,
                                              r.done_s - r.arrival_s,
-                                             r.violated)
+                                             r.violated, t=r.done_s,
+                                             pool=r.pool,
+                                             ttft_s=(r.first_out_s
+                                                     - r.arrival_s),
+                                             itl_s=itl,
+                                             queue_wait_s=r.queue_wait_s)
             tracer.end_request(r.rid, r.done_s, "completed",
                                violated=r.violated, pool=r.pool)
         return completed

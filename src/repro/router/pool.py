@@ -52,6 +52,10 @@ class RouterRequest:
     dropped: bool = False
     rerouted: int = 0                    # failover re-dispatch count
     deferred: bool = False               # parked by the orbit energy cap
+    # golden-signal SLI stamps (virtual clock; None until observed)
+    serve_s: Optional[float] = None      # first batch launch (first wins)
+    first_out_s: Optional[float] = None  # first token reached the consumer
+    queue_wait_s: Optional[float] = None # total time queued, all launches
 
     @property
     def deadline_s(self) -> float:
@@ -197,6 +201,10 @@ class AcceleratorPool:
             return False
         plan, q = ready
         batch, self._queues[plan] = q[:self.max_window], q[self.max_window:]
+        for r in batch:                  # SLI stamps: first launch wins
+            if r.serve_s is None:        # for serve_s; queue wait adds up
+                r.serve_s = now          # across reroute re-queues
+            r.queue_wait_s = (r.queue_wait_s or 0.0) + (now - r.enqueue_s)
         if self.tracer is not None:
             for r in batch:              # queue ends where serve begins
                 self.tracer.finish(r.rid, "queue", now)

@@ -154,7 +154,13 @@ class Telemetry:
 
     def __init__(self):
         from repro.obs.trace import Tracer   # local: obs imports telemetry
+        from repro.obs.slo import AlertBus, SLIRegistry
         self.tracer = Tracer()
+        # golden-signal SLIs + SLO alert state: always constructed so
+        # snapshot()["slis"] / ["alerts"] have a stable shape whether or
+        # not an SLOSpec is ever attached
+        self.slis = SLIRegistry()
+        self.alerts = AlertBus()
         self.admitted = 0
         self.rejected = 0
         self.completed = 0
@@ -181,15 +187,33 @@ class Telemetry:
         return self.pools[name]
 
     def record_completion(self, slo_name: str, latency_s: float,
-                          violated: bool) -> None:
+                          violated: bool, *, t: Optional[float] = None,
+                          pool: Optional[str] = None,
+                          ttft_s: Optional[float] = None,
+                          itl_s: Optional[float] = None,
+                          queue_wait_s: Optional[float] = None) -> None:
         self.completed += 1
         self.latency_by_class[slo_name].record(latency_s)
         if violated:
             self.violations += 1
             self.violations_by_class[slo_name] += 1
+        if t is not None:
+            # same terminal path that closes the span chain also feeds
+            # the golden-signal SLIs — no second instrumentation layer
+            self.slis.observe_completion(t, slo_name, pool, latency_s,
+                                         ttft_s=ttft_s, itl_s=itl_s,
+                                         queue_wait_s=queue_wait_s,
+                                         violated=violated)
+
+    def record_rejection(self, slo_name: str, t: float) -> None:
+        """Admission-time rejection (router gate or dry-battery energy
+        gate): one counter bump plus the SLI/burn-window event."""
+        self.rejected += 1
+        self.slis.observe_reject(t, slo_name)
 
     def record_drop(self, slo_name: str, reason: str = "no_route",
-                    admitted: bool = True) -> None:
+                    admitted: bool = True, *, t: Optional[float] = None,
+                    pool: Optional[str] = None) -> None:
         """Count one dropped request under its reason code.  A drop at
         the admission gate itself (``admitted=False`` — e.g. dry-battery
         rejection) keeps the reason ledger without inflating the
@@ -202,6 +226,8 @@ class Telemetry:
         self.dropped += 1
         self.violations += 1
         self.violations_by_class[slo_name] += 1
+        if t is not None:
+            self.slis.observe_drop(t, slo_name, pool)
 
     def snapshot(self) -> Dict:
         return {
@@ -239,4 +265,7 @@ class Telemetry:
                                  sorted(self.latency_by_class.items())},
             "violations_by_class": dict(sorted(
                 self.violations_by_class.items())),
+            # golden-signal SLIs + SLO alert state (repro.obs.slo)
+            "slis": self.slis.summary(),
+            "alerts": self.alerts.snapshot(),
         }

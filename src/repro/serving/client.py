@@ -187,6 +187,13 @@ class ResponseHandle:
             "done_s": r.done_s,
             "latency_s": (None if r.done_s is None
                           else r.done_s - r.arrival_s),
+            # golden-signal stamps: time to first token the consumer saw
+            # (falls back to completion on hook-less pools) and the
+            # end-to-end latency under its SLI name
+            "ttft_s": (None if r.first_out_s is None
+                       else r.first_out_s - r.arrival_s),
+            "e2e_s": (None if r.done_s is None
+                      else r.done_s - r.arrival_s),
             "tokens": len(self._tokens),
         }
 
@@ -217,6 +224,8 @@ class ServingClient:
         self._retiring: set = set()
         # orbit control plane (repro.orbit.FleetController), if attached
         self.controller = None
+        # SLO judgment plane (repro.obs.slo.SLOEngine), if attached
+        self.slo_engine = None
         # flight recorder: the router's tracer (disabled until
         # enable_tracing) plus the always-on fleet time-series ring
         self.tracer = router.telemetry.tracer
@@ -332,7 +341,7 @@ class ServingClient:
             self.controller.defer(rreq, self.now)
             admitted = True                  # accepted; dispatches later
         else:                                # "reject"
-            self.router.telemetry.rejected += 1
+            self.router.telemetry.record_rejection(rreq.slo.name, self.now)
             self.router.telemetry.energy_rejected += 1
             # reason ledger only (admitted=False): the request was never
             # admitted, so the accounting invariant stays intact
@@ -348,6 +357,10 @@ class ServingClient:
     def _on_token(self, rid: int, tok: int, step: int) -> None:
         h = self._handles.get(rid)
         if h is not None:
+            # TTFT stamp: the first token the consumer actually saw,
+            # first push wins — honest across reroutes and failovers
+            if h._rreq.first_out_s is None:
+                h._rreq.first_out_s = self.now
             h._push(tok, step)
 
     # ------------------------------------------------------------------
@@ -411,6 +424,11 @@ class ServingClient:
         self.now += self.dt if dt is None else dt
         if self.failover is not None:
             self.failover.poll(self.now)
+        # SLO burn evaluation runs before the orbit controller so the
+        # control loop sees this tick's alert state (a firing page floors
+        # the mode at conserve and holds autoscaler scale-down)
+        if self.slo_engine is not None:
+            self.slo_engine.step(self.now)
         if self.controller is not None:
             self.controller.step(self.now)
         # hardened engines get their budgeted background scrub pass each
@@ -464,6 +482,14 @@ class ServingClient:
         if self.controller is not None:
             raise ValueError("a controller is already attached")
         self.controller = controller
+
+    def attach_slo(self, engine) -> None:
+        """Wire an SLO engine into the clock (one per client; built by
+        ``SLOSpec.attach``): ``advance`` steps its burn-rate evaluation
+        every tick."""
+        if self.slo_engine is not None:
+            raise ValueError("an SLO engine is already attached")
+        self.slo_engine = engine
 
     def add_pool(self, pool_spec, warm: bool = True) -> None:
         """Grow the fleet live: build the pool a PoolSpec describes and

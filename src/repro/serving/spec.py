@@ -255,6 +255,9 @@ class FleetSpec:
     # client-side no-progress watchdog window (virtual seconds a
     # streaming request may go without a new token); None -> disabled
     watchdog_s: Optional[float] = None
+    # SLO plane (repro.obs.slo.SLOSpec): objectives + burn-rate alert
+    # windows; build() attaches the live engine.  None -> SLIs only.
+    slo: Optional[object] = None
 
     # ------------------------------------------------------------------
     # serialization
@@ -276,6 +279,7 @@ class FleetSpec:
             "trace": self.trace,
             "retry": {k: dict(v) for k, v in self.retry.items()},
             "watchdog_s": self.watchdog_s,
+            "slo": None if self.slo is None else self.slo.to_dict(),
         }
 
     @classmethod
@@ -284,6 +288,9 @@ class FleetSpec:
         _reject_unknown_keys(cls, d, "FleetSpec")
         d["pools"] = [PoolSpec.from_dict(p) for p in d["pools"]]
         d["faults"] = [FaultSpec.from_dict(f) for f in d.get("faults", [])]
+        if d.get("slo") is not None:
+            from repro.obs.slo import SLOSpec
+            d["slo"] = SLOSpec.from_dict(d["slo"])
         return cls(**d)
 
     # ------------------------------------------------------------------
@@ -338,6 +345,8 @@ class FleetSpec:
                 raise ValueError(
                     f"fault on {f.pool!r}: duration_s must be > 0 "
                     f"(got {f.duration_s})")
+        if self.slo is not None:
+            self.slo.validate()
         return self
 
     # ------------------------------------------------------------------
@@ -442,6 +451,8 @@ class FleetSpec:
             # after warmup: the throwaway compile requests never appear
             # in the flight recorder
             client.enable_tracing()
+        if self.slo is not None:
+            self.slo.attach(client)
         return client
 
 

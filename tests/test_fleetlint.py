@@ -177,17 +177,38 @@ class Telemetry:
         return {"admitted": 0}
 '''
 
+TEL_SLO_SRC = '''\
+class SLIScope:
+    def summary(self):
+        return {"completed": 0}
+
+
+class SLIRegistry:
+    def summary(self):
+        return {"fleet": {}, "by_class": {}, "by_pool": {}}
+
+
+class AlertBus:
+    def snapshot(self):
+        return {"firing": [], "firing_count": 0}
+'''
+
 TEL_GOLDEN = '''\
 FLEET_KEYS = {"admitted"}
 DROP_REASONS = {"no_route"}
 POOL_KEYS = {"dispatched"}
 HIST_KEYS = {"count", "mean", "p50", "p99", "dropped"}
+SLI_KEYS = {"completed"}
+SLI_SCOPES = {"fleet", "by_class", "by_pool"}
+ALERT_KEYS = {"firing", "firing_count"}
 '''
 
 
-def _tel_findings(tmp_path, tel_src=TEL_SRC, golden=TEL_GOLDEN):
+def _tel_findings(tmp_path, tel_src=TEL_SRC, golden=TEL_GOLDEN,
+                  slo_src=TEL_SLO_SRC):
     root = scratch_tree(tmp_path, {
         "src/repro/router/telemetry.py": tel_src,
+        "src/repro/obs/slo.py": slo_src,
         "tests/test_obs.py": golden,
     })
     report = run_lint(root=root, baseline_path=None, passes=["telemetry"])
@@ -217,6 +238,26 @@ def test_telemetry_drop_reason_drift_both_directions(tmp_path):
     src = TEL_SRC.replace('{"no_route": 0}', '{"other": 0}')
     codes = sorted(f.code for f in _tel_findings(tmp_path, tel_src=src))
     assert codes == ["TEL001", "TEL002"]
+
+
+def test_telemetry_slo_writer_key_missing_from_golden(tmp_path):
+    # the SLO plane's writers are under the same lockstep contract as
+    # the classic snapshot: a new AlertBus key must land in ALERT_KEYS
+    src = TEL_SLO_SRC.replace('"firing_count": 0}',
+                              '"firing_count": 0, "snoozed": 0}')
+    findings = _tel_findings(tmp_path, slo_src=src)
+    assert [f.code for f in findings] == ["TEL001"]
+    assert "snoozed" in findings[0].message
+    assert findings[0].path.endswith("obs/slo.py")
+
+
+def test_telemetry_missing_slo_anchor_file_is_flagged(tmp_path):
+    root = scratch_tree(tmp_path, {
+        "src/repro/router/telemetry.py": TEL_SRC,
+        "tests/test_obs.py": TEL_GOLDEN,
+    })
+    report = run_lint(root=root, baseline_path=None, passes=["telemetry"])
+    assert "TEL003" in {f.code for f in report.findings}
 
 
 # ---------------------------------------------------------------------------

@@ -442,7 +442,7 @@ FLEET_KEYS = {
     "watchdog_trips", "bitflips_detected", "blocks_quarantined",
     "handoffs_replayed", "energy_deferred", "energy_rejected",
     "pools_added", "pools_retired", "energy_j", "queue_depth", "pools",
-    "latency_by_class", "violations_by_class",
+    "latency_by_class", "violations_by_class", "slis", "alerts",
 }
 DROP_REASONS = {"no_route", "retry_exhausted", "dry_battery", "deadline"}
 POOL_KEYS = {
@@ -454,6 +454,14 @@ POOL_KEYS = {
     "queue_depth", "batch_size", "slot_occupancy",
 }
 HIST_KEYS = {"count", "mean", "p50", "p99", "dropped"}
+# golden-signal SLI schema (repro.obs.slo — same lockstep contract)
+SLI_SCOPES = {"fleet", "by_class", "by_pool"}
+SLI_KEYS = {
+    "completed", "dropped", "rejected", "violated", "retries",
+    "ttft_s", "itl_s", "queue_wait_s", "e2e_s",
+}
+ALERT_KEYS = {"firing", "firing_count", "pages_fired", "warns_fired",
+              "cleared"}
 
 
 def test_telemetry_snapshot_schema_golden():
@@ -475,4 +483,77 @@ def test_telemetry_snapshot_schema_golden():
         assert set(pool[hist_key]) == HIST_KEYS
     assert all(set(v) == HIST_KEYS
                for v in snap["latency_by_class"].values())
+    # SLI / alert plane: stable shape with zero traffic dependence
+    assert set(snap["slis"]) == SLI_SCOPES
+    assert set(snap["slis"]["fleet"]) == SLI_KEYS
+    for scope in snap["slis"]["by_class"].values():
+        assert set(scope) == SLI_KEYS
+        for sig in ("ttft_s", "itl_s", "queue_wait_s", "e2e_s"):
+            assert set(scope[sig]) == HIST_KEYS
+    assert set(snap["alerts"]) == ALERT_KEYS
     json.dumps(snap)                             # JSON-serializable whole
+
+
+# ---------------------------------------------------------------------------
+# per-request golden-signal stamps on the handle
+# ---------------------------------------------------------------------------
+def test_handle_telemetry_ttft_and_e2e_stamps_streaming(model):
+    """Engine pools stream tokens before completion, so the handle's
+    TTFT stamp lands strictly inside the e2e latency."""
+    client = lm_spec().build(model=model)
+    h = client.submit(np.arange(PROMPT_LEN, dtype=np.int32),
+                      max_new=MAX_NEW)
+    assert h.telemetry["ttft_s"] is None         # nothing delivered yet
+    assert h.telemetry["e2e_s"] is None
+    h.result()
+    t = h.telemetry
+    assert t["ttft_s"] is not None and t["ttft_s"] > 0
+    assert t["e2e_s"] == pytest.approx(t["latency_s"])
+    assert t["ttft_s"] <= t["e2e_s"]
+    # the same signals landed in the SLI registry's fleet scope
+    fleet = client.telemetry["slis"]["fleet"]
+    assert fleet["completed"] == 1
+    assert fleet["ttft_s"]["count"] == 1
+    assert fleet["ttft_s"]["p50"] <= fleet["e2e_s"]["p50"]
+
+
+def test_handle_telemetry_ttft_equals_e2e_on_costmodel():
+    """Hook-less (cost-model) pools deliver everything at completion:
+    TTFT honestly degenerates to the e2e latency instead of lying."""
+    client = cost_spec().build()
+    h = client.submit(slo="bulk-reprocess")
+    client.drain()
+    t = h.telemetry
+    assert t["e2e_s"] > 0
+    assert t["ttft_s"] == pytest.approx(t["e2e_s"])
+
+
+# ---------------------------------------------------------------------------
+# time-series rates across pool retirement (regression)
+# ---------------------------------------------------------------------------
+def test_timeseries_rates_survive_pool_retirement_and_compaction():
+    """The fleet decode cumulative is differentiated per pool before
+    summing: a retired pool's counters leaving ``telemetry.pools``
+    (history compaction) must not step the cumulative backward and
+    spike ``tokens_per_s`` negative — the pre-fix implementation summed
+    live counters and did exactly that."""
+    client = vision_fleet_spec().build()
+    tel = client.router.telemetry
+    for _ in range(4):
+        client.submit(slo="background-science")
+    for _ in range(20):                  # decode progress on both boards
+        tel.pools["board-a"].decode_tokens += 5
+        tel.pools["board-b"].decode_tokens += 3
+        client.step()
+    client.retire_pool("board-b")
+    client.drain()
+    # history compaction: the retired pool's counters leave telemetry
+    tel.pools.pop("board-b", None)
+    for _ in range(10):
+        tel.pools["board-a"].decode_tokens += 5
+        client.step()
+    rates = client.timeseries.tokens_per_s()
+    assert rates and all(r >= 0.0 for r in rates)
+    assert max(rates) > 0
+    toks = client.timeseries.series("decode_tokens")
+    assert all(b >= a for a, b in zip(toks, toks[1:]))

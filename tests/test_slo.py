@@ -1,0 +1,408 @@
+"""SLO engine: spec round-trip/validation, burn-rate math at the
+documented thresholds (monotone budget, multi-window firing, hysteresis
+clearing), the seeded eclipse+fault end-to-end scenario (a p99_ttft
+page fires deterministically, floors the orbit mode at conserve, and
+clears after recovery), the storm-ladder / autoscaler control coupling,
+and the Prometheus / SLO_report exporters."""
+import json
+
+import pytest
+
+from repro.launch.route import vision_fleet_spec
+from repro.obs import (REASON_CODES, Alert, SLOObjective, SLOSpec,
+                       export_slo_report, prometheus_text, slo_report)
+from repro.orbit import Autoscaler, OrbitSpec, PhaseSpec, ScalingPolicy
+from repro.serving import FaultSpec, FleetSpec, PoolSpec
+
+
+def cost_spec(**kw):
+    return FleetSpec(
+        pools=[PoolSpec("board", ("mpsoc_dpu",), capacity=1,
+                        max_window=4, max_wait_s=0.0)],
+        workload="ursonet", **kw)
+
+
+def avail_spec(**kw):
+    """availability=0.9375 -> budget 1/16, exactly representable in
+    binary so the threshold tests can hit page_burn=10.0 dead on."""
+    base = dict(objectives=[SLOObjective("realtime-tracking",
+                                         availability=0.9375)],
+                fast_window_s=1.0, slow_window_s=5.0,
+                page_burn=10.0, warn_burn=2.0, clear_frac=0.5,
+                min_events=4)
+    base.update(kw)
+    return SLOSpec(**base)
+
+
+def attach(spec_kw=None, **slo_kw):
+    client = cost_spec(**(spec_kw or {})).build()
+    engine = avail_spec(**slo_kw).attach(client)
+    return client, engine
+
+
+def feed(client, t, n_good=0, n_bad=0, slo_class="realtime-tracking"):
+    """Push synthetic completions into the SLI registry at virtual t."""
+    slis = client.router.telemetry.slis
+    for _ in range(n_good):
+        slis.observe_completion(t, slo_class, "board", 0.01)
+    for _ in range(n_bad):
+        slis.observe_completion(t, slo_class, "board", 0.5, violated=True)
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip / validation
+# ---------------------------------------------------------------------------
+def test_slospec_json_round_trip():
+    spec = SLOSpec(objectives=[
+        SLOObjective("downlink-critical", p99_ttft_s=0.05, p99_itl_s=0.01),
+        SLOObjective("background-science", p99_e2e_s=3.0,
+                     availability=0.999)],
+        fast_window_s=0.5, slow_window_s=2.5, page_burn=8.0)
+    d = json.loads(json.dumps(spec.to_dict()))
+    assert SLOSpec.from_dict(d) == spec
+
+
+def test_slospec_from_dict_rejects_unknown_keys():
+    d = avail_spec().to_dict()
+    with pytest.raises(ValueError, match="unknown key.*bogus"):
+        SLOSpec.from_dict({**d, "bogus": 1})
+    with pytest.raises(ValueError, match="unknown key.*p99_ttft"):
+        SLOObjective.from_dict({"slo_class": "a", "p99_ttft": 0.1})
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (dict(objectives=[]), "at least one"),
+    (dict(objectives=[SLOObjective("a", p99_ttft_s=0.1),
+                      SLOObjective("a", p99_e2e_s=1.0)]), "duplicate"),
+    (dict(objectives=[SLOObjective("a")]), "no bound"),
+    (dict(objectives=[SLOObjective("a", p99_ttft_s=-1.0)]), "must be > 0"),
+    (dict(objectives=[SLOObjective("a", availability=1.0)]),
+     "zero error budget"),
+    (dict(fast_window_s=5.0, slow_window_s=1.0), "fast_window_s"),
+    (dict(warn_burn=20.0), "warn_burn"),
+    (dict(clear_frac=0.0), "clear_frac"),
+    (dict(min_events=0), "min_events"),
+])
+def test_slospec_validate_rejects(mutate, match):
+    with pytest.raises(ValueError, match=match):
+        avail_spec(**mutate).validate()
+
+
+def test_fleetspec_round_trip_carries_slo_and_build_attaches():
+    spec = cost_spec()
+    spec.slo = avail_spec()
+    d = json.loads(json.dumps(spec.to_dict()))
+    spec2 = FleetSpec.from_dict(d)
+    assert spec2.slo == spec.slo
+    client = spec2.build()
+    assert client.slo_engine is not None
+    assert client.slo_engine.spec == spec.slo
+    with pytest.raises(ValueError, match="already attached"):
+        avail_spec().attach(client)
+
+
+def test_reason_codes_are_the_stable_contract():
+    spec = SLOSpec(objectives=[SLOObjective(
+        "a", p99_ttft_s=0.1, p99_itl_s=0.01, p99_e2e_s=1.0,
+        availability=0.99)])
+    client = cost_spec().build()
+    engine = spec.attach(client)
+    assert {tr.reason for tr in engine.trackers} == set(REASON_CODES)
+
+
+# ---------------------------------------------------------------------------
+# burn-rate math at the documented thresholds
+# ---------------------------------------------------------------------------
+def test_page_fires_exactly_at_the_burn_threshold():
+    # bad_frac 10/16 / budget 1/16 = burn 10.0 == page_burn: fires (>=)
+    client, engine = attach()
+    bus = client.router.telemetry.alerts
+    feed(client, 0.9, n_good=6, n_bad=10)
+    engine.step(1.0)
+    assert bus.is_firing("availability_burn:realtime-tracking:page")
+    assert bus.is_firing("availability_burn:realtime-tracking:warn")
+    assert bus.pages_fired == 1 and bus.warns_fired == 1
+    alert = bus.firing[0]
+    assert alert.reason == "availability_burn"
+    assert alert.burn_fast == pytest.approx(10.0)
+
+
+def test_burn_just_below_page_threshold_warns_only():
+    # bad_frac 9/16 / budget 1/16 -> burn 9.0 < 10: warn, never page
+    client, engine = attach()
+    bus = client.router.telemetry.alerts
+    feed(client, 0.9, n_good=7, n_bad=9)
+    engine.step(1.0)
+    assert not bus.is_firing("availability_burn:realtime-tracking:page")
+    assert bus.is_firing("availability_burn:realtime-tracking:warn")
+
+
+def test_min_events_guard_blocks_thin_evidence():
+    # 3 bad events is burn 20 but under min_events=4: no alert
+    client, engine = attach()
+    feed(client, 0.9, n_bad=3)
+    engine.step(1.0)
+    assert client.router.telemetry.alerts.firing_count == 0
+    feed(client, 0.95, n_bad=1)          # 4th event crosses the guard
+    engine.step(1.0)
+    assert client.router.telemetry.alerts.firing_count == 2
+
+
+def test_both_windows_must_burn_for_the_alert_to_fire():
+    # a fast-window spike diluted across the slow window must not page:
+    # 5 bad in the last second, but 200 good spread over the slow window
+    client, engine = attach()
+    bus = client.router.telemetry.alerts
+    for k in range(200):
+        feed(client, 0.02 * k, n_good=1)  # t in [0, 4.0)
+    feed(client, 4.4, n_bad=5)
+    engine.step(4.5)
+    # burn_fast clears the page bar but burn_slow = (5/205)*16 ~ 0.4
+    assert not bus.is_firing("availability_burn:realtime-tracking:page")
+    assert bus.firing_count == 0
+
+
+def test_budget_consumption_is_monotone():
+    import random
+    client, engine = attach()
+    tracker = engine.trackers[0]
+    rng = random.Random(42)
+    prev_bad, prev_total = 0, 0
+    for k in range(200):
+        t = 0.01 * k
+        feed(client, t, n_good=int(rng.random() < 0.7),
+             n_bad=int(rng.random() < 0.3))
+        engine.step(t)
+        assert tracker.bad >= prev_bad
+        assert tracker.total >= prev_total
+        assert 0.0 <= tracker.budget_remaining() <= 1.0
+        prev_bad, prev_total = tracker.bad, tracker.total
+    # an all-bad tail only ever shrinks the remaining budget
+    prev_rem = tracker.budget_remaining()
+    for k in range(20):
+        feed(client, 2.0 + 0.01 * k, n_bad=1)
+        rem = tracker.budget_remaining()
+        assert rem <= prev_rem
+        prev_rem = rem
+
+
+def test_alert_clears_with_hysteresis_and_never_flaps():
+    client, engine = attach()
+    bus = client.router.telemetry.alerts
+    feed(client, 0.9, n_good=6, n_bad=10)
+    engine.step(1.0)                      # burn 10: page + warn fire
+    assert bus.firing_count == 2
+    engine.step(1.5)                      # nothing changed: still firing
+    assert bus.firing_count == 2 and bus.pages_fired == 1
+    # 25 good events dilute the slow window to burn 10/41/(1/16) ~ 3.9
+    # and empty the fast window of bad events; the page clears
+    # (3.9 < 10*0.5) but the warn holds (3.9 >= 2*0.5) — hysteresis is
+    # per-severity, not a shared cliff
+    feed(client, 2.2, n_good=25)
+    engine.step(2.3)
+    assert not bus.is_firing("availability_burn:realtime-tracking:page")
+    assert bus.is_firing("availability_burn:realtime-tracking:warn")
+    # once every event ages out of the slow window the warn clears too
+    engine.step(7.5)
+    assert bus.firing_count == 0
+    # each alert fired exactly once across the whole episode: no flap
+    assert bus.pages_fired == 1 and bus.warns_fired == 1
+    assert bus.cleared == 2
+    page = [a for a in bus.history if a.severity == "page"][0]
+    assert page.t_cleared == pytest.approx(2.3)
+
+
+def test_drops_burn_latency_and_availability_budgets():
+    spec = SLOSpec(objectives=[SLOObjective(
+        "realtime-tracking", p99_ttft_s=0.1, availability=0.95)],
+        min_events=1)
+    client = cost_spec().build()
+    engine = spec.attach(client)
+    slis = client.router.telemetry.slis
+    slis.observe_drop(0.5, "realtime-tracking", "board")
+    engine.step(0.6)
+    # a dropped request never delivered a first token: worst possible
+    # outcome for both the latency objective and availability
+    for tracker in engine.trackers:
+        assert tracker.bad == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: eclipse+fault scenario (the acceptance criterion)
+# ---------------------------------------------------------------------------
+def _eclipse_fault_run():
+    """Seeded, fully virtual: a pool fault under open-loop realtime
+    traffic starves TTFT, the p99_ttft page fires, floors the mode at
+    conserve on a full battery, and clears once the backlog drains."""
+    spec = vision_fleet_spec(
+        faults=[FaultSpec("board-a", at_s=0.25, duration_s=0.5)])
+    spec.slo = SLOSpec(
+        objectives=[SLOObjective("realtime-tracking", p99_ttft_s=0.08)],
+        fast_window_s=0.2, slow_window_s=0.8,
+        page_burn=5.0, warn_burn=2.0, min_events=3)
+    client = spec.build()
+    # huge sunlit bucket: any conserve transition is attributable to the
+    # alert, never to the battery
+    OrbitSpec(phases=[PhaseSpec("sunlit", 10.0, 100.0)],
+              bucket_j=1e6, initial_frac=1.0).attach(client)
+    n, rate = 90, 120.0
+    submitted = 0
+    paging_seen = []                      # (t, mode, reasons) while paging
+    while (submitted < n or client.outstanding or client.pending_faults):
+        client.advance()
+        while submitted < n and client.now >= submitted / rate:
+            client.submit(slo="realtime-tracking",
+                          arrival=submitted / rate)
+            submitted += 1
+        client.pump()
+        tel = client.router.telemetry
+        if tel.alerts.paging:
+            paging_seen.append((
+                round(client.now, 6), client.controller.mode,
+                tuple(sorted(a["reason"] for a in
+                             tel.alerts.snapshot()["firing"]))))
+        if client.now > 30.0:
+            raise RuntimeError("scenario failed to drain")
+    # idle out the slow window so every alert ages out and clears
+    end = client.now + 1.0
+    while client.now < end:
+        client.step()
+    return client, paging_seen
+
+
+def test_eclipse_fault_scenario_pages_floors_mode_and_clears():
+    client, paging_seen = _eclipse_fault_run()
+    bus = client.router.telemetry.alerts
+    # the page fired, with the stable reason code, and was visible in
+    # snapshot()["alerts"] while firing
+    assert paging_seen, "p99_ttft page alert never fired"
+    assert any("p99_ttft_burn" in reasons for _, _, reasons in paging_seen)
+    pages = [a for a in bus.history
+             if a.severity == "page" and a.reason == "p99_ttft_burn"]
+    assert pages and pages[0].slo_class == "realtime-tracking"
+    # while paging the orbit mode was floored at conserve — on a battery
+    # that never left nominal territory
+    assert {mode for _, mode, _ in paging_seen} == {"conserve"}
+    # recovery: every alert cleared and the mode returned to nominal
+    assert bus.firing_count == 0
+    assert all(a.t_cleared is not None for a in bus.history)
+    assert client.controller.mode == "nominal"
+    modes = [m for _, m in client.controller.transitions]
+    assert modes[-1] == "nominal" and "conserve" in modes
+    # the conserve window brackets the fault, not the whole run
+    assert client.telemetry["alerts"]["pages_fired"] >= 1
+
+
+def test_eclipse_fault_scenario_is_deterministic():
+    c1, seen1 = _eclipse_fault_run()
+    c2, seen2 = _eclipse_fault_run()
+    assert seen1 == seen2
+    h1 = [a.to_dict() for a in c1.router.telemetry.alerts.history]
+    h2 = [a.to_dict() for a in c2.router.telemetry.alerts.history]
+    assert h1 == h2
+    assert c1.controller.transitions == c2.controller.transitions
+    assert c1.telemetry["slis"] == c2.telemetry["slis"]
+
+
+# ---------------------------------------------------------------------------
+# control coupling: storm ladder + autoscaler hold
+# ---------------------------------------------------------------------------
+def test_fired_page_joins_the_storm_ladder():
+    client = cost_spec().build()
+    ctrl = OrbitSpec(phases=[PhaseSpec("sunlit", 10.0, 100.0)],
+                     bucket_j=1e6, initial_frac=1.0,
+                     storm_events=1, storm_decay=0.5).attach(client)
+    bus = client.router.telemetry.alerts
+    bus.fire(Alert("p99_ttft_burn", "realtime-tracking", "page",
+                   0.1, 9.9, 9.9, 5.0))
+    client.advance()
+    # pages_fired is a hardening event: the ladder latches storm AND the
+    # firing page itself floors the mode
+    assert ctrl.storm_pressure >= 1.0
+    assert ctrl.mode == "conserve"
+    bus.clear("p99_ttft_burn:realtime-tracking:page", client.now)
+    for _ in range(12):                  # pressure decays 0.5x per tick
+        client.advance()
+    assert not ctrl.storm
+    assert ctrl.mode == "nominal"
+    assert ctrl.report()["alerts"]["pages_fired"] == 1
+
+
+def test_firing_alert_holds_autoscaler_scale_down():
+    client = cost_spec().build()
+    client.set_capacity("board", 2)
+    policy = ScalingPolicy(template="board", grow="capacity",
+                           min_capacity=1, max_capacity=4, queue_high=8,
+                           cooldown_s=0.0)
+    scaler = Autoscaler(policy, template_spec=client.spec.pools[0])
+    # idle fleet, but an alert is firing: the shrink branch must hold
+    act = scaler.step(client, now=1.0, mode="nominal",
+                      hold_scale_down=True)
+    assert act is None
+    assert client.router.pools["board"].capacity == 2
+    # alert cleared: the same idle state now shrinks
+    act = scaler.step(client, now=2.0, mode="nominal")
+    assert act is not None and act["op"] == "set_capacity"
+    assert client.router.pools["board"].capacity == 1
+
+
+def test_controller_passes_hold_while_alert_fires():
+    spec = cost_spec()
+    client = spec.build()
+    client.set_capacity("board", 2)
+    policy = ScalingPolicy(template="board", grow="capacity",
+                           min_capacity=1, max_capacity=4, queue_high=8,
+                           cooldown_s=0.0)
+    ctrl = OrbitSpec(phases=[PhaseSpec("sunlit", 10.0, 100.0)],
+                     bucket_j=1e6, initial_frac=1.0,
+                     scaling=policy).attach(client)
+    bus = client.router.telemetry.alerts
+    bus.fire(Alert("p99_e2e_burn", "background-science", "warn",
+                   0.0, 3.0, 3.0, 2.0))
+    client.advance()
+    assert client.router.pools["board"].capacity == 2   # held
+    bus.clear("p99_e2e_burn:background-science:warn", client.now)
+    client.advance()
+    assert client.router.pools["board"].capacity == 1   # released
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+def test_prometheus_text_dump(tmp_path):
+    client, engine = attach()
+    client.submit(slo="realtime-tracking")
+    client.drain()
+    text = prometheus_text(client)
+    assert "# TYPE repro_fleet_events_total counter" in text
+    assert 'repro_fleet_events_total{event="completed"} 1' in text
+    assert 'repro_pool_completed_total{pool="board"} 1' in text
+    assert 'repro_sli_ttft_seconds{scope="fleet",quantile="p99"}' in text
+    assert "repro_slo_budget_remaining" in text
+    assert "repro_alerts_firing" in text
+
+
+def test_slo_report_export(tmp_path):
+    client, engine = attach()
+    client.submit(slo="realtime-tracking")
+    client.drain()
+    path = tmp_path / "SLO_report.json"
+    report = export_slo_report(client, str(path))
+    data = json.loads(path.read_text())
+    assert data == json.loads(json.dumps(report))
+    objectives = data["slo"]["objectives"]
+    assert objectives[0]["slo_class"] == "realtime-tracking"
+    assert objectives[0]["budget_remaining"] == 1.0
+    # the embedded spec round-trips back into an equal SLOSpec
+    assert SLOSpec.from_dict(data["slo"]["spec"]) == engine.spec
+    assert data["telemetry"]["slis"]["fleet"]["completed"] == 1
+    assert "timeseries" in data
+
+
+def test_slo_report_without_engine_is_still_valid():
+    client = cost_spec().build()
+    client.submit(slo="bulk-reprocess")
+    client.drain()
+    report = slo_report(client)
+    assert report["slo"] is None
+    json.dumps(report)

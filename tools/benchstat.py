@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""benchstat — append bench results to a history ledger and gate drift.
+
+    python tools/benchstat.py --history BENCH_history.jsonl BENCH_*.json
+    python tools/benchstat.py --history BENCH_history.jsonl --check BENCH_*.json
+
+Each invocation flattens every numeric leaf of the given ``BENCH_*.json``
+artifacts into dotted metric keys (``obs_overhead.overhead``,
+``decode.tiny-mha.tokens_per_s`` ...) and appends **one** JSONL record —
+wall timestamp, git sha, metrics — to the history ledger.  CI restores
+the ledger across runs (actions/cache or artifact download), so it
+accumulates the perf trajectory the single-run ``--check`` gates inside
+each bench cannot see: a 1%/week slow drift passes every per-run gate
+and still loses 15% in a quarter.
+
+``--check`` compares the *current* run against the trailing median of
+the last ``--window`` ledger records (median, not mean: one noisy CI box
+must not poison the baseline), for the directional keys only:
+
+  * keys containing ``tokens_per`` or ``speedup`` are higher-is-better —
+    fail when current < median x (1 - --rel-slack);
+  * keys containing ``overhead`` are lower-is-better — fail when
+    current > median + --abs-slack (overheads are small fractions; a
+    relative gate on ~0.01 values would be pure noise);
+  * everything else (counts, timestamps, config echoes) is recorded but
+    never gated, and any key with a ``max_*``/``min_*`` path segment is
+    skipped outright (those echo gate *configuration*, not measurement).
+
+With fewer than ``--min-history`` prior records the check passes
+trivially (the ledger is still warming up).  The record is appended
+whether or not the gate fails, so the ledger never has survivorship
+bias.  This file is a host-side tool: wall clocks and subprocesses are
+fine here (``src/repro`` — fleetlint-linted — is where they are banned).
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import statistics
+import subprocess
+import sys
+
+
+def flatten(obj, prefix="") -> dict:
+    """Numeric leaves of a nested JSON value as {dotted_key: float}."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            # a list of scenario dicts indexes by scenario name, so the
+            # key survives reordering; anything else indexes by position
+            tag = (v.get("scenario", str(i))
+                   if isinstance(v, dict) else str(i))
+            out.update(flatten(v, f"{prefix}{tag}."))
+    elif isinstance(obj, bool):
+        pass                              # True/False are flags, not metrics
+    elif isinstance(obj, (int, float)):
+        out[prefix[:-1]] = float(obj)
+    return out
+
+
+def gate_direction(key: str) -> str | None:
+    """'up' (higher-better), 'down' (lower-better), or None (ungated)."""
+    segments = key.split(".")
+    if any(s.startswith(("max_", "min_")) for s in segments):
+        return None                       # config echo, not a measurement
+    last = segments[-1]
+    if "tokens_per" in last or "speedup" in last or "ratio" in last:
+        return "up"
+    if "overhead" in last:
+        return "down"
+    return None
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"],
+            stderr=subprocess.DEVNULL).decode().strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def load_history(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records
+
+
+def check(metrics: dict, history: list[dict], window: int,
+          min_history: int, rel_slack: float, abs_slack: float) -> list[str]:
+    """Regression messages for the current metrics vs trailing medians."""
+    if len(history) < min_history:
+        print(f"benchstat: {len(history)} prior record(s) < "
+              f"--min-history {min_history}; check passes trivially")
+        return []
+    tail = history[-window:]
+    failures = []
+    for key, value in sorted(metrics.items()):
+        direction = gate_direction(key)
+        if direction is None:
+            continue
+        prior = [r["metrics"][key] for r in tail if key in r["metrics"]]
+        if len(prior) < min_history:
+            continue                      # new metric: let it warm up
+        med = statistics.median(prior)
+        if direction == "up" and value < med * (1.0 - rel_slack):
+            failures.append(
+                f"{key}: {value:g} fell below trailing median {med:g} "
+                f"by more than {rel_slack:.0%} ({len(prior)} samples)")
+        elif direction == "down" and value > med + abs_slack:
+            failures.append(
+                f"{key}: {value:g} rose above trailing median {med:g} "
+                f"by more than {abs_slack:g} ({len(prior)} samples)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_files", nargs="+", metavar="BENCH.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="JSONL ledger to append to (default "
+                         "BENCH_history.jsonl)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on drift vs the trailing median")
+    ap.add_argument("--window", type=int, default=20,
+                    help="trailing records the median is taken over")
+    ap.add_argument("--min-history", type=int, default=3,
+                    help="prior records required before gating")
+    ap.add_argument("--rel-slack", type=float, default=0.15,
+                    help="allowed fractional drop for higher-is-better "
+                         "keys (default 0.15 — CI boxes are noisy)")
+    ap.add_argument("--abs-slack", type=float, default=0.01,
+                    help="allowed absolute rise for overhead keys")
+    args = ap.parse_args(argv)
+
+    metrics = {}
+    for path in args.bench_files:
+        stem = os.path.splitext(os.path.basename(path))[0]
+        stem = stem[len("BENCH_"):] if stem.startswith("BENCH_") else stem
+        with open(path) as f:
+            metrics.update(flatten(json.load(f), f"{stem}."))
+    history = load_history(args.history)
+
+    failures = (check(metrics, history, args.window, args.min_history,
+                      args.rel_slack, args.abs_slack)
+                if args.check else [])
+
+    # append before exiting either way: the ledger must record failing
+    # runs too, or the baseline only ever sees survivors
+    record = {
+        "ts": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "sha": git_sha(),
+        "files": [os.path.basename(p) for p in args.bench_files],
+        "metrics": metrics,
+    }
+    with open(args.history, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    gated = sum(1 for k in metrics if gate_direction(k) is not None)
+    print(f"benchstat: recorded {len(metrics)} metrics ({gated} gated) "
+          f"from {len(args.bench_files)} file(s); "
+          f"history now {len(history) + 1} record(s)")
+
+    if failures:
+        print(f"benchstat: {len(failures)} regression(s) vs the trailing "
+              f"median of {min(len(history), args.window)} record(s):",
+            file=sys.stderr)
+        for msg in failures:
+            print(f"  REGRESSION {msg}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
