@@ -4,7 +4,7 @@ disaggregation (the MPAI DPU->VPU split) through the serving facade.
     PYTHONPATH=src python -m benchmarks.coproc_bench [--smoke] [--check] \
         [--out BENCH_coproc.json] [--min-ratio 1.0]
 
-Two scenarios, both on prompts *longer than the engine's prompt_len
+Three scenarios, all on prompts *longer than the engine's prompt_len
 bucket* — the workload the dense-scratch prefill could not admit at all:
 
   * ``coproc_chunked_prefill`` — the unified engine (chunked paged
@@ -33,6 +33,13 @@ bucket* — the workload the dense-scratch prefill could not admit at all:
     lost or duplicated at the handoff), the prefill stage is charged
     energy on its own pool, and disaggregated tokens/s >= ``--min-ratio``
     x unified.
+
+  * ``coproc_sharded_serving`` — 1 prefill stage fanning versioned
+    wire-format handoffs out to 2 decode shards (least-loaded import)
+    vs the unified single pool, plus an untimed churn pass that retires
+    a shard mid-run.  Under ``--check``: sharded outputs bit-identical
+    to unified (churn included), every shard imported work, and sharded
+    tokens/s >= ``--min-ratio`` x single-pool.
 
 Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks
 and writes the full metrics as JSON (CI keeps ``BENCH_coproc.json`` as
@@ -263,6 +270,126 @@ def run_disagg_serving(n_requests: int = 24, repeats: int = 3,
     return out
 
 
+# ---------------------------------------------------------------------------
+# scenario 3: N-way sharded decode fan-out vs the unified single pool
+# ---------------------------------------------------------------------------
+def run_sharded_serving(n_requests: int = 16, repeats: int = 3,
+                        slots: int = 4, shards: int = 2, seed: int = 0,
+                        check: bool = False,
+                        min_ratio: float = 0.0) -> dict:
+    """1 prefill stage fanning wire-format handoffs out to ``shards``
+    decode shards, vs the unified single-pool engine, on the same
+    long-prompt workload.  Best-of-N process-CPU tokens/s per
+    architecture; a final *churn* pass retires a decode shard mid-run
+    and must complete every stream regardless.  Under ``--check`` the
+    sharded outputs must be bit-identical to the unified pool's (churn
+    pass included) and sharded tokens/s must be >= ``--min-ratio`` x
+    unified."""
+    from repro.runtime.serve import Request
+    from repro.serving import PoolSpec, make_server
+
+    cfg, params = _model()
+    rng = np.random.default_rng(seed)
+    workload = [(i, rng.integers(0, 256,
+                                 int(rng.integers(3 * PROMPT_LEN,
+                                                  MAX_PROMPT - MAX_NEW + 1)))
+                 .astype(np.int32),
+                 int(rng.integers(1, MAX_NEW + 1)))
+                for i in range(n_requests)]
+
+    def build(n_shards):
+        # disagg arms use the wide fused prefill chunk (the DPU
+        # analogue's scheduling win, same as scenario 2); the
+        # bit-identity gate therefore compares sharded against the
+        # 1-shard seam with IDENTICAL chunk geometry — sharding must
+        # change placement, never tokens — while the perf ratio gates
+        # against the unified single pool
+        kw = ({} if n_shards == 0 else
+              dict(prefill_backend="engine", prefill_chunk=MAX_PROMPT,
+                   decode_shards=n_shards))
+        return make_server(cfg, params, PoolSpec(
+            "bench-sharded", ("tpu_v5e_bf16",), backend="engine",
+            max_slots=slots, prompt_len=PROMPT_LEN, max_new=MAX_NEW,
+            block_size=BLOCK, max_prompt_len=MAX_PROMPT, **kw))
+
+    single = build(0)                   # unified engine pool
+    sharded = build(shards)             # 1 prefill -> N decode shards
+    seam_ref = build(1)                 # unsharded seam, same geometry
+
+    def serve(srv, shift):
+        for rid, prompt, max_new in workload:
+            srv.submit(Request(rid + shift, prompt, max_new=max_new))
+        c0 = time.process_time()
+        while srv.pending:
+            srv.step()
+        cpu = time.process_time() - c0
+        toks = sum(len(srv.done[rid + shift].output)
+                   for rid, _, _ in workload)
+        return toks / max(cpu, 1e-9)
+
+    # compile outside the timed region
+    warm = _shared_prefix_workload(2, MAX_PROMPT - MAX_NEW, PROMPT_LEN,
+                                   seed=99)
+    for srv in (single, sharded, seam_ref):
+        for rid, p, mn in warm:
+            srv.submit(Request(-rid - 1, p, max_new=mn))
+        while srv.pending:
+            srv.step()
+        srv.reset_stats()
+
+    best = {"single": 0.0, "sharded": 0.0}
+    for rep in range(repeats):          # interleaved best-of-N
+        for kind, srv in (("single", single), ("sharded", sharded)):
+            best[kind] = max(best[kind], serve(srv, (rep + 1) * 1000))
+    serve(seam_ref, 1000)               # untimed bit-identity reference
+
+    # churn pass (untimed): retire a decode shard while its streams are
+    # mid-decode; the draining shard finishes what it holds, new imports
+    # fan out over the survivors, and nothing is dropped
+    churn_shift = (repeats + 1) * 1000
+    for rid, prompt, max_new in workload:
+        sharded.submit(Request(rid + churn_shift, prompt, max_new=max_new))
+    for _ in range(3):
+        sharded.step()
+    sharded.retire_shard(shards - 1)
+    while sharded.pending:
+        sharded.step()
+
+    st = sharded.stats()
+    out = {
+        "scenario": "coproc_sharded_serving",
+        "requests": n_requests, "repeats": repeats, "slots": slots,
+        "decode_shards": shards,
+        "single_tokens_per_cpu_s": round(best["single"], 1),
+        "sharded_tokens_per_cpu_s": round(best["sharded"], 1),
+        "ratio_sharded_vs_single": round(
+            best["sharded"] / max(best["single"], 1e-9), 3),
+        "handoffs": st["handoffs"],
+        "imports_by_shard": st["imports_by_shard"],
+        "seam_deferrals_by_shard": st["seam_deferrals_by_shard"],
+    }
+    if check:
+        # bit-identical to the unsharded seam (same chunk geometry),
+        # every repeat AND the churn pass — sharding and mid-run
+        # retirement change placement, never tokens
+        for rid, _, max_new in workload:
+            want = seam_ref.done[rid + 1000].output
+            for rep in range(repeats):
+                got = sharded.done[rid + (rep + 1) * 1000].output
+                assert np.array_equal(got, want), \
+                    f"shard divergence: rid {rid} rep {rep}"
+            got = sharded.done[rid + churn_shift].output
+            assert len(got) == max_new and np.array_equal(got, want), \
+                f"churn pass dropped/diverged: rid {rid}"
+        assert all(st["imports_by_shard"].values()), \
+            f"a decode shard imported nothing: {st['imports_by_shard']}"
+        if min_ratio:
+            assert out["ratio_sharded_vs_single"] >= min_ratio, (
+                f"sharded fleet fell behind the single pool: "
+                f"{out['ratio_sharded_vs_single']} < {min_ratio}")
+    return out
+
+
 def main(csv: bool = True, out: str | None = None, smoke: bool = False,
          check: bool = False, min_ratio: float = 0.0):
     results = [
@@ -273,6 +400,8 @@ def main(csv: bool = True, out: str | None = None, smoke: bool = False,
         # co-tenant noise
         run_disagg_serving(n_requests=16 if smoke else 32,
                            repeats=3, check=check, min_ratio=min_ratio),
+        run_sharded_serving(n_requests=12 if smoke else 24,
+                            repeats=3, check=check, min_ratio=min_ratio),
     ]
     if csv:
         r = results[0]
@@ -292,6 +421,15 @@ def main(csv: bool = True, out: str | None = None, smoke: bool = False,
               f"handoffs={r['disagg']['handoffs']};"
               f"prefill_energy_j="
               f"{r['disagg']['pools']['lm.prefill']['energy_j']}")
+        r = results[2]
+        us = 1e6 / max(r["sharded_tokens_per_cpu_s"], 1e-9)
+        imports = ";".join(f"{k}={v}"
+                           for k, v in sorted(r["imports_by_shard"].items()))
+        print(f"{r['scenario']},{us:.1f},"
+              f"sharded_tps={r['sharded_tokens_per_cpu_s']};"
+              f"single_tps={r['single_tokens_per_cpu_s']};"
+              f"ratio={r['ratio_sharded_vs_single']};"
+              f"handoffs={r['handoffs']};{imports}")
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)

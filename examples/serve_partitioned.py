@@ -1,6 +1,7 @@
-"""Batched serving with an MPAI-partitioned model through the serving
-facade: int8 backbone + bf16 head, continuous-batching decode over the
-paged KV pool, streaming responses.
+"""Pod-scale disaggregated serving through the fleet facade: an
+MPAI-partitioned model with a dedicated prefill stage (the DPU
+analogue) fanning handoffs out to TWO decode shards over the versioned
+wire format, streaming responses end to end.
 
     PYTHONPATH=src python examples/serve_partitioned.py
 """
@@ -18,22 +19,27 @@ def main():
     cfg = get_config("qwen3-14b", smoke=True).with_(num_layers=4,
                                                     remat=False)
     params = T.model_init(jax.random.PRNGKey(0), cfg)
+    # one pool, three engines: a prefill stage feeding 2 decode shards.
+    # Every handoff crosses the seam as serialized bytes (versioned +
+    # checksummed) and lands on the least-loaded live shard.
     spec = FleetSpec(
         pools=[PoolSpec("board", ("tpu_v5e_int8", "tpu_v5e_bf16"),
                         backend="engine", capacity=1, max_window=4,
                         max_wait_s=0.0, max_slots=4, prompt_len=16,
-                        max_new=8, plan="mpai", plan_split=3)],
+                        max_new=8, plan="mpai", plan_split=3,
+                        prefill_backend="engine", decode_shards=2)],
         workload="transformer", arch="qwen3-14b", seq_len=16)
     client = spec.build(model=(cfg, params))
-    engine = client.engines["board"]
-    plan = engine.plan
-    print(f"serving {engine.cfg.name}: segments="
-          f"{[(s.name, s.policy.precision.value, s.policy.mode) for s in plan.segments]}")
+    server = client.engines["board"]
+    plan = server.decode.plan
+    print(f"serving {server.decode.cfg.name}: "
+          f"1 prefill stage -> {server.decode_shards} decode shards, "
+          f"segments={[(s.name, s.policy.precision.value, s.policy.mode) for s in plan.segments]}")
 
     rng = np.random.default_rng(0)
     handles = []
     for i in range(10):
-        prompt = rng.integers(0, engine.cfg.vocab_size,
+        prompt = rng.integers(0, cfg.vocab_size,
                               rng.integers(3, 16)).astype(np.int32)
         handles.append(client.submit(prompt, slo="offline", max_new=8))
 
@@ -45,10 +51,13 @@ def main():
         r = h.result()
         print(f"  req {r.rid:2d}: prompt -> {r.tokens.tolist()}")
     pool = client.telemetry["pools"]["board"]
-    print(f"slot-continuous serving: {pool['tokens_generated']} tokens, "
+    pre = client.telemetry["pools"]["board.prefill"]
+    print(f"disaggregated serving: {pool['tokens_generated']} tokens, "
           f"{pool['decode_tokens_per_s']:.0f} decode tok/s, occupancy "
-          f"p50 {pool['slot_occupancy']['p50']} — no request waits for a "
-          f"window to drain.")
+          f"p50 {pool['slot_occupancy']['p50']}")
+    print(f"  seam: {pre['prefill_tokens']} tokens prefilled, handoff "
+          f"imports by shard {pool['imports_by_shard']}, prefix hit "
+          f"rate {pool['prefix_hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

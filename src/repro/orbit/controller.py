@@ -62,6 +62,11 @@ class FleetController:
         self.storm_pressure = 0.0
         self._seen_events = self._hardening_events()
         self._seen_j = self._fleet_energy_j()
+        # admission-time energy prepay: rid -> estimated joules drained
+        # at submit, refunded when the request settles (the real metered
+        # spend drains through the telemetry delta path as usual, so
+        # prepay + reconcile nets to the actual draw)
+        self._prepaid: Dict[int, float] = {}
         self.initial_level_j = bucket.level_j
         bucket.rebase(client.now)              # no phantom pre-attach harvest
         client.attach_controller(self)
@@ -112,6 +117,28 @@ class FleetController:
             return "reject"                    # last resort: battery dry
         return "dispatch"
 
+    def prepay(self, req, tokens: Optional[int]) -> None:
+        """Charge a freshly dispatched request's *expected* plan energy
+        against the bucket so the controller sees load the moment it is
+        admitted, not ``pool_latency_s`` later when its tokens decode.
+        The estimate is the optimistic energy floor (the frontier's
+        cheapest plan per token — the same floor ``_release`` meters
+        against) times the declared token budget, capped at the current
+        level so an estimate never manufactures shortfall the fleet
+        would not really incur.  ``step()`` refunds the full prepay when
+        the request settles; the real spend drains via the telemetry
+        ``energy_j`` delta, so the bucket nets to the metered draw."""
+        if not tokens or tokens <= 0:
+            return
+        floor = min((p.energy_j for p in self.client.router.frontier),
+                    default=0.0)
+        est = min(floor * tokens, self.bucket.level_j)
+        if est <= 0.0:
+            return
+        self.bucket.drain(est)
+        self._prepaid[req.rid] = est
+        self._set_mode(self.client.now)
+
     def defer(self, req, now: Optional[float] = None) -> None:
         req.deferred = True
         self.deferred.append(req)
@@ -125,6 +152,14 @@ class FleetController:
     # ------------------------------------------------------------------
     def step(self, now: float) -> None:
         self.bucket.advance(now)
+        if self._prepaid:
+            # reconcile settled requests: hand the admission-time
+            # estimate back (the real spend has drained — or is about
+            # to — through the telemetry delta below)
+            handles = self.client._handles
+            for rid in [r for r in self._prepaid
+                        if (h := handles.get(r)) is None or h.done]:
+                self.bucket.refund(self._prepaid.pop(rid))
         spent = self._fleet_energy_j()
         if spent > self._seen_j:               # drain against real work
             self.bucket.drain(spent - self._seen_j)
@@ -210,6 +245,9 @@ class FleetController:
             "mode": self.mode,
             "deferred_waiting": self.deferred_count,
             "storm_pressure": round(self.storm_pressure, 4),
+            # expected-energy prepays still outstanding (admitted work
+            # whose tokens have not finished decoding)
+            "prepaid_j": round(sum(self._prepaid.values()), 6),
             "alerts": self.client.router.telemetry.alerts.snapshot(),
             "bucket": self.bucket.summary(),
             # per-pool spend the bucket drained against — disaggregated

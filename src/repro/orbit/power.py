@@ -157,6 +157,19 @@ class EnergyBucket:
         self.shortfall_j += joules - take
         return take
 
+    def refund(self, joules: float) -> float:
+        """Return an earlier (estimated) drain to the bucket; returns the
+        joules actually restored.  The level clips at capacity — a refund
+        can never mint energy the battery cannot hold — and ``spent_j``
+        is credited back so admission prepay + completion reconcile nets
+        to the real metered spend."""
+        if joules <= 0:
+            return 0.0
+        take = min(joules, self.capacity_j - self.level_j)
+        self.level_j += take
+        self.spent_j -= take
+        return take
+
     def summary(self) -> dict:
         return {"capacity_j": round(self.capacity_j, 6),
                 "level_j": round(self.level_j, 6),

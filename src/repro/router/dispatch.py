@@ -196,10 +196,13 @@ class Router:
     def _estimate_completion(self, plan: ScheduledPlan,
                              pool: AcceleratorPool) -> float:
         """Rough end-to-end estimate: the pool's backlog forms
-        ceil(load+1 / window) batches draining over ``capacity`` slots,
-        each taking about one nominal plan latency."""
+        ceil(load+1 / window) batches draining over ``capacity`` slots
+        (times the decode fan-out width for sharded pools — N importers
+        absorb N batches per wave), each taking about one nominal plan
+        latency."""
         batches = math.ceil((pool.load + 1) / pool.max_window)
-        waves = math.ceil(batches / pool.capacity)
+        waves = math.ceil(batches / (pool.capacity
+                                     * getattr(pool, "shards", 1)))
         return waves * plan.latency_s
 
     def _best_pool(self, plan: ScheduledPlan

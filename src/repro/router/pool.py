@@ -92,7 +92,8 @@ class AcceleratorPool:
     def __init__(self, name: str, profiles: Iterable[str], executor,
                  capacity: int = 1, max_window: int = 4,
                  max_wait_s: float = 0.02, urgent_priority: int = 2,
-                 counters: Optional[PoolCounters] = None):
+                 counters: Optional[PoolCounters] = None,
+                 shards: int = 1):
         self.name = name
         self.profiles: Tuple[str, ...] = tuple(profiles)
         self.executor = executor
@@ -100,6 +101,10 @@ class AcceleratorPool:
         self.max_window = max_window
         self.max_wait_s = max_wait_s
         self.urgent_priority = urgent_priority
+        # decode fan-out width behind this pool's seam (CoProcServer
+        # shards): the router's completion estimate scales concurrent
+        # batch waves by it, so a sharded pool absorbs load N-wide
+        self.shards = shards
         self.state = PoolState.HEALTHY
         self.draining = False            # graceful retirement: no new work
         self.counters = counters if counters is not None else PoolCounters()

@@ -103,6 +103,11 @@ class PoolCounters:
     blocks_quarantined: int = 0           # KV blocks pulled from service
     watchdog_trips: int = 0               # stalled slots evicted
     handoffs_replayed: int = 0            # lost/corrupt handoffs re-run
+    prefix_hits: int = 0                  # prompt blocks served by the
+                                          # content-hash prefix index
+    prefix_lookups: int = 0               # prompt blocks offered to it
+    # sharded decode pools: handoff imports per consumer shard
+    imports_by_shard: Dict[str, int] = field(default_factory=dict)
     queue_depth: Histogram = field(default_factory=Histogram)
     batch_size: Histogram = field(default_factory=Histogram)
     slot_occupancy: Histogram = field(default_factory=Histogram)
@@ -119,6 +124,13 @@ class PoolCounters:
         inside decode steps — the number ``benchmarks/decode_bench.py``
         reports, free of prefill-window idle time and prompt tokens."""
         return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of offered prompt blocks served from the shared
+        prefix index (0.0 when the pool never offered one)."""
+        return (self.prefix_hits / self.prefix_lookups
+                if self.prefix_lookups else 0.0)
 
     def summary(self) -> Dict:
         return {"dispatched": self.dispatched, "completed": self.completed,
@@ -138,6 +150,11 @@ class PoolCounters:
                 "blocks_quarantined": self.blocks_quarantined,
                 "watchdog_trips": self.watchdog_trips,
                 "handoffs_replayed": self.handoffs_replayed,
+                "prefix_hits": self.prefix_hits,
+                "prefix_lookups": self.prefix_lookups,
+                "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+                "imports_by_shard": dict(sorted(
+                    self.imports_by_shard.items())),
                 "queue_depth": self.queue_depth.summary(),
                 "batch_size": self.batch_size.summary(),
                 "slot_occupancy": self.slot_occupancy.summary()}
@@ -249,6 +266,13 @@ class Telemetry:
                                       for p in self.pools.values()),
             "handoffs_replayed": sum(p.handoffs_replayed
                                      for p in self.pools.values()),
+            # prefix-sharing efficiency across the fleet: hit rate of
+            # the content-hash block index (pooled, not averaged)
+            "prefix_hits": sum(p.prefix_hits for p in self.pools.values()),
+            "prefix_hit_rate": round(
+                (sum(p.prefix_hits for p in self.pools.values())
+                 / max(1, sum(p.prefix_lookups
+                              for p in self.pools.values()))), 4),
             "energy_deferred": self.energy_deferred,
             "energy_rejected": self.energy_rejected,
             "pools_added": self.pools_added,

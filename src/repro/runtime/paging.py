@@ -340,6 +340,24 @@ def pool_checksums(state: PagedKVState) -> jnp.ndarray:
     return total
 
 
+def wire_checksum(payload: bytes) -> int:
+    """Integrity checksum for a serialized handoff payload — the host
+    sibling of :func:`pool_checksums`.
+
+    Same construction, different memory: the buffer is zero-padded to a
+    word boundary, viewed as native-width unsigned integers, and summed
+    mod 2**32, so any single-event upset on the interconnect (one
+    flipped bit anywhere in the payload) changes the sum.  Pure numpy —
+    the wire format must be checkable on a host that has no accelerator
+    at all (the receiving pod verifies before it ever touches a device).
+    """
+    pad = (-len(payload)) % 4
+    if pad:
+        payload = payload + b"\x00" * pad
+    words = np.frombuffer(payload, dtype=np.uint32)
+    return int(np.sum(words, dtype=np.uint32))
+
+
 class BlockDigestStore:
     """Host-side registry of *sealed* block checksums.
 
@@ -413,6 +431,7 @@ class SharedBlockIndex:
         self._digest_of: Dict[int, bytes] = {}
         self._refs: Dict[int, int] = {}
         self.hits = 0                     # blocks reused instead of refilled
+        self.lookups = 0                  # share attempts (hits + misses)
 
     @staticmethod
     def chain(parent: bytes, tokens: np.ndarray) -> bytes:
@@ -425,6 +444,7 @@ class SharedBlockIndex:
 
     def acquire(self, digest: bytes) -> Optional[int]:
         """Take a reference on the block holding ``digest``'s KV."""
+        self.lookups += 1
         blk = self._by_digest.get(digest)
         if blk is not None:
             self._refs[blk] += 1

@@ -52,10 +52,11 @@ Two granularities of progress:
 """
 from __future__ import annotations
 
+import struct
 import time
 import warnings
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -496,6 +497,7 @@ class ContinuousBatchingEngine:
         self.prefill_tokens = 0               # prompt tokens prefilled
         self.deferrals = 0                    # OutOfBlocks admission deferrals
         self.shared.hits = 0                  # prefix blocks served by index
+        self.shared.lookups = 0               # share attempts (hits + misses)
         self.bitflips_detected = 0            # checksum mismatches caught
         self.blocks_quarantined = 0           # blocks pulled from service
         self.watchdog_trips = 0               # stalled slots evicted
@@ -539,6 +541,16 @@ class ContinuousBatchingEngine:
     def occupancy(self) -> float:
         """Fraction of decode slots doing useful work right now."""
         return sum(s is not None for s in self.slots) / self.max_slots
+
+    @property
+    def prefix_hits(self) -> int:
+        """Prompt blocks served from the content-hash index."""
+        return self.shared.hits
+
+    @property
+    def prefix_lookups(self) -> int:
+        """Prompt blocks offered to the index (hits + misses)."""
+        return self.shared.lookups
 
     def step(self) -> List[Request]:
         """Admit into free slots, then run one decode step; returns the
@@ -593,6 +605,7 @@ class ContinuousBatchingEngine:
                 "admit_s": self.admit_s,
                 "prefill_tokens": self.prefill_tokens,
                 "shared_block_hits": self.shared.hits,
+                "shared_block_lookups": self.shared.lookups,
                 "deferrals": self.deferrals,
                 "bitflips_detected": self.bitflips_detected,
                 "blocks_quarantined": self.blocks_quarantined,
@@ -1405,6 +1418,49 @@ class HandoffCorruptError(RuntimeError):
     token stays valid)."""
 
 
+class HandoffWireError(ValueError):
+    """A PrefillHandoff wire buffer is structurally unusable — wrong
+    magic, unknown schema version, or a truncated/overlong frame.
+    Distinct from :class:`HandoffCorruptError` (checksum mismatch on an
+    intact frame): corruption is re-requested by the seam; a wire error
+    means the two ends do not speak the same format and retrying the
+    same bytes cannot help."""
+
+
+#: PrefillHandoff wire schema version.  Bump on ANY layout change to
+#: ``to_bytes`` — field order, widths, the array encoding, or the
+#: checksum construction — and keep ``from_bytes`` rejecting everything
+#: it does not speak: a decode pod on an older image must fail loudly,
+#: never misparse.  Versioning rules: ``repro/serving/WIRE_FORMAT.md``.
+WIRE_VERSION = 1
+_WIRE_MAGIC = b"MPAI"
+_WIRE_HEADER = "<HQI"                  # version, payload length, checksum
+
+
+def _wire_dtype(name: str) -> np.dtype:
+    """Resolve a serialized dtype name, including the ml_dtypes extras
+    (bfloat16, float8_*) that numpy cannot name on its own."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except AttributeError:
+            raise HandoffWireError(
+                f"handoff wire carries unknown dtype {name!r}") from None
+
+
+def _pack_array(a: np.ndarray) -> bytes:
+    name = a.dtype.name.encode()
+    raw = np.ascontiguousarray(a).tobytes()
+    return b"".join([
+        struct.pack("<i", len(name)), name,
+        struct.pack("<i", a.ndim),
+        struct.pack(f"<{a.ndim}q", *a.shape),
+        struct.pack("<q", len(raw)), raw])
+
+
 @dataclass
 class PrefillHandoff:
     """One prefilled prompt crossing the co-processing seam.
@@ -1417,6 +1473,13 @@ class PrefillHandoff:
     KV per sublayer — ``kv[key] = (k, v)`` with shape
     ``[n_super, n_blocks, P, KVp, hd]`` — in the shared block geometry
     both mirrored pools were built with.
+
+    The handoff is also a *wire format*: ``to_bytes``/``from_bytes``
+    serialize it losslessly (bit-exact KV round-trip) under a schema
+    version and a whole-frame integrity checksum, so the seam behaves
+    identically whether the importer shares the exporter's address
+    space or sits across a process/host boundary.  Every
+    :class:`CoProcServer` handoff crosses the seam in wire form.
     """
     rid: int
     first_token: int
@@ -1429,53 +1492,195 @@ class PrefillHandoff:
     # never becomes served tokens
     digests: Optional[tuple] = None
 
+    # ------------------------------------------------------------------
+    # wire format (versioned, integrity-checked)
+    # ------------------------------------------------------------------
+    def to_bytes(self) -> bytes:
+        """Serialize to the versioned wire frame::
+
+            MAGIC(4) | version(u16) | payload_len(u64) | checksum(u32)
+            payload: rid(i64) first_token(i32) length(i32)
+                     block_size(i32) digests(i32 count, -1=None, u32*)
+                     kv(i32 count; per sorted key: name, K arr, V arr)
+
+        Arrays carry dtype name + shape + raw bytes, so the round-trip
+        is bit-exact for every pool dtype (bf16/fp16/fp32 included).
+        The checksum is :func:`repro.runtime.paging.wire_checksum` over
+        the payload — the PR-7 block-checksum construction applied to
+        the frame — so an interconnect upset is caught before the
+        importer pastes a single block.
+        """
+        parts = [struct.pack("<qiii", self.rid, self.first_token,
+                             self.length, self.block_size)]
+        if self.digests is None:
+            parts.append(struct.pack("<i", -1))
+        else:
+            digs = [int(d) & 0xFFFFFFFF for d in self.digests]
+            parts.append(struct.pack(f"<i{len(digs)}I", len(digs), *digs))
+        parts.append(struct.pack("<i", len(self.kv)))
+        for key in sorted(self.kv):
+            k, v = self.kv[key]
+            kb = key.encode()
+            parts.append(struct.pack("<i", len(kb)) + kb)
+            parts.append(_pack_array(np.asarray(k)))
+            parts.append(_pack_array(np.asarray(v)))
+        payload = b"".join(parts)
+        head = _WIRE_MAGIC + struct.pack(
+            _WIRE_HEADER, WIRE_VERSION, len(payload),
+            paging.wire_checksum(payload))
+        return head + payload
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "PrefillHandoff":
+        """Parse a wire frame back into a handoff.
+
+        Raises :class:`HandoffWireError` on structural problems (bad
+        magic, version mismatch, truncation — retrying the same bytes
+        cannot help) and :class:`HandoffCorruptError` on a checksum
+        mismatch over an intact frame (an in-transit upset — the seam
+        re-requests the handoff exactly-once).
+        """
+        buf = bytes(buf)
+        hdr = 4 + struct.calcsize(_WIRE_HEADER)
+        if len(buf) < hdr:
+            raise HandoffWireError(
+                f"handoff frame truncated: {len(buf)} bytes < {hdr}-byte "
+                f"header")
+        if buf[:4] != _WIRE_MAGIC:
+            raise HandoffWireError(
+                f"not a PrefillHandoff frame (magic {buf[:4]!r})")
+        version, plen, want = struct.unpack_from(_WIRE_HEADER, buf, 4)
+        if version != WIRE_VERSION:
+            raise HandoffWireError(
+                f"handoff wire version {version} != {WIRE_VERSION}; both "
+                f"seam ends must run the same schema")
+        payload = buf[hdr:]
+        if len(payload) != plen:
+            raise HandoffWireError(
+                f"handoff frame truncated: payload {len(payload)} bytes, "
+                f"header declares {plen}")
+        if paging.wire_checksum(payload) != want:
+            raise HandoffCorruptError(
+                "handoff frame failed its wire checksum (payload upset "
+                "in transit)")
+        off = 0
+
+        def take(fmt):
+            nonlocal off
+            size = struct.calcsize(fmt)
+            if off + size > len(payload):
+                raise HandoffWireError(
+                    "handoff payload underruns its declared structure")
+            vals = struct.unpack_from(fmt, payload, off)
+            off += size
+            return vals
+
+        def take_array():
+            nonlocal off
+            (nlen,) = take("<i")
+            dtype = _wire_dtype(payload[off:off + nlen].decode())
+            off += nlen
+            (ndim,) = take("<i")
+            shape = take(f"<{ndim}q")
+            (rlen,) = take("<q")
+            if off + rlen > len(payload):
+                raise HandoffWireError(
+                    "handoff payload underruns its declared structure")
+            a = np.frombuffer(payload, dtype, offset=off,
+                              count=int(np.prod(shape, dtype=np.int64))
+                              ).reshape(shape)
+            off += rlen
+            return jnp.asarray(a)
+
+        rid, first_token, length, block_size = take("<qiii")
+        (ndig,) = take("<i")
+        digests = None if ndig < 0 else tuple(take(f"<{ndig}I"))
+        (nkv,) = take("<i")
+        kv = {}
+        for _ in range(nkv):
+            (klen,) = take("<i")
+            key = payload[off:off + klen].decode()
+            off += klen
+            kv[key] = (take_array(), take_array())
+        return cls(rid, first_token, length, block_size, kv, digests)
+
 
 class CoProcServer:
-    """Disaggregated serving: a prefill-class engine feeding a
-    decode-class engine over mirrored paged pools.
+    """Disaggregated serving: a prefill-class engine fanning out to N
+    decode-shard engines over mirrored paged pools.
 
     The MPAI co-processing split as a server: stage 1 (the DPU
     analogue — typically a cheap/int8 precision plan) runs chunked
     paged prefill and samples the first token; stage 2 (the VPU
     analogue) imports the filled blocks into its own pool and decodes.
-    Each stage is a full :class:`ContinuousBatchingEngine` with its own
-    allocator, so backpressure is per-stage: a prefill-pool shortage
-    defers the handoff without touching decode blocks, and vice versa.
-    A prefilled-but-unplaced request parks at the seam (its prefill
-    compute is never repeated) until a decode slot + blocks free up.
+    Stage 2 may be *sharded*: N identical decode engines, each with its
+    own allocator and slots, fed from the single prefill stage.  Every
+    handoff crosses the seam in :meth:`PrefillHandoff.to_bytes` wire
+    form (versioned + checksummed), so the fan-out behaves identically
+    whether the shards share the exporter's process or not.  Importer
+    selection is least-loaded per request; seam backpressure is tracked
+    per shard (a full shard defers to the next, and only when *every*
+    live shard defers does the request park at the seam).  A
+    lost/corrupt frame is re-requested exactly-once: prefill replays
+    muted (deterministic, bit-identical), so delivered tokens stay
+    delivered once.
 
     Exposes the same ``submit`` / ``step`` / ``flush`` / ``done`` /
     ``stats`` API as the engines, so
     :class:`~repro.serving.executor.EngineExecutor` drives it
     unchanged; per-stage counters (``prefill_tokens`` / ``admit_s`` on
-    the prefill engine, decode counters on the decode engine) let the
-    executor charge each stage to its own pool telemetry.
+    the prefill engine, decode counters summed over shards) let the
+    executor charge each stage to its own pool telemetry, with
+    ``imports_by_shard`` splitting the seam traffic per consumer.
     """
 
     def __init__(self, prefill_engine: ContinuousBatchingEngine,
-                 decode_engine: ContinuousBatchingEngine):
-        assert prefill_engine.block_size == decode_engine.block_size, \
-            "mirrored pools must share block geometry"
+                 decode_engines: Union[ContinuousBatchingEngine,
+                                       Sequence[ContinuousBatchingEngine]]):
+        if isinstance(decode_engines, ContinuousBatchingEngine):
+            decode_engines = [decode_engines]
+        self.decodes: List[ContinuousBatchingEngine] = list(decode_engines)
+        assert self.decodes, "need at least one decode shard"
+        for eng in self.decodes:
+            assert prefill_engine.block_size == eng.block_size, \
+                "mirrored pools must share block geometry"
         self.prefill = prefill_engine
-        self.decode = decode_engine
-        self.max_len = decode_engine.max_len
-        self.prompt_len = decode_engine.prompt_len
+        self.max_len = min(e.max_len for e in self.decodes)
+        self.prompt_len = self.decodes[0].prompt_len
         self.queue: List[Request] = []
         self._parked: Optional[tuple] = None   # (req, handoff) at the seam
         self.handoff_count = 0
         self._seam_deferrals = 0
         self._on_token: Optional[Callable[[int, int], None]] = None
-        # radiation hardening at the seam: the decode engine's evictions
-        # come back through a *fresh handoff* (its imported KV must carry
-        # the prefill engine's bits — replaying prefill under the decode
-        # plan would not), so the seam owns the decode restore queue
-        self.decode.external_restore = True
-        self._restore_parked: Optional[tuple] = None  # (req, gen, handoff)
+        self._on_stage = None
+        # radiation hardening at the seam: each shard's evictions come
+        # back through a *fresh handoff* (its imported KV must carry the
+        # prefill engine's bits — replaying prefill under the decode
+        # plan would not), so the seam owns every shard's restore queue
+        for eng in self.decodes:
+            eng.external_restore = True
+        self._restore_parked: Optional[tuple] = None  # (shard, req, gen, ho)
         self._lose_handoffs = 0        # armed handoff_loss faults
+        self._corrupt_wire = 0         # armed in-transit frame upsets
         self.handoffs_lost = 0
         self.handoffs_replayed = 0
+        self._draining: set = set()    # shard indices leaving the rotation
+        self.imports_by_shard: Dict[str, int] = {
+            f"shard{i}": 0 for i in range(len(self.decodes))}
+        self.seam_deferrals_by_shard: Dict[str, int] = {
+            f"shard{i}": 0 for i in range(len(self.decodes))}
 
-    # --- token relay: both stages emit through one hook ---------------
+    # --- back-compat single-shard view --------------------------------
+    @property
+    def decode(self) -> ContinuousBatchingEngine:
+        """The first decode shard (the whole stage when unsharded)."""
+        return self.decodes[0]
+
+    @property
+    def decode_shards(self) -> int:
+        return len(self.decodes)
+
+    # --- token relay: all stages emit through one hook ----------------
     @property
     def on_token(self):
         return self._on_token
@@ -1484,95 +1689,123 @@ class CoProcServer:
     def on_token(self, fn) -> None:
         self._on_token = fn
         self.prefill.on_token = fn         # first token, at the handoff
-        self.decode.on_token = fn          # everything after
+        for eng in self.decodes:
+            eng.on_token = fn              # everything after
 
-    # --- stage relay: each engine's stage names are disjoint (prefill:
-    # admit/prefill_chunk/handoff; decode: import/decode_step), so one
-    # shared hook keeps the seam observable without tagging ---------------
+    # --- stage relay: engine stage names are disjoint (prefill:
+    # admit/prefill_chunk/handoff; decode: import/decode_step), and each
+    # decode shard tags its spans with its index so the fan-out is
+    # visible per consumer -----------------------------------------------
     @property
     def on_stage(self):
-        return self.prefill.on_stage
+        return self._on_stage
 
     @on_stage.setter
     def on_stage(self, fn) -> None:
+        self._on_stage = fn
         self.prefill.on_stage = fn
-        self.decode.on_stage = fn
+        for i, eng in enumerate(self.decodes):
+            if fn is None:
+                eng.on_stage = None
+            else:
+                def relay(stage, t0, t1, rids, attrs, _i=i, _fn=fn):
+                    _fn(stage, t0, t1, rids, {**attrs, "shard": _i})
+                eng.on_stage = relay
 
     # --- mirrored engine API ------------------------------------------
     @property
     def done(self) -> Dict[int, Request]:
-        return self.decode.done
+        if len(self.decodes) == 1:
+            return self.decodes[0].done
+        merged: Dict[int, Request] = {}
+        for eng in self.decodes:
+            merged.update(eng.done)
+        return merged
 
     @property
     def pending(self) -> int:
         return (len(self.queue) + (self._parked is not None)
                 + (self._restore_parked is not None)
-                + self.decode.pending)
+                + sum(e.pending for e in self.decodes))
 
     # --- radiation hardening: fault API + counters --------------------
     @property
     def harden(self) -> bool:
-        return self.decode.harden
+        return all(e.harden for e in self.decodes)
 
     def inject_handoff_loss(self) -> None:
         """Arm one seam SEU: the next handoff payload vanishes between
         gather and import and must be re-requested."""
         self._lose_handoffs += 1
 
+    def inject_handoff_corruption(self) -> None:
+        """Arm one in-transit SEU: a byte of the next wire frame flips
+        between export and import.  The frame checksum catches it and
+        the seam re-requests the handoff exactly-once."""
+        self._corrupt_wire += 1
+
     def arm_bitflip(self, seed: int = 0) -> None:
-        # live KV lives in the decode pool (prefill rows free at gather)
-        self.decode.arm_bitflip(seed)
+        # live KV lives in the decode pools (prefill rows free at gather)
+        self.decodes[0].arm_bitflip(seed)
 
     def stall_slot(self, slot: int) -> None:
-        self.decode.stall_slot(slot)
+        self.decodes[0].stall_slot(slot)
 
     def unstall_slot(self, slot: int) -> None:
-        self.decode.unstall_slot(slot)
+        self.decodes[0].unstall_slot(slot)
 
     def scrub(self, budget: Optional[int] = None) -> int:
-        return self.prefill.scrub(budget) + self.decode.scrub(budget)
+        n = self.prefill.scrub(budget)
+        for eng in self.decodes:
+            n += eng.scrub(budget)
+        return n
 
     @property
     def bitflips_detected(self) -> int:
         return (self.prefill.bitflips_detected
-                + self.decode.bitflips_detected)
+                + sum(e.bitflips_detected for e in self.decodes))
 
     @property
     def blocks_quarantined(self) -> int:
         return (self.prefill.blocks_quarantined
-                + self.decode.blocks_quarantined)
+                + sum(e.blocks_quarantined for e in self.decodes))
 
     @property
     def watchdog_trips(self) -> int:
-        return self.prefill.watchdog_trips + self.decode.watchdog_trips
+        return (self.prefill.watchdog_trips
+                + sum(e.watchdog_trips for e in self.decodes))
 
     @property
     def replays(self) -> int:
-        return self.prefill.replays + self.decode.replays
+        return self.prefill.replays + sum(e.replays for e in self.decodes)
 
     @property
     def scrubbed_blocks(self) -> int:
-        return self.prefill.scrubbed_blocks + self.decode.scrubbed_blocks
+        return (self.prefill.scrubbed_blocks
+                + sum(e.scrubbed_blocks for e in self.decodes))
 
     @property
     def occupancy(self) -> float:
-        return self.decode.occupancy
+        slots = sum(e.max_slots for e in self.decodes)
+        busy = sum(e.occupancy * e.max_slots for e in self.decodes)
+        return busy / slots
 
     @property
     def decode_steps(self) -> int:
-        return self.decode.decode_steps
+        return sum(e.decode_steps for e in self.decodes)
 
     @property
     def decode_tokens(self) -> int:
-        return self.decode.decode_tokens
+        return sum(e.decode_tokens for e in self.decodes)
 
     @property
     def decode_s(self) -> float:
-        return self.decode.decode_s
+        return sum(e.decode_s for e in self.decodes)
 
     @property
     def total_tokens(self) -> int:
-        return self.prefill.total_tokens + self.decode.total_tokens
+        return (self.prefill.total_tokens
+                + sum(e.total_tokens for e in self.decodes))
 
     @property
     def prefill_tokens(self) -> int:
@@ -1584,8 +1817,19 @@ class CoProcServer:
 
     @property
     def deferrals(self) -> int:
-        return (self.prefill.deferrals + self.decode.deferrals
+        return (self.prefill.deferrals
+                + sum(e.deferrals for e in self.decodes)
                 + self._seam_deferrals)
+
+    @property
+    def prefix_hits(self) -> int:
+        return (self.prefill.prefix_hits
+                + sum(e.prefix_hits for e in self.decodes))
+
+    @property
+    def prefix_lookups(self) -> int:
+        return (self.prefill.prefix_lookups
+                + sum(e.prefix_lookups for e in self.decodes))
 
     def padded_prompt_len(self, s: int) -> int:
         # the prefill-class engine's chunk grid decides the padded
@@ -1597,20 +1841,55 @@ class CoProcServer:
     def submit(self, req: Request) -> None:
         _require_prompt(req, "engine")
         padded = self.padded_prompt_len(int(req.prompt.shape[0]))
-        assert padded + req.max_new <= self.decode.table_width \
-            * self.decode.block_size, \
+        budget = min(e.table_width * e.block_size for e in self.decodes)
+        assert padded + req.max_new <= budget, \
             (req.rid, req.prompt.shape[0], req.max_new, self.max_len)
         self.queue.append(req)
 
-    def step(self) -> List[Request]:
-        """Move work across the handoff seam, then run one decode step.
+    # --- shard lifecycle ----------------------------------------------
+    def retire_shard(self, idx: int) -> None:
+        """Drain decode shard ``idx``: it leaves the import rotation
+        immediately but keeps stepping until its in-flight streams
+        finish — zero dropped streams, matching pool retirement
+        semantics one layer up."""
+        if not 0 <= idx < len(self.decodes):
+            raise IndexError(f"no decode shard {idx}")
+        live = [i for i in range(len(self.decodes))
+                if i not in self._draining]
+        if live == [idx]:
+            raise ValueError("cannot retire the last live decode shard")
+        self._draining.add(idx)
 
-        Per step: prefill queued requests (stage 1) and import them into
-        decode slots (stage 2) while blocks and slots allow; a stage
-        hitting backpressure parks the request without losing the other
-        stage's progress, and exactly-once token delivery holds across
-        the seam (the first token streams from the prefill stage, the
-        decode stage resumes at token index 1)."""
+    def _import_order(self) -> List[int]:
+        """Live shards, least-loaded first (ties broken by index — the
+        deterministic routing the bit-identity guarantee relies on)."""
+        live = [i for i in range(len(self.decodes))
+                if i not in self._draining]
+        return sorted(live, key=lambda i: (self.decodes[i].pending, i))
+
+    def _transport(self, handoff: PrefillHandoff) -> PrefillHandoff:
+        """Cross the seam: serialize to the wire frame and parse it
+        back, exactly what a process/host boundary would do.  An armed
+        in-transit upset flips one payload byte; the frame checksum
+        turns that into :class:`HandoffCorruptError` before any block
+        is pasted."""
+        wire = handoff.to_bytes()
+        if self._corrupt_wire > 0:
+            self._corrupt_wire -= 1
+            wire = wire[:-1] + bytes([wire[-1] ^ 0x40])
+        return PrefillHandoff.from_bytes(wire)
+
+    def step(self) -> List[Request]:
+        """Move work across the handoff seam, then run one decode step
+        on every shard.
+
+        Per step: prefill queued requests (stage 1) and import each
+        into the least-loaded live decode shard (stage 2) while blocks
+        and slots allow; a shard hitting backpressure defers to the
+        next, a fully-backed-up stage parks the request without losing
+        the other stage's progress, and exactly-once token delivery
+        holds across the seam (the first token streams from the prefill
+        stage, the importing shard resumes at token index 1)."""
         completed: List[Request] = []
         self._drain_restores()             # recovery before fresh work
         while True:
@@ -1634,38 +1913,65 @@ class CoProcServer:
                     self.prefill.mute_rids.add(req.rid)
                     self.queue.insert(0, req)
                     continue
+                try:
+                    ho = self._transport(ho)
+                except HandoffCorruptError:
+                    # frame upset caught by the wire checksum: same
+                    # exactly-once re-request contract as a loss
+                    self.handoffs_replayed += 1
+                    self.prefill.mute_rids.add(req.rid)
+                    self.queue.insert(0, req)
+                    continue
                 self._parked = (req, ho)
             req, ho = self._parked
-            try:
-                done = self.decode.import_prefill(req, ho)
-            except HandoffCorruptError:
-                # payload upset caught by the import verify: discard it
-                # and re-request, same exactly-once contract as a loss
+            placed = corrupt = False
+            done = None
+            for si in self._import_order():
+                try:
+                    done = self.decodes[si].import_prefill(req, ho)
+                except OutOfBlocksError:
+                    self.seam_deferrals_by_shard[f"shard{si}"] += 1
+                    continue               # next-least-loaded shard
+                except HandoffCorruptError:
+                    # the payload itself is bad — no other shard can
+                    # import it; discard and re-request
+                    corrupt = True
+                    break
+                placed = True
+                break
+            if corrupt:
                 self._parked = None
                 self.handoffs_replayed += 1
                 self.prefill.mute_rids.add(req.rid)
                 self.queue.insert(0, req)
                 continue
-            except OutOfBlocksError:
-                self._seam_deferrals += 1
+            if not placed:
+                self._seam_deferrals += 1  # every live shard deferred
                 break
             self._parked = None
             self.handoff_count += 1
+            self.imports_by_shard[f"shard{si}"] += 1
             if done is not None:
                 completed.append(done)
-        completed += self.decode.step()
+        for eng in self.decodes:           # draining shards finish too
+            completed += eng.step()
         return completed
 
     def _drain_restores(self) -> None:
         """Replay decode-side evictions (watchdog trips, quarantined
         blocks) across the seam: re-run the prefill handoff (muted — the
-        delivered prefix stays delivered exactly once), import it into a
-        healthy decode slot, and replay the recorded tokens.  Seam
-        backpressure holds: a restore that cannot place yet parks with
-        its handoff and retries next step without recomputing prefill."""
-        while self.decode._restore_queue or self._restore_parked is not None:
+        delivered prefix stays delivered exactly once), import it back
+        into a healthy slot *on the same shard*, and replay the recorded
+        tokens.  Seam backpressure holds: a restore that cannot place
+        yet parks with its handoff and retries next step without
+        recomputing prefill."""
+        while (self._restore_parked is not None
+               or any(e._restore_queue for e in self.decodes)):
             if self._restore_parked is None:
-                req, gen = self.decode._restore_queue[0]
+                si = next(i for i, e in enumerate(self.decodes)
+                          if e._restore_queue)
+                eng = self.decodes[si]
+                req, gen = eng._restore_queue[0]
                 self.prefill.mute_rids.add(req.rid)
                 try:
                     ho = self.prefill.prefill_handoff(req)
@@ -1673,21 +1979,28 @@ class CoProcServer:
                     self.prefill.mute_rids.discard(req.rid)
                     self._seam_deferrals += 1
                     return
-                self.decode._restore_queue.pop(0)
-                self._restore_parked = (req, gen, ho)
-            req, gen, ho = self._restore_parked
+                eng._restore_queue.pop(0)
+                try:
+                    ho = self._transport(ho)
+                except HandoffCorruptError:
+                    self.handoffs_replayed += 1
+                    eng._restore_queue.insert(0, (req, gen))
+                    continue
+                self._restore_parked = (si, req, gen, ho)
+            si, req, gen, ho = self._restore_parked
+            eng = self.decodes[si]
             try:
-                self.decode.restore_import(req, gen, ho)
+                eng.restore_import(req, gen, ho)
             except HandoffCorruptError:
                 self._restore_parked = None
                 self.handoffs_replayed += 1
-                self.decode._restore_queue.insert(0, (req, gen))
+                eng._restore_queue.insert(0, (req, gen))
                 continue
             except OutOfBlocksError:
                 self._seam_deferrals += 1
                 return
             self._restore_parked = None
-            self.decode.replays += 1
+            eng.replays += 1
 
     def flush(self) -> List[Request]:
         """Blocking form: run until at least one request completes."""
@@ -1699,26 +2012,44 @@ class CoProcServer:
                 return done
 
     def stats(self) -> Dict[str, float]:
-        d = self.decode.stats()
+        shard_stats = [e.stats() for e in self.decodes]
         p = self.prefill.stats()
+        d = dict(shard_stats[0])
+        for s in shard_stats[1:]:
+            for key, val in s.items():
+                d[key] += val
+        # mean occupancy does not sum — recompute weighted by steps
+        steps = sum(s["decode_steps"] for s in shard_stats)
+        d["mean_occupancy"] = (
+            sum(s["mean_occupancy"] * s["decode_steps"]
+                for s in shard_stats) / steps if steps
+            else shard_stats[0]["mean_occupancy"])
         d["total_tokens"] = self.total_tokens
         d["prefill_tokens"] = p["prefill_tokens"]
         d["admit_s"] = p["admit_s"]            # prefill stage wall time
-        d["shared_block_hits"] = (p["shared_block_hits"]
-                                  + d["shared_block_hits"])
+        d["shared_block_hits"] += p["shared_block_hits"]
+        d["shared_block_lookups"] += p["shared_block_lookups"]
         d["deferrals"] = self.deferrals
         d["handoffs"] = self.handoff_count
         for key in ("bitflips_detected", "blocks_quarantined",
                     "watchdog_trips", "replays", "scrubbed_blocks"):
-            d[key] = getattr(self, key)    # prefill + decode aggregate
+            d[key] = getattr(self, key)    # prefill + shard aggregate
         d["handoffs_lost"] = self.handoffs_lost
         d["handoffs_replayed"] = self.handoffs_replayed
+        d["decode_shards"] = len(self.decodes)
+        d["imports_by_shard"] = dict(self.imports_by_shard)
+        d["seam_deferrals_by_shard"] = dict(self.seam_deferrals_by_shard)
         return d
 
     def reset_stats(self) -> None:
         self.prefill.reset_stats()
-        self.decode.reset_stats()
+        for eng in self.decodes:
+            eng.reset_stats()
         self._seam_deferrals = 0
         self.handoff_count = 0
         self.handoffs_lost = 0
         self.handoffs_replayed = 0
+        self.imports_by_shard = {
+            f"shard{i}": 0 for i in range(len(self.decodes))}
+        self.seam_deferrals_by_shard = {
+            f"shard{i}": 0 for i in range(len(self.decodes))}

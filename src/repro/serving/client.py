@@ -337,6 +337,13 @@ class ServingClient:
                    else self.controller.admission(rreq))
         if verdict == "dispatch":
             admitted = self.router.submit(rreq, self.now)
+            if (admitted and self.controller is not None
+                    and work is not None):
+                # charge the expected plan energy at submit time — the
+                # bucket sees admitted load before its tokens decode;
+                # the controller refunds the estimate when the request
+                # settles and the real metered spend has drained
+                self.controller.prepay(rreq, work.max_new)
         elif verdict == "defer":
             self.controller.defer(rreq, self.now)
             admitted = True                  # accepted; dispatches later

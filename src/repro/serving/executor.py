@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -107,6 +107,14 @@ class EngineExecutor:
                 getattr(s, "watchdog_trips", 0),
                 getattr(s, "handoffs_replayed", 0))
 
+    def _sstats(self) -> Tuple[int, int, Dict[str, int]]:
+        """Seam/sharing counters: prefix-index traffic and per-shard
+        handoff imports (empty on unsharded/paged-less servers)."""
+        s = self.server
+        return (getattr(s, "prefix_hits", 0),
+                getattr(s, "prefix_lookups", 0),
+                dict(getattr(s, "imports_by_shard", {}) or {}))
+
     def _install_stage_relay(self, plan: ScheduledPlan, now: float,
                              wall0: float) -> bool:
         """While this batch runs, forward the engine's ``on_stage``
@@ -155,6 +163,7 @@ class EngineExecutor:
         traced = self._install_stage_relay(plan, now, t0)
         tok0, dec0, def0, pre0, adm0 = self._stats()
         h0 = self._hstats()
+        px0, pl0, sh0 = self._sstats()
         want = {}
         for r in requests:
             work = (r.payload if isinstance(r.payload, LMWork)
@@ -211,6 +220,15 @@ class EngineExecutor:
             self.counters.blocks_quarantined += h1[1] - h0[1]
             self.counters.watchdog_trips += h1[2] - h0[2]
             self.counters.handoffs_replayed += h1[3] - h0[3]
+            px1, pl1, sh1 = self._sstats()
+            self.counters.prefix_hits += px1 - px0
+            self.counters.prefix_lookups += pl1 - pl0
+            for shard, n in sh1.items():
+                delta = n - sh0.get(shard, 0)
+                if delta:
+                    self.counters.imports_by_shard[shard] = (
+                        self.counters.imports_by_shard.get(shard, 0)
+                        + delta)
             if self.prefill_counters is None:
                 self.counters.prefill_tokens += pre1 - pre0
         if self.prefill_counters is not None:

@@ -89,6 +89,16 @@ class PoolSpec:
     prefill_backend: Optional[str] = None     # None | "engine"
     prefill_plan: Optional[str] = None        # None/"bf16" | "mpai"
     prefill_energy_scale: float = 0.5         # DPU-vs-VPU per-token energy
+    # pod-scale fan-out: N decode-shard engines behind one prefill stage
+    # (requires prefill_backend="engine"); every handoff crosses the
+    # seam in PrefillHandoff wire form and the least-loaded shard
+    # imports it.  1 == the classic unsharded co-processing split.
+    decode_shards: int = 1
+    # stage-axis execution: span this pool's decode across a device
+    # group via core.pipeline.pipeline_apply (engine backend only;
+    # mutually exclusive with disaggregation — a staged pool is one
+    # consumer).  None -> single-device engine.
+    pipeline_stages: Optional[int] = None
     # radiation hardening (engine backends): per-block KV integrity
     # digests + fused decode-path verification + no-progress watchdog.
     # Off by default — hardened output with no faults is bit-identical
@@ -155,6 +165,28 @@ class PoolSpec:
         if self.prefill_energy_scale < 0:
             raise bad(f"prefill_energy_scale must be >= 0 "
                       f"(got {self.prefill_energy_scale})")
+        if self.decode_shards < 1:
+            raise bad(f"decode_shards must be >= 1 "
+                      f"(got {self.decode_shards})")
+        if self.decode_shards > 1 and self.prefill_backend != "engine":
+            raise bad(
+                f"decode_shards={self.decode_shards} requires "
+                f"prefill_backend='engine' — sharded decode is the "
+                f"fan-out side of the co-processing split")
+        if self.pipeline_stages is not None:
+            if self.pipeline_stages < 2:
+                raise bad(f"pipeline_stages must be >= 2 when set "
+                          f"(got {self.pipeline_stages})")
+            if self.backend != "engine":
+                raise bad("pipeline_stages requires backend='engine'")
+            if self.prefill_backend is not None or self.decode_shards > 1:
+                raise bad(
+                    "pipeline_stages is mutually exclusive with "
+                    "prefill_backend/decode_shards — a staged pool is "
+                    "one consumer spanning a device group")
+            if self.max_prompt_len is not None:
+                raise bad("pipeline_stages does not support "
+                          "max_prompt_len (chunked prefill) yet")
         if self.scrub_blocks < 0:
             raise bad(f"scrub_blocks must be >= 0 (got "
                       f"{self.scrub_blocks}); 0 disables background scrub")
@@ -495,7 +527,8 @@ def build_pool(ps: PoolSpec, layers, model=None, warm: bool = True):
     pool = AcceleratorPool(ps.name, ps.profiles, ex,
                            capacity=ps.capacity,
                            max_window=ps.max_window,
-                           max_wait_s=ps.max_wait_s)
+                           max_wait_s=ps.max_wait_s,
+                           shards=ps.decode_shards)
     if engine_ex is not None:
         engine_ex.counters = pool.counters
     return pool, engine, engine_ex
@@ -532,11 +565,24 @@ def make_server(cfg, params, spec: PoolSpec, warm: bool = True):
             max_slots=1, prompt_len=spec.prompt_len, max_len=spec.max_len,
             block_size=spec.block_size, prefill_chunk=spec.prefill_chunk,
             **hkw)
-        decode = ContinuousBatchingEngine(
+        # decode_shards > 1: N mirrored decode engines behind the one
+        # prefill stage; CoProcServer routes each wire handoff to the
+        # least-loaded shard
+        decodes = [ContinuousBatchingEngine(
             params, cfg, plan=plan, max_slots=spec.max_slots,
             prompt_len=spec.prompt_len, max_len=spec.max_len,
             block_size=spec.block_size, num_blocks=spec.num_blocks, **hkw)
-        srv = CoProcServer(prefill, decode)
+            for _ in range(spec.decode_shards)]
+        srv = CoProcServer(prefill, decodes)
+    elif spec.backend == "engine" and spec.pipeline_stages is not None:
+        # stage-axis pool: decode spans a device group via the GPipe
+        # schedule in core.pipeline (no windowed fallback — a staged
+        # pool that cannot build should fail loudly, not degrade)
+        from repro.serving.stage_executor import StageAxisEngine
+        srv = StageAxisEngine(
+            params, cfg, num_stages=spec.pipeline_stages,
+            max_slots=spec.max_slots, prompt_len=spec.prompt_len,
+            max_len=spec.max_len, block_size=spec.block_size)
     elif spec.backend == "engine":
         srv = engine_or_windowed(
             params, cfg, plan=plan, max_slots=spec.max_slots,

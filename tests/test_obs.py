@@ -440,7 +440,8 @@ FLEET_KEYS = {
     "admitted", "rejected", "completed", "violations", "dropped",
     "drops_by_reason", "failovers", "reschedules", "retries",
     "watchdog_trips", "bitflips_detected", "blocks_quarantined",
-    "handoffs_replayed", "energy_deferred", "energy_rejected",
+    "handoffs_replayed", "prefix_hits", "prefix_hit_rate",
+    "energy_deferred", "energy_rejected",
     "pools_added", "pools_retired", "energy_j", "queue_depth", "pools",
     "latency_by_class", "violations_by_class", "slis", "alerts",
 }
@@ -451,7 +452,8 @@ POOL_KEYS = {
     "decode_tokens_per_s", "prefill_tokens", "deferrals",
     "queue_depth_now", "load_now", "bitflips_detected",
     "blocks_quarantined", "watchdog_trips", "handoffs_replayed",
-    "queue_depth", "batch_size", "slot_occupancy",
+    "prefix_hits", "prefix_lookups", "prefix_hit_rate",
+    "imports_by_shard", "queue_depth", "batch_size", "slot_occupancy",
 }
 HIST_KEYS = {"count", "mean", "p50", "p99", "dropped"}
 # golden-signal SLI schema (repro.obs.slo — same lockstep contract)

@@ -448,6 +448,36 @@ def test_engine_energy_scales_with_decoded_tokens(model):
     assert counters.energy_j == pytest.approx(plan_e * decoded, rel=1e-6)
 
 
+def test_prepay_charges_expected_energy_then_reconciles(model):
+    """Admission-time prepay: the bucket dips by the expected plan
+    energy the moment a request dispatches, and nets back to the real
+    metered spend once it settles."""
+    client = lm_spec().build(model=model)
+    ospec = OrbitSpec(phases=[PhaseSpec("eclipse", 1000.0, 0.0)],
+                      bucket_j=1000.0, conserve_frac=0.01,
+                      critical_frac=0.001)
+    ctrl = ospec.attach(client)
+    level0 = ctrl.bucket.level_j
+    floor = min(p.energy_j for p in client.router.frontier)
+    client.submit(prompts(1, seed=9)[0], slo="offline", max_new=MAX_NEW)
+    # charged at submit, before any token decoded
+    assert ctrl.report()["prepaid_j"] == pytest.approx(
+        floor * MAX_NEW, abs=5e-7)      # report() rounds to 6 places
+    assert ctrl.bucket.level_j == pytest.approx(
+        level0 - floor * MAX_NEW, rel=1e-6)
+    client.drain()
+    client.step()                          # reconcile sweep
+    assert not ctrl._prepaid
+    assert ctrl.report()["prepaid_j"] == 0.0
+    real = sum(c.energy_j
+               for c in client.router.telemetry.pools.values())
+    assert real > 0
+    # prepay + refund nets out: the bucket's books show the metered
+    # spend only (zero-harvest profile, so level moves by exactly it)
+    assert ctrl.bucket.spent_j == pytest.approx(real, rel=1e-6)
+    assert ctrl.bucket.level_j == pytest.approx(level0 - real, rel=1e-6)
+
+
 def test_failover_reserve_is_not_recharged(model):
     """A re-dispatched batch whose output the engine already holds
     decodes nothing — and must charge (almost) nothing."""
